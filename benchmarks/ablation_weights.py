@@ -1,0 +1,42 @@
+"""Ablation: the SLO-ODBS weight surface (w1, w2) — the paper's §4.2 claim
+that different scheduling objectives fall out of the same algorithm.  Sweeps
+the composite weights and reports the latency/violation trade-off curve."""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import bench_cluster, csv_row, emit, trained_predictor
+from repro.configs import get_config
+from repro.core import Monitor, ResourceProfiler, helr, slo_odbs
+from repro.core.scheduler import SchedulerConfig
+from repro.data.workload import WorkloadConfig, gen_requests
+from repro.serving import simulate
+
+SWEEP = [(1.0, 0.0), (1.0, 0.5), (1.0, 1.0), (0.5, 1.0), (0.0, 1.0)]
+
+
+def run(n_requests: int = 160, rate: float = 48.0) -> dict:
+    cfg = get_config("chatglm2-6b")
+    nodes, lat = bench_cluster()
+    wl = gen_requests(WorkloadConfig(n_requests=n_requests, arrival_rate=rate,
+                                     slo_lo=25.0, seed=17))
+    pred = trained_predictor()
+    rows = []
+    for w1, w2 in SWEEP:
+        prof = ResourceProfiler(copy.deepcopy(pred), cfg)
+        rs = [copy.deepcopy(r) for r in wl]
+        scfg = SchedulerConfig(w1=w1, w2=w2)
+        res = simulate(rs, cfg, slo_odbs, scfg, profiler=prof,
+                       monitor=Monitor(prof), deploy=helr,
+                       nodes=nodes, latency=lat)
+        rows.append({"w1": w1, "w2": w2,
+                     "avg_latency_s": round(res.avg_latency, 2),
+                     "slo_violation": round(res.slo_violation_rate, 4),
+                     "throughput": round(res.throughput, 1)})
+    out = {"rows": rows, "paper_ref": "§4.2 (weight-tunable objectives)"}
+    emit("ablation_weights", out)
+    best_lat = min(r["avg_latency_s"] for r in rows)
+    best_slo = min(r["slo_violation"] for r in rows)
+    csv_row("ablation_weights", 0.0,
+            f"best_lat={best_lat};best_viol={best_slo}")
+    return out

@@ -1,0 +1,39 @@
+"""Paper Fig. 1: latency / memory / utilization across (GPU count x batch
+size) deployment configurations — the motivation observation that config
+choice swings performance by orders of magnitude."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_cluster, csv_row, emit, timeit
+from repro.configs import get_config
+from repro.core.types import DeviceMap
+from repro.serving.simulator import LatencyModel
+
+
+def run() -> dict:
+    cfg = get_config("chatglm2-6b")
+    nodes, lat = bench_cluster(memory=24e9)
+    rows = []
+    for n_gpu in (1, 2, 4):
+        path = list(range(n_gpu))
+        per = cfg.n_layers // n_gpu
+        layers = {d: per + (1 if d < cfg.n_layers % n_gpu else 0) for d in path}
+        dmap = DeviceMap(path=path, layers=layers)
+        lm = LatencyModel(cfg, nodes, lat, dmap)
+        for batch in (1, 8, 32):
+            kv = 512
+            t_tok = lm.token_time(batch, kv)
+            mem = cfg.param_count() * 2 + cfg.kv_cache_bytes(batch, kv)
+            util = (batch * 2 * cfg.param_count()) / \
+                (t_tok * lm.peak_flops)
+            rows.append({"gpus": n_gpu, "batch": batch,
+                         "latency_per_tok_ms": round(t_tok * 1e3, 3),
+                         "memory_gb": round(mem / 1e9, 2),
+                         "util": round(util, 4)})
+    lats = [r["latency_per_tok_ms"] / r["batch"] for r in rows]
+    out = {"rows": rows, "paper_ref": "Fig. 1",
+           "latency_spread": round(max(lats) / min(lats), 1)}
+    emit("fig1_config_sweep", out)
+    csv_row("fig1_config_sweep", 0.0, f"latency_spread={out['latency_spread']}x")
+    return out

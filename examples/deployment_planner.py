@@ -1,0 +1,34 @@
+"""Deployment planning across a heterogeneous cluster AND the TPU production
+mesh: HELR vs HE vs LR vs BGS on the paper's 4-GPU topology, then HELR-mesh
+plan selection for every assigned architecture × shape.
+
+Run: PYTHONPATH=src python examples/deployment_planner.py
+"""
+from repro.configs import SHAPES, cell_is_runnable, get_config, list_archs
+from repro.core import bgs, he, helr, helr_mesh, lr
+from repro.core.types import DeviceNode
+
+# --- paper-style GPU cluster -------------------------------------------------
+print("=== HELR family on the heterogeneous 4-GPU cluster (ChatGLM2-6B) ===")
+model = get_config("chatglm2-6b")
+perf = [35e12, 25e12, 30e12, 15e12]
+nodes = [DeviceNode(i, memory=10e9, performance=perf[i], name=f"GPU#{i}")
+         for i in range(4)]
+pix, nd = 5e-5, 2e-4
+lat = [[0, pix, nd, nd], [pix, 0, nd, nd], [nd, nd, 0, pix], [nd, nd, pix, 0]]
+for name, fn in (("HELR", helr), ("HE", he), ("LR", lr), ("BGS", bgs)):
+    dm = fn(model.param_count() * 2.0, model.n_layers, nodes, lat)
+    print(f"  {name:5s} path={dm.path} layers={dm.layers}")
+
+# --- TPU mesh plans ----------------------------------------------------------
+print("\n=== HELR-mesh plans on the 16x16 v5e pod ===")
+print(f"{'arch':28s}{'shape':13s}{'plan':22s}{'HBM/chip':>10s}{'est step':>11s}")
+for arch in list_archs():
+    cfg = get_config(arch)
+    for shape in SHAPES.values():
+        ok, why = cell_is_runnable(cfg, shape)
+        if not ok:
+            continue
+        mp = helr_mesh(cfg, shape)
+        print(f"{arch:28s}{shape.name:13s}{mp.name:22s}"
+              f"{mp.hbm_used/2**30:9.1f}G{mp.step_time*1e3:10.2f}ms")

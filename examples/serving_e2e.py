@@ -1,0 +1,64 @@
+"""End-to-end serving driver (the paper's kind of system): a reduced
+llama-family model serves a batched request stream twice — paper-faithful
+padded batching composed by SLO-ODBS, then beyond-paper continuous batching —
+and reports latency / throughput / token-identity between the two.
+
+Run: PYTHONPATH=src python examples/serving_e2e.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import (LengthPredictor, ResourceProfiler, SchedulerConfig,
+                        slo_odbs)
+from repro.core.profiler import PredictorConfig
+from repro.data.workload import WorkloadConfig, gen_requests, train_pairs
+from repro.models import api
+from repro.serving import EngineConfig, InferenceEngine
+
+cfg = get_config("smollm-135m").reduced()
+params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+engine = InferenceEngine(cfg, params,
+                         EngineConfig(max_batch=4, cache_len=64,
+                                      max_new_tokens=16))
+
+reqs = gen_requests(WorkloadConfig(n_requests=12, seed=3, vocab=cfg.vocab_size))
+for r in reqs:
+    r.tokens = [t % cfg.vocab_size for t in r.tokens[:16]]
+    r.input_len = len(r.tokens)
+    r.true_output_len = r.true_output_len % 12 + 2
+
+pred = LengthPredictor(PredictorConfig(vocab=cfg.vocab_size), seed=0)
+toks, lens = train_pairs(WorkloadConfig(vocab=cfg.vocab_size), 256, seed=1)
+pred.fit(toks, lens, epochs=8)
+prof = ResourceProfiler(pred, cfg)
+prof.profile(reqs)
+
+# --- paper mode: SLO-ODBS padded batches ------------------------------------
+t0 = time.perf_counter()
+padded_out = {}
+total_steps = 0
+for b in slo_odbs(reqs, SchedulerConfig(max_batch=4)):
+    res = engine.run_batch(b, true_lens={r.rid: r.true_output_len
+                                         for r in b.requests})
+    padded_out.update(res.outputs)
+    total_steps += res.steps
+t_padded = time.perf_counter() - t0
+tok_padded = sum(len(v) for v in padded_out.values())
+print(f"[padded/SLO-ODBS]  {tok_padded} tokens in {t_padded:.2f}s "
+      f"({total_steps} decode iterations)")
+
+# --- beyond-paper: continuous batching ---------------------------------------
+t0 = time.perf_counter()
+res_c = engine.run_continuous(sorted(reqs, key=lambda r: r.arrival))
+t_cont = time.perf_counter() - t0
+tok_cont = sum(len(v) for v in res_c.outputs.values())
+print(f"[continuous]       {tok_cont} tokens in {t_cont:.2f}s "
+      f"({res_c.steps} decode iterations)")
+
+same = all(padded_out[r.rid] == res_c.outputs[r.rid] for r in reqs)
+print(f"token-identical outputs across modes: {same}")
+print(f"decode-iteration reduction from continuous batching: "
+      f"{total_steps} -> {res_c.steps}")

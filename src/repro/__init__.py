@@ -1,0 +1,10 @@
+"""UELLM on JAX/TPU — unified LLM inference serving (CS.DC 2024 reproduction).
+
+Public surface:
+  repro.core      — profiler / SLO-ODBS scheduler / HELR deployer / monitor
+  repro.configs   — architectures (--arch ids) and input shapes
+  repro.models    — init_params / loss_fn / prefill / decode_step / input_specs
+  repro.serving   — engines, paged KV, cluster simulator
+  repro.launch    — make_production_mesh, dryrun, train, serve, hillclimb
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,54 @@
+"""Architecture registry.  ``get_config(name)`` / ``list_archs()`` are the
+public entry points; ``--arch <id>`` flags resolve through here.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    HWSpec, LayerSpec, MLAConfig, MambaConfig, ModelConfig, MoEConfig,
+    RWKVConfig, SHAPES, ShapeConfig, TPU_V5E, cell_is_runnable, pad_to,
+)
+
+# arch id -> module name
+_ARCH_MODULES: dict[str, str] = {
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "whisper-medium": "whisper_medium",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "smollm-135m": "smollm_135m",
+    "gemma2-27b": "gemma2_27b",
+    "minicpm3-4b": "minicpm3_4b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "rwkv6-3b": "rwkv6_3b",
+    # the paper's own evaluation model (not an assigned cell)
+    "chatglm2-6b": "chatglm2_6b",
+}
+
+ASSIGNED_ARCHS: tuple[str, ...] = tuple(a for a in _ARCH_MODULES if a != "chatglm2-6b")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def list_archs(include_extra: bool = False) -> list[str]:
+    return list(_ARCH_MODULES) if include_extra else list(ASSIGNED_ARCHS)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells(include_skipped: bool = False):
+    """Yield (model_config, shape_config, runnable, why) for the 40 cells."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = cell_is_runnable(cfg, shape)
+            if ok or include_skipped:
+                yield cfg, shape, ok, why

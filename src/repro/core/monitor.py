@@ -1,0 +1,66 @@
+"""Backend monitor (paper §1/§4): watches finished requests, detects
+erroneous length predictions, feeds online-learning updates back to the
+predictor, and adapts the profiler's memory-reservation factor so KV
+allocations track reality (EWMA of true/predicted)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.profiler import ResourceProfiler
+from repro.core.types import Request
+
+
+@dataclass
+class MonitorStats:
+    observed: int = 0
+    bucket_hits: int = 0
+    overpredict_tokens: int = 0
+    underpredict_tokens: int = 0
+    online_updates: int = 0
+
+    @property
+    def bucket_accuracy(self) -> float:
+        return self.bucket_hits / self.observed if self.observed else 0.0
+
+
+class Monitor:
+    def __init__(self, profiler: ResourceProfiler, *, ewma: float = 0.1,
+                 update_on_miss: bool = True):
+        self.profiler = profiler
+        self.ewma = ewma
+        self.update_on_miss = update_on_miss
+        self.stats = MonitorStats()
+
+    def observe(self, req: Request) -> None:
+        """Called by the engine/simulator when a request finishes."""
+        pred = req.predicted_output_len or 0
+        true = req.true_output_len
+        st = self.stats
+        st.observed += 1
+        true_bucket = int(self.profiler.predictor.length_to_bucket([true])[0])
+        if req.predicted_bucket == true_bucket:
+            st.bucket_hits += 1
+        elif self.update_on_miss:
+            self.profiler.predictor.online_update(req.tokens, true)
+            st.online_updates += 1
+        if pred >= true:
+            st.overpredict_tokens += pred - true
+        else:
+            st.underpredict_tokens += true - pred
+        # adapt memory reservation: under-prediction inflates future estimates
+        if pred > 0:
+            ratio = true / pred
+            self.profiler.memory_adjust = (
+                (1 - self.ewma) * self.profiler.memory_adjust
+                + self.ewma * max(ratio, 1.0))
+
+    def metrics(self) -> dict:
+        st = self.stats
+        return {
+            "observed": st.observed,
+            "bucket_accuracy": st.bucket_accuracy,
+            "online_updates": st.online_updates,
+            "over_tokens": st.overpredict_tokens,
+            "under_tokens": st.underpredict_tokens,
+            "memory_adjust": self.profiler.memory_adjust,
+        }

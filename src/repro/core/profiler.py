@@ -1,0 +1,178 @@
+"""Resource profiler (paper §4.1): data collection, output-length prediction,
+and resource profiling.
+
+The paper fine-tunes ChatGLM3-6B into a bucket classifier over answer
+lengths (99.51% in-distribution precision, >80% cross-dataset).  Faithful
+mechanism at CPU scale: a small JAX transformer-ish classifier (embedding +
+attention-free mixing + MLP head) over S³-style log-spaced length buckets,
+trained with Adam and updated *online* from the backend monitor's observed
+lengths — the paper's online-learning distinction vs S³.
+
+``ResourceProfiler.profile`` attaches the predicted bucket/length and the
+KV-cache byte estimate (the paper §1 cost model via ModelConfig) to each
+request before scheduling.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.types import Request
+
+
+def make_buckets(n_buckets: int, max_len: int) -> np.ndarray:
+    """Upper edges, log-spaced: [.., max_len]."""
+    return np.unique(np.round(np.logspace(
+        np.log10(8), np.log10(max_len), n_buckets)).astype(int))
+
+
+@dataclass
+class PredictorConfig:
+    vocab: int = 1024
+    d: int = 64
+    n_buckets: int = 10
+    max_len: int = 1024
+    lr: float = 3e-3
+    online_lr: float = 1e-3
+
+
+class LengthPredictor:
+    """Tiny JAX classifier: token embedding -> mean+max pool -> 2-layer MLP
+    -> bucket logits.  Conservative estimate = bucket upper edge (S³)."""
+
+    def __init__(self, cfg: PredictorConfig = PredictorConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.buckets = make_buckets(cfg.n_buckets, cfg.max_len)
+        nb = len(self.buckets)
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        d = cfg.d
+        self.params = {
+            "embed": jax.random.normal(k1, (cfg.vocab, d)) * 0.1,
+            "w1": jax.random.normal(k2, (2 * d, 2 * d)) * (2 * d) ** -0.5,
+            "b1": jnp.zeros((2 * d,)),
+            "w2": jax.random.normal(k3, (2 * d, nb)) * (2 * d) ** -0.5,
+            "b2": jnp.zeros((nb,)),
+        }
+        self.opt_state = jax.tree.map(jnp.zeros_like, self.params)  # adam m
+        self.opt_state2 = jax.tree.map(jnp.zeros_like, self.params)  # adam v
+        self._step = 0
+
+    # ------------------------------------------------------------- model fns
+    @staticmethod
+    @functools.partial(jax.jit, static_argnames=())
+    def _logits(params, toks, mask):
+        emb = params["embed"][toks] * mask[..., None]     # [B, S, d]
+        denom = jnp.maximum(mask.sum(-1, keepdims=True), 1.0)
+        mean = emb.sum(1) / denom
+        mx = jnp.max(emb + (mask[..., None] - 1.0) * 1e9, axis=1)
+        h = jnp.concatenate([mean, mx], -1)
+        h = jax.nn.relu(h @ params["w1"] + params["b1"])
+        return h @ params["w2"] + params["b2"]
+
+    def length_to_bucket(self, lens) -> np.ndarray:
+        return np.searchsorted(self.buckets, np.asarray(lens), side="left").clip(
+            0, len(self.buckets) - 1)
+
+    @staticmethod
+    @jax.jit
+    def _loss(params, toks, mask, labels):
+        logits = LengthPredictor._logits(params, toks, mask)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, labels[:, None], 1).mean()
+
+    def _adam_step(self, grads, lr):
+        self._step += 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = self._step
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+        new = jax.tree.map(upd, self.params, grads, self.opt_state, self.opt_state2)
+        self.params = jax.tree.map(lambda x: x[0], new, is_leaf=lambda x: isinstance(x, tuple))
+        self.opt_state = jax.tree.map(lambda x: x[1], new, is_leaf=lambda x: isinstance(x, tuple))
+        self.opt_state2 = jax.tree.map(lambda x: x[2], new, is_leaf=lambda x: isinstance(x, tuple))
+
+    # --------------------------------------------------------------- training
+    def fit(self, toks: np.ndarray, lens: np.ndarray, *, epochs: int = 30,
+            batch: int = 64, seed: int = 0) -> float:
+        """Offline fine-tuning phase.  Returns final train accuracy."""
+        labels = self.length_to_bucket(lens)
+        toks = jnp.asarray(toks % self.cfg.vocab)
+        mask = (toks > 0).astype(jnp.float32)
+        labels = jnp.asarray(labels)
+        n = toks.shape[0]
+        rng = np.random.default_rng(seed)
+        grad_fn = jax.jit(jax.grad(self._loss))
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n, batch):
+                idx = order[i:i + batch]
+                g = grad_fn(self.params, toks[idx], mask[idx], labels[idx])
+                self._adam_step(g, self.cfg.lr)
+        return self.accuracy(toks, lens)
+
+    def accuracy(self, toks, lens) -> float:
+        toks = jnp.asarray(np.asarray(toks) % self.cfg.vocab)
+        mask = (toks > 0).astype(jnp.float32)
+        pred = np.argmax(np.asarray(self._logits(self.params, toks, mask)), -1)
+        return float((pred == self.length_to_bucket(lens)).mean())
+
+    # ----------------------------------------------------------------- online
+    def online_update(self, tokens: list[int], true_len: int):
+        """One SGD step on a mispredicted request (backend monitor feedback)."""
+        toks = jnp.asarray(np.asarray(tokens, np.int32)[None, :] % self.cfg.vocab)
+        mask = (toks > 0).astype(jnp.float32)
+        label = jnp.asarray(self.length_to_bucket([true_len]))
+        g = jax.grad(self._loss)(self.params, toks, mask, label)
+        self.params = jax.tree.map(
+            lambda p, gi: p - self.cfg.online_lr * gi, self.params, g)
+
+    # ---------------------------------------------------------------- predict
+    def predict(self, tokens: list[int]) -> tuple[int, int]:
+        toks = jnp.asarray(np.asarray(tokens, np.int32)[None, :] % self.cfg.vocab)
+        mask = (toks > 0).astype(jnp.float32)
+        b = int(np.argmax(np.asarray(self._logits(self.params, toks, mask))))
+        return b, int(self.buckets[b])
+
+    def predict_batch(self, requests: list[Request]) -> None:
+        if not requests:
+            return
+        max_len = max(r.input_len for r in requests)
+        toks = np.zeros((len(requests), max_len), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, :r.input_len] = r.tokens
+        toksj = jnp.asarray(toks % self.cfg.vocab)
+        mask = (toksj > 0).astype(jnp.float32)
+        pred = np.argmax(np.asarray(self._logits(self.params, toksj, mask)), -1)
+        for r, b in zip(requests, pred):
+            r.predicted_bucket = int(b)
+            r.predicted_output_len = int(self.buckets[int(b)])
+
+
+class ResourceProfiler:
+    """Profiler front door: prediction + SLO intake + resource estimation."""
+
+    def __init__(self, predictor: LengthPredictor, model_cfg: ModelConfig,
+                 memory_adjust: float = 1.0):
+        self.predictor = predictor
+        self.model_cfg = model_cfg
+        self.memory_adjust = memory_adjust      # tuned online by the monitor
+
+    def profile(self, requests: list[Request]) -> list[Request]:
+        self.predictor.predict_batch(requests)
+        for r in requests:
+            total = r.input_len + r.predicted_output_len
+            r.kv_bytes_estimate = self.model_cfg.kv_cache_bytes(1, total) \
+                * self.memory_adjust
+        return requests

@@ -1,0 +1,2 @@
+from repro.distributed.fault_tolerance import (  # noqa: F401
+    ElasticTopology, HeartbeatTracker, StragglerMitigator)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers, each shipped as
+``kernels/<name>/{<name>.py, ops.py, ref.py}``:
+
+* ``flash_attention`` — blocked causal/windowed/softcapped attention (prefill).
+* ``decode_attention`` — flash-decoding style single-token attention over a
+  (possibly sequence-sharded) KV cache.
+* ``wkv6`` — RWKV-6 chunked recurrence with data-dependent decay.
+
+``ops.py`` is the jit'd dispatching wrapper (backend = 'xla' | 'pallas' |
+'pallas_interpret' | 'naive'); ``ref.py`` is the pure-jnp oracle used by the
+allclose test sweeps.  The TPU kernels are validated on CPU via
+``interpret=True``.
+"""
+from repro.kernels.backend import get_backend, set_backend, use_backend  # noqa: F401

@@ -1,0 +1,36 @@
+"""Global kernel-backend selection.
+
+'xla'              — blocked pure-JAX implementations (CPU + dry-run default;
+                     also a solid TPU fallback).
+'pallas'           — pl.pallas_call compiled for TPU (the deployment target).
+'pallas_interpret' — kernel body interpreted on CPU (correctness validation).
+'naive'            — the ref.py oracle (tests, tiny shapes only).
+"""
+from __future__ import annotations
+
+import contextlib
+
+_BACKEND = "xla"
+VALID = ("xla", "pallas", "pallas_interpret", "naive")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in VALID:
+        raise ValueError(f"backend {name!r} not in {VALID}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def use_backend(name: str):
+    global _BACKEND
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        _BACKEND = prev

@@ -1,0 +1,2 @@
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    combine_partials, decode_attention, decode_attention_partial)

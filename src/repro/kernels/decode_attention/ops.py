@@ -1,0 +1,29 @@
+"""Dispatching wrapper for decode attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.backend import get_backend
+from repro.kernels.decode_attention.ref import decode_attention_reference
+from repro.kernels.decode_attention.xla import (
+    combine_partials, decode_attention_partial, decode_attention_xla)
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+
+__all__ = ["decode_attention", "decode_attention_partial", "combine_partials"]
+
+
+def decode_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, kv_len: jnp.ndarray,
+    *, softcap: Optional[float] = None, window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    backend = get_backend()
+    kw = dict(softcap=softcap, window=window, scale=scale)
+    if backend == "naive":
+        return decode_attention_reference(q, k, v, kv_len, **kw)
+    if backend == "xla":
+        return decode_attention_xla(q, k, v, kv_len, **kw)
+    return decode_attention_pallas(
+        q, k, v, kv_len, interpret=(backend == "pallas_interpret"), **kw)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for single-token decode attention against a KV cache with
+per-sequence valid lengths.  Tests only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,            # [B, H, D]  (one new token)
+    k: jnp.ndarray,            # [B, S, KV, D]  cache (possibly overallocated)
+    v: jnp.ndarray,            # [B, S, KV, Dv]
+    kv_len: jnp.ndarray,       # [B] int32 — number of valid cache entries
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    _, s, kv, dv = v.shape
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32) * scale, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(s)[None, :]
+    mask = pos < kv_len[:, None]
+    if window is not None:
+        mask &= pos > kv_len[:, None] - 1 - window   # query sits at kv_len
+    logits = jnp.where(mask[:, None, :], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vf)
+    return out.astype(q.dtype)

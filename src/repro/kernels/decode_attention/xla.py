@@ -1,0 +1,85 @@
+"""Decode attention in plain XLA, plus the partial-softmax primitives used by
+the sequence-sharded (flash-decoding) path: each shard of the KV cache
+produces (acc, m, l); ``combine_partials`` merges them — locally, or across a
+mesh axis inside shard_map.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def decode_attention_partial(
+    q: jnp.ndarray,            # [B, H, D]
+    k: jnp.ndarray,            # [B, S_loc, KV, D]
+    v: jnp.ndarray,            # [B, S_loc, KV, Dv]
+    kv_len: jnp.ndarray,       # [B] valid length *within this shard*
+    *,
+    softcap: Optional[float] = None,
+    window: Optional[int] = None,
+    window_lo: Optional[jnp.ndarray] = None,   # [B] absolute low cutoff, pre-offset
+    pos_offset: int | jnp.ndarray = 0,         # absolute position of shard row 0
+    scale: Optional[float] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (acc [B,H,Dv] unnormalized, m [B,H], l [B,H])."""
+    b, h, d = q.shape
+    _, s, kv, dv = v.shape
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    # keep K/V in their storage dtype (bf16) and accumulate in f32 — the MXU
+    # contract; an explicit astype(f32) would double the cache HBM traffic
+    qg = (q.astype(jnp.float32) * scale).astype(k.dtype).reshape(b, kv, group, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                        preferred_element_type=jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    pos = jnp.arange(s)[None, :]
+    mask = pos < kv_len[:, None]
+    if window_lo is not None:
+        mask &= (pos + pos_offset) >= window_lo[:, None]
+    elif window is not None:
+        mask &= pos > kv_len[:, None] - 1 - window
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return (acc.reshape(b, h, dv), m.reshape(b, h), l.reshape(b, h))
+
+
+def combine_partials(acc, m, l, *, axis_name: Optional[str] = None,
+                     stack_axis: Optional[int] = None):
+    """Merge flash-decoding partials.  Either across a named mesh axis
+    (inside shard_map) or across a stacked leading axis."""
+    if axis_name is not None:
+        m_max = lax.pmax(m, axis_name)
+        w = jnp.exp(m - m_max)
+        num = lax.psum(acc * w[..., None], axis_name)
+        den = lax.psum(l * w, axis_name)
+    else:
+        assert stack_axis is not None
+        m_max = m.max(axis=stack_axis, keepdims=True)
+        w = jnp.exp(m - m_max)
+        num = (acc * w[..., None]).sum(axis=stack_axis)
+        den = (l * w).sum(axis=stack_axis)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "window", "scale"))
+def decode_attention_xla(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, kv_len: jnp.ndarray,
+    *, softcap: Optional[float] = None, window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    acc, m, l = decode_attention_partial(
+        q, k, v, kv_len, softcap=softcap, window=window, scale=scale)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for multi-head attention with GQA, causal/sliding-window
+masking, and Gemma-style logit softcapping.  O(Sq*Skv) memory — tests only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_mask(sq: int, skv: int, *, causal: bool, window: Optional[int],
+                   q_offset: int) -> jnp.ndarray:
+    """[sq, skv] boolean mask, True = attend.  Query i sits at absolute
+    position q_offset + i; keys at 0..skv-1."""
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def flash_attention_reference(
+    q: jnp.ndarray,            # [B, Sq, H, D]
+    k: jnp.ndarray,            # [B, Skv, KV, D]
+    v: jnp.ndarray,            # [B, Skv, KV, Dv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, skv, kv, dv = v.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to query heads
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = attention_mask(sq, skv, causal=causal, window=window, q_offset=q_offset)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

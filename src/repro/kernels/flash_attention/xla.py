@@ -1,0 +1,110 @@
+"""Blocked flash attention in pure XLA (lax.scan over KV blocks, lax.map over
+Q blocks).  O(Sq/qb * qb * kvb) live memory instead of O(Sq*Skv).  This is the
+CPU / dry-run production path and the fallback on TPU; the Pallas kernel in
+``flash_attention.py`` is the TPU-optimized variant of the same schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, *, causal, window):
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    return mask
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale",
+                     "q_block", "kv_block"),
+)
+# NOTE: q_offset is deliberately NOT static — the sequence-parallel shard_map
+# path passes a traced per-shard offset (axis_index * s_loc).
+def flash_attention_xla(
+    q: jnp.ndarray,            # [B, Sq, H, D]
+    k: jnp.ndarray,            # [B, Skv, KV, D]
+    v: jnp.ndarray,            # [B, Skv, KV, Dv]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jnp.ndarray:
+    b, sq, h, d = q.shape
+    _, skv, kv, dv = v.shape
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    # pad seq dims to block multiples
+    sq_p = -(-sq // q_block) * q_block
+    skv_p = -(-skv // kv_block) * kv_block
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    nq, nk = sq_p // q_block, skv_p // kv_block
+
+    # [B, nq, qb, H, D] -> put head into batch for clean blocking: group query
+    # heads with their kv head: [B, KV, G, ...]
+    qg = q.reshape(b, nq, q_block, kv, group, d)
+    kg = k.reshape(b, nk, kv_block, kv, d)
+    vg = v.reshape(b, nk, kv_block, kv, dv)
+
+    k_pos_all = jnp.arange(skv_p).reshape(nk, kv_block)
+
+    def one_q_block(args):
+        qb, q_pos = args            # qb: [B, qblk, KV, G, D]; q_pos: [qblk]
+        # K/V stay in storage dtype; dots accumulate in f32 (MXU contract)
+        qf = (qb.astype(jnp.float32) * scale).astype(k.dtype)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, k_pos = inp     # [B, kvb, KV, D], [B, kvb, KV, Dv], [kvb]
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qf, kb,
+                           preferred_element_type=jnp.float32)  # [B,KV,G,qb,kvb]
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = _block_mask(q_pos + q_offset, k_pos, causal=causal, window=window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vb.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        # derive the scan-carry init from a traced scalar so it inherits the
+        # inputs' varying axes under shard_map (vma type-checking)
+        vac = (qf.reshape(-1)[0] * 0).astype(jnp.float32)
+        m0 = jnp.full((b, kv, group, q_block), NEG_INF, jnp.float32) + vac
+        l0 = jnp.zeros((b, kv, group, q_block), jnp.float32) + vac
+        a0 = jnp.zeros((b, kv, group, q_block, dv), jnp.float32) + vac
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (kg.transpose(1, 0, 2, 3, 4), vg.transpose(1, 0, 2, 3, 4), k_pos_all))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)               # [B, qb, KV, G, Dv]
+
+    q_pos_all = jnp.arange(sq_p).reshape(nq, q_block)
+    outs = lax.map(one_q_block, (qg.transpose(1, 0, 2, 3, 4, 5), q_pos_all))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, h, dv)
+    return out[:, :sq].astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.wkv6.ops import wkv6, wkv6_step  # noqa: F401

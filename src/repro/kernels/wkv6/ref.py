@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (sequential scan over time).
+
+Per head, with key-dim i and value-dim j:
+
+    out_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+
+w_t in (0,1) is the data-dependent decay ("Finch").  Tests only.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def wkv6_reference(
+    r: jnp.ndarray,   # [B, T, H, D]
+    k: jnp.ndarray,   # [B, T, H, D]
+    v: jnp.ndarray,   # [B, T, H, Dv]
+    w: jnp.ndarray,   # [B, T, H, D] decay in (0, 1)
+    u: jnp.ndarray,   # [H, D] bonus
+    s0: jnp.ndarray | None = None,   # [B, H, D, Dv] initial state
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, t, h, d = r.shape
+    dv = v.shape[-1]
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    s = jnp.zeros((b, h, d, dv), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp     # [B, H, D] / [B, H, Dv]
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,D,Dv]
+        out = jnp.einsum("bhd,bhdv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, out
+
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), wf.transpose(1, 0, 2, 3))
+    s_fin, outs = lax.scan(step, s, xs)
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), s_fin

@@ -1,0 +1,107 @@
+"""Chunked WKV6 Pallas TPU kernel.
+
+Grid (batch, head, time_chunks) with the chunk axis innermost; the [D, Dv]
+recurrent state lives in VMEM scratch across the chunk sweep.  Within a chunk
+the intra-chunk attention uses the pairwise decay tensor
+exp(cumlogw[t-1] - cumlogw[s]) whose exponents are all <= 0, so the kernel is
+stable for arbitrarily strong data-dependent decay (the factored r*exp(cw) /
+k*exp(-cw) form would overflow).  VMEM per program ~ C^2*D floats
+(C=32, D=64 -> 256 KiB) plus the state tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, sf_ref, s_ref,
+                 *, chunk: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)       # [C, D]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)       # [C, Dv]
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0, :]                                  # [D]
+
+    cw = jnp.cumsum(lw, axis=0)                      # [C, D] inclusive
+    cwx = cw - lw                                    # exclusive
+    s = s_ref[...]
+
+    # inter-chunk contribution
+    rq = r * jnp.exp(cwx)
+    out = jax.lax.dot_general(rq, s, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # [C, Dv]
+
+    # intra-chunk: A[t, s'] = sum_i r[t,i] k[s',i] exp(cwx[t,i] - cw[s',i])
+    dec = jnp.exp(cwx[:, None, :] - cw[None, :, :])                 # [C, C, D]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (t_idx > s_idx)[:, :, None]
+    a = jnp.sum(r[:, None, :] * k[None, :, :] * jnp.where(mask, dec, 0.0), axis=-1)
+    out += jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    # current-token bonus
+    diag = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)      # [C, 1]
+    out += diag * v
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+    # state update
+    decay_all = jnp.exp(cw[-1, :])                                   # [D]
+    k_dec = k * jnp.exp(cw[-1:, :] - cw)                             # [C, D]
+    s_ref[...] = decay_all[:, None] * s + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        sf_ref[0, 0] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    u: jnp.ndarray, *, chunk: int = 32, interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, t, h, d = r.shape
+    dv = v.shape[-1]
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0))
+    c = min(chunk, t)
+    t_p = -(-t // c) * c
+    if t_p != t:
+        pad = ((0, 0), (0, t_p - t), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(x, pad) for x in (r, k, v))
+        lw = jnp.pad(lw, pad)
+    nc = t_p // c
+
+    kernel = functools.partial(_wkv6_kernel, chunk=c, nc=nc)
+    out, s_fin = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, c, 1, d), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, c, 1, d), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, c, 1, dv), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, c, 1, d), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, d), lambda bi, hi, ci: (hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, dv), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, d, dv), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t_p, h, dv), r.dtype),
+            jax.ShapeDtypeStruct((b, h, d, dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, dv), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u.astype(jnp.float32))
+    return out[:, :t], s_fin

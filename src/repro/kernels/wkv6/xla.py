@@ -1,0 +1,81 @@
+"""Chunked WKV6 in pure XLA: lax.scan over chunks of length C; within a chunk
+the pairwise decay tensor  D[t,s,i] = exp(cumlogw[t-1,i] - cumlogw[s,i])
+(all exponents <= 0, numerically safe for arbitrarily strong decay) gives the
+intra-chunk attention matrix, and the carried state handles inter-chunk flow.
+FLOPs per chunk ~ C^2*D + C*D*Dv — the same schedule the Pallas kernel uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _chunk_body(u, s, blk):
+    """s: [B,H,D,Dv]; blk r/k/w: [B,C,H,D], v: [B,C,H,Dv]."""
+    r, k, v, lw = blk
+    c = r.shape[1]
+    cw = jnp.cumsum(lw, axis=1)                   # inclusive cumulative log decay
+    cwx = cw - lw                                  # exclusive (up to t-1)
+    # inter-chunk: decayed query against carried state
+    rq = r * jnp.exp(cwx)
+    out = jnp.einsum("bchd,bhdv->bchv", rq, s)
+    # intra-chunk: pairwise-safe decay tensor  [B, C, C, H, D]
+    dec = jnp.exp(cwx[:, :, None] - cw[:, None, :])
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :, None, None]
+    dec = jnp.where(mask, dec, 0.0)
+    a = jnp.einsum("bthd,btshd,bshd->bths", r, dec, k)
+    out += jnp.einsum("bths,bshv->bthv", a, v)
+    # current-token bonus
+    diag = jnp.einsum("bthd,hd,bthd->bth", r, u, k)
+    out += diag[..., None] * v
+    # state update
+    decay_all = jnp.exp(cw[:, -1])                 # [B,H,D]
+    k_dec = k * jnp.exp(cw[:, -1:, :, :] - cw)
+    s_new = decay_all[..., None] * s + jnp.einsum("bchd,bchv->bhdv", k_dec, v)
+    return s_new, out
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6_xla(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    u: jnp.ndarray, s0: jnp.ndarray | None = None, *, chunk: int = 32,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    b, t, h, d = r.shape
+    dv = v.shape[-1]
+    rf, kf, vf = (x.astype(jnp.float32) for x in (r, k, v))
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0))
+    uf = u.astype(jnp.float32)
+    s = jnp.zeros((b, h, d, dv), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    c = min(chunk, t)
+    t_p = -(-t // c) * c
+    if t_p != t:
+        pad = ((0, 0), (0, t_p - t), (0, 0), (0, 0))
+        rf = jnp.pad(rf, pad)
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+        lw = jnp.pad(lw, pad)                      # log w = 0 -> no decay
+    nc = t_p // c
+
+    def body(s, blk):
+        return _chunk_body(uf, s, blk)
+
+    resh = lambda x: x.reshape(b, nc, c, h, x.shape[-1]).transpose(1, 0, 2, 3, 4)
+    s_fin, outs = lax.scan(body, s, (resh(rf), resh(kf), resh(vf), resh(lw)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, t_p, h, dv)[:, :t]
+    return out.astype(r.dtype), s_fin
+
+
+def wkv6_step(
+    r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+    u: jnp.ndarray, s: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  r/k/w: [B,H,D], v: [B,H,Dv], s: [B,H,D,Dv]."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    kv = kf[..., :, None] * vf[..., None, :]
+    out = jnp.einsum("bhd,bhdv->bhv", rf, s + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s_new = wf[..., :, None] * s + kv
+    return out.astype(r.dtype), s_new

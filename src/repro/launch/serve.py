@@ -1,0 +1,83 @@
+"""Serving launcher: UELLM pipeline on a real model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --requests 12 --scheduler slo-odbs
+
+On a TPU pod this runs under the production mesh with the HELR-mesh plan;
+on CPU (--reduced) it serves the reduced config end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.core import (LengthPredictor, Monitor, ResourceProfiler,
+                        SchedulerConfig, get_scheduler, helr_mesh)
+from repro.core.profiler import PredictorConfig
+from repro.data.workload import WorkloadConfig, gen_requests, train_pairs
+from repro.models import api
+from repro.serving import EngineConfig, InferenceEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--scheduler", default="slo-odbs",
+                    choices=["slo-odbs", "slo-dbs", "odbs", "fifo", "s3"])
+    ap.add_argument("--continuous", action="store_true",
+                    help="beyond-paper continuous batching mode")
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"serving {cfg.name} "
+          f"(plan for production mesh: "
+          f"{helr_mesh(get_config(args.arch), SHAPES['decode_32k']).name})")
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    engine = InferenceEngine(cfg, params,
+                             EngineConfig(max_batch=4, cache_len=64,
+                                          max_new_tokens=args.max_new))
+
+    reqs = gen_requests(WorkloadConfig(n_requests=args.requests, seed=0,
+                                       vocab=cfg.vocab_size))
+    for r in reqs:
+        r.tokens = [t % cfg.vocab_size for t in r.tokens[:16]]
+        r.input_len = len(r.tokens)
+        r.true_output_len = r.true_output_len % args.max_new + 1
+
+    pred = LengthPredictor(PredictorConfig(vocab=cfg.vocab_size), seed=0)
+    toks, lens = train_pairs(WorkloadConfig(vocab=cfg.vocab_size), 256, seed=1)
+    pred.fit(toks, lens, epochs=8)
+    prof = ResourceProfiler(pred, cfg)
+    mon = Monitor(prof)
+    prof.profile(reqs)
+
+    t0 = time.perf_counter()
+    if args.continuous:
+        res = engine.run_continuous(sorted(reqs, key=lambda r: r.arrival))
+        done = res.outputs
+    else:
+        done = {}
+        for b in get_scheduler(args.scheduler)(reqs, SchedulerConfig(max_batch=4)):
+            res = engine.run_batch(b, true_lens={r.rid: r.true_output_len
+                                                 for r in b.requests})
+            done.update(res.outputs)
+            for r in b.requests:
+                mon.observe(r)
+    dt = time.perf_counter() - t0
+    total = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests, {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s on CPU)")
+    print("monitor:", mon.metrics())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.api import (  # noqa: F401
+    cache_specs, decode_step, init_params, input_specs, loss_fn,
+    param_specs_struct, prefill)

@@ -1,0 +1,147 @@
+"""Unified model API: family dispatch for init / train-loss / prefill /
+decode, plus ``input_specs`` — the ShapeDtypeStruct stand-ins that the
+multi-pod dry-run lowers against (weak-type-correct, shardable, no device
+allocation).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as E
+from repro.models import transformer as T
+
+
+def init_params(cfg: ModelConfig, key, dtype=None):
+    if cfg.is_encdec:
+        return E.init_params(cfg, key, dtype)
+    return T.init_params(cfg, key, dtype)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, plan=None):
+    if cfg.is_encdec:
+        return E.encdec_loss(cfg, params, batch, plan=plan)
+    return T.lm_loss(cfg, params, batch, plan=plan)
+
+
+def prefill(cfg: ModelConfig, params, batch, *, plan=None, cache_len: int,
+            kv_len=None):
+    """batch: {tokens} (+ frames/embeds for stub frontends)."""
+    if cfg.is_encdec:
+        return E.encdec_prefill(cfg, params, batch["frames"], batch["tokens"],
+                                plan=plan, cache_len=cache_len, kv_len=kv_len)
+    return T.lm_prefill(cfg, params, batch["tokens"], plan=plan,
+                        cache_len=cache_len, kv_len=kv_len,
+                        embeds=batch.get("embeds"))
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, kv_len, *, plan=None):
+    if cfg.is_encdec:
+        return E.encdec_decode_step(cfg, params, tokens, cache, kv_len, plan=plan)
+    return T.lm_decode_step(cfg, params, tokens, cache, kv_len, plan=plan)
+
+
+# ----------------------------------------------------------------- dry-run IO
+
+def _frames_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    # whisper stub: prefill/train feed seq_len frames; decode uses the fixed
+    # cross_kv_len memory
+    return shape.seq_len if shape.kind != "decode" else cfg.cross_kv_len
+
+
+def _dec_prompt_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    # enc-dec prefill: decoder prompt = seq_len/8 (DESIGN.md §5)
+    return max(shape.seq_len // 8, 8)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, dtype="bfloat16"):
+    """ShapeDtypeStructs for every model input of the (arch × shape) cell.
+
+    train  -> {tokens, labels, mask} (+frames/embeds)
+    prefill-> {tokens} (+frames/embeds) and kv_len
+    decode -> tokens [B,1], cache tree, kv_len
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(dtype)
+    tok = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok,
+                 "mask": jax.ShapeDtypeStruct((b, s), jnp.float32)}
+        if cfg.is_encdec:
+            batch["frames"] = jax.ShapeDtypeStruct((b, _frames_len(cfg, shape), cfg.d_model), f)
+        if cfg.frontend == "vision_stub":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), f)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            batch = {"frames": jax.ShapeDtypeStruct((b, _frames_len(cfg, shape), cfg.d_model), f),
+                     "tokens": jax.ShapeDtypeStruct((b, _dec_prompt_len(cfg, shape)), i32)}
+        elif cfg.frontend == "vision_stub":
+            batch = {"tokens": tok,
+                     "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f)}
+        else:
+            batch = {"tokens": tok}
+        return {"batch": batch, "kv_len": jax.ShapeDtypeStruct((b,), i32)}
+    # decode
+    cache = cache_specs(cfg, b, s, dtype=f)
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32), "cache": cache,
+            "kv_len": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def cache_specs(cfg: ModelConfig, b: int, s_max: int, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree matching the decode cache layout."""
+    from repro.models.transformer import group_period
+    kv, hd, dv = cfg.n_kv_heads, cfg.head_dim_eff, cfg.v_head_dim_eff
+
+    def attn_entry(spec):
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"c_kv": jax.ShapeDtypeStruct((b, s_max, m.kv_lora_rank), dtype),
+                    "k_rope": jax.ShapeDtypeStruct((b, s_max, m.qk_rope_head_dim), dtype)}
+        ln = s_max
+        if spec.attn == "window" and cfg.sliding_window and cfg.sliding_window < s_max:
+            ln = cfg.sliding_window
+        return {"k": jax.ShapeDtypeStruct((b, ln, kv, hd), dtype),
+                "v": jax.ShapeDtypeStruct((b, ln, kv, dv), dtype)}
+
+    if cfg.is_encdec:
+        nl = cfg.n_layers
+        entry = {"self": attn_entry(cfg.layer_plan()[0]),
+                 "cross": {"ck": jax.ShapeDtypeStruct((b, cfg.cross_kv_len, kv, hd), dtype),
+                           "cv": jax.ShapeDtypeStruct((b, cfg.cross_kv_len, kv, dv), dtype)}}
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((nl,) + x.shape, x.dtype), entry)
+
+    period = group_period(cfg)
+    n_groups = cfg.n_layers // period
+    specs = cfg.layer_plan()[:period]
+    group = {}
+    for i, spec in enumerate(specs):
+        ent: dict = {}
+        if spec.mixer == "attn":
+            ent["mixer"] = attn_entry(spec)
+        elif spec.mixer == "mamba":
+            mc = cfg.mamba
+            d_in = mc.expand * cfg.d_model
+            ent["mixer"] = {"conv": jax.ShapeDtypeStruct((b, mc.d_conv - 1, d_in), dtype),
+                            "ssm": jax.ShapeDtypeStruct((b, d_in, mc.d_state), jnp.float32)}
+        else:  # rwkv6
+            rc = cfg.rwkv
+            h = cfg.d_model // rc.head_size
+            ent["mixer"] = {"shift": jax.ShapeDtypeStruct((b, cfg.d_model), dtype),
+                            "state": jax.ShapeDtypeStruct(
+                                (b, h, rc.head_size, rc.head_size), jnp.float32)}
+            ent["cm_shift"] = jax.ShapeDtypeStruct((b, cfg.d_model), dtype)
+        group[f"l{i}"] = ent
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_groups,) + x.shape, x.dtype), group)
+
+
+def param_specs_struct(cfg: ModelConfig, dtype=None):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))

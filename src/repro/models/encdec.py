@@ -1,0 +1,167 @@
+"""Encoder-decoder assembly (Whisper backbone).
+
+The conv/mel frontend is a STUB per the assignment: callers provide
+precomputed frame embeddings [B, frames, d] (input_specs() emits the matching
+ShapeDtypeStructs).  Positions are sinusoidal for both stacks (documented
+deviation: Whisper's decoder uses learned positions capped at 448; our decode
+shapes run to 32k, so sinusoidal is used throughout).
+
+Decoder blocks = self-attn + cross-attn + MLP; the cross-attention K/V are
+computed once from the encoder memory at prefill and cached.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models.common import apply_norm, norm_init, sinusoidal_positions
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.transformer import embed_tokens, lm_head
+from repro.sharding.plan import batch_spec, constrain
+
+_FULL = LayerSpec(mixer="attn", attn="full", mlp="dense")
+
+
+def _enc_block_init(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": norm_init(cfg, dtype), "norm2": norm_init(cfg, dtype),
+            "attn": attn.attn_init(cfg, k1, dtype),
+            "mlp": mlp_init(cfg, k2, dtype)}
+
+
+def _dec_block_init(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": norm_init(cfg, dtype), "norm2": norm_init(cfg, dtype),
+            "norm3": norm_init(cfg, dtype),
+            "self_attn": attn.attn_init(cfg, k1, dtype),
+            "cross_attn": attn.attn_init(cfg, k2, dtype, cross=True),
+            "mlp": mlp_init(cfg, k3, dtype)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ke, kd, kt = jax.random.split(key, 3)
+    ekeys = jax.random.split(ke, cfg.n_encoder_layers)
+    dkeys = jax.random.split(kd, cfg.n_layers)
+    enc = [_enc_block_init(cfg, k, dtype) for k in ekeys]
+    dec = [_dec_block_init(cfg, k, dtype) for k in dkeys]
+    params = {
+        "embed": {"w": (jax.random.normal(kt, (cfg.padded_vocab, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(dtype)},
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": norm_init(cfg, dtype),
+        "final_norm": norm_init(cfg, dtype),
+    }
+    return params
+
+
+def encode(cfg: ModelConfig, params, frames, *, plan=None):
+    """frames: [B, F, d] stubbed frame embeddings -> memory [B, F, d]."""
+    b, f, _ = frames.shape
+    x = frames + sinusoidal_positions(jnp.arange(f), cfg.d_model
+                                      ).astype(frames.dtype)[None]
+    x = constrain(x, batch_spec(plan, 3), plan)
+
+    def body(xc, bp):
+        h = apply_norm(cfg, bp["norm1"], xc)
+        y, _ = attn.attn_prefill(cfg, _FULL, bp["attn"], h, positions=None,
+                                 plan=plan, causal=False)
+        xc = xc + y
+        h = apply_norm(cfg, bp["norm2"], xc)
+        xc = xc + mlp_apply(cfg, bp["mlp"], h)
+        xc = constrain(xc, batch_spec(plan, 3), plan)
+        return xc, None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_stack(cfg, params, x, memory, *, plan, mode, cache=None, kv_len=None,
+               cache_len=0, positions=None):
+    def body(carry, xs):
+        xc = carry
+        bp, bc = xs
+        nc = {}
+        h = apply_norm(cfg, bp["norm1"], xc)
+        if mode == "decode":
+            y, c = attn.attn_decode(cfg, _FULL, bp["self_attn"], h,
+                                    bc["self"], kv_len, plan=plan)
+        else:
+            y, c = attn.attn_prefill(cfg, _FULL, bp["self_attn"], h,
+                                     positions=positions, plan=plan,
+                                     cache_len=cache_len, kv_len=kv_len)
+        if c is not None:
+            nc["self"] = c
+        xc = xc + y
+        h = apply_norm(cfg, bp["norm2"], xc)
+        if mode == "decode":
+            y = attn.cross_attn_decode(cfg, bp["cross_attn"], h, bc["cross"])
+        else:
+            y, cc = attn.cross_attn_prefill(cfg, bp["cross_attn"], h, memory,
+                                            plan=plan)
+            if cache_len:
+                nc["cross"] = cc
+        if mode == "decode":
+            nc["cross"] = bc["cross"]      # carried through unchanged
+        xc = xc + y
+        h = apply_norm(cfg, bp["norm3"], xc)
+        xc = xc + mlp_apply(cfg, bp["mlp"], h)
+        xc = constrain(xc, batch_spec(plan, 3), plan)
+        return xc, (nc if nc else None)
+
+    x, new_cache = lax.scan(body, x, (params["dec_blocks"], cache))
+    return apply_norm(cfg, params["final_norm"], x), new_cache
+
+
+def _dec_embed(cfg, params, tokens, offset=0):
+    x = embed_tokens(cfg, params, tokens)
+    pos = jnp.arange(tokens.shape[1]) + offset
+    return x + sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)[None]
+
+
+def encdec_loss(cfg: ModelConfig, params, batch, *, plan=None):
+    """batch: {frames [B,F,d], tokens [B,S], labels, mask}."""
+    memory = encode(cfg, params, batch["frames"], plan=plan)
+    x = _dec_embed(cfg, params, batch["tokens"])
+    x, _ = _dec_stack(cfg, params, x, memory, plan=plan, mode="train",
+                      positions=None)
+    logits = lm_head(cfg, params, x)
+    labels, mask = batch["labels"], batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    logits = jnp.where(jnp.arange(cfg.padded_vocab)[None, None] < cfg.vocab_size,
+                       logits, -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"nll": loss}
+
+
+def encdec_prefill(cfg: ModelConfig, params, frames, tokens, *, plan=None,
+                   cache_len: int, kv_len=None):
+    """Encode + decoder prompt processing; returns (last logits, cache)."""
+    memory = encode(cfg, params, frames, plan=plan)
+    x = _dec_embed(cfg, params, tokens)
+    x, cache = _dec_stack(cfg, params, x, memory, plan=plan, mode="prefill",
+                          kv_len=kv_len, cache_len=cache_len)
+    if kv_len is not None:
+        last = jax.vmap(lambda v, i: v[jnp.maximum(i - 1, 0)])(x, kv_len)
+    else:
+        last = x[:, -1]
+    return lm_head(cfg, params, last), cache
+
+
+def encdec_decode_step(cfg: ModelConfig, params, tokens, cache, kv_len, *,
+                       plan=None):
+    x = embed_tokens(cfg, params, tokens)
+    pos = sinusoidal_positions(kv_len.astype(jnp.float32), cfg.d_model)
+    x = x + pos[:, None].astype(x.dtype)
+    x, new_cache = _dec_stack(cfg, params, x, None, plan=plan, mode="decode",
+                              cache=cache, kv_len=kv_len)
+    return lm_head(cfg, params, x[:, 0]), new_cache

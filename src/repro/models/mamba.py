@@ -1,0 +1,132 @@
+"""Mamba (S6 selective-state-space) mixer for the Jamba hybrid.
+
+Train/prefill uses a chunked scan: lax.scan over time chunks with an
+associative_scan inside each chunk (log-depth, bounded
+O(chunk * d_in * d_state) live memory).  Decode is the exact single-step
+recurrence.  Cache = {conv [B, d_conv-1, d_in], ssm [B, d_in, N]}.
+
+Simplification vs reference Mamba (documented in DESIGN.md): dt is a scalar
+per position broadcast over channels through a learned per-channel bias
+(rank-1 dt projection instead of dt_rank=d_model/16); selective B/C/dt are
+otherwise faithful.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def mamba_init(cfg: ModelConfig, key, dtype):
+    mc = cfg.mamba
+    d, d_in, n = cfg.d_model, mc.expand * cfg.d_model, mc.d_state
+    keys = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(keys[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(keys[1], (mc.d_conv, d_in), jnp.float32)
+                   * mc.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "bcdt_proj": dense_init(keys[2], d_in, 2 * n + 1, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            keys[3], (d_in,), jnp.float32, jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, 1))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(keys[4], d_in, d, dtype),
+    }
+
+
+def _selective_inputs(p, x, n: int):
+    """x: conv'd activations [..., d_in] -> (dt [..., d_in], B [..., N], C)."""
+    bcdt = x @ p["bcdt_proj"]["w"]
+    b_ssm, c_ssm, dt_s = jnp.split(bcdt, [n, 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt_s.astype(jnp.float32) + p["dt_bias"])
+    return dt, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def _causal_conv(p, x):
+    """x [B, T, d_in] depthwise causal conv + silu."""
+    dc = p["conv_w"].shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1]].astype(jnp.float32)
+            * p["conv_w"][i].astype(jnp.float32) for i in range(dc))
+    return jax.nn.silu(y + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_prefill(cfg: ModelConfig, p, x_in, *, cache_len: int = 0,
+                  chunk: int = 256, kv_len=None):
+    """x_in: [B, T, d].  Returns (y [B,T,d], cache or None)."""
+    mc = cfg.mamba
+    b, t, _ = x_in.shape
+    d_in, n = mc.expand * cfg.d_model, mc.d_state
+    xz = x_in @ p["in_proj"]["w"]
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    x = _causal_conv(p, x_raw)
+    dt, b_ssm, c_ssm = _selective_inputs(p, x, n)      # [B,T,d_in], [B,T,N]
+    a = -jnp.exp(p["a_log"])                           # [d_in, N]
+    xf = x.astype(jnp.float32)
+
+    c = min(chunk, t)
+    t_p = -(-t // c) * c
+    if t_p != t:
+        pad = ((0, 0), (0, t_p - t), (0, 0))
+        xf, dt, b_ssm, c_ssm = (jnp.pad(v, pad) for v in (xf, dt, b_ssm, c_ssm))
+    nc = t_p // c
+
+    def chunk_body(h, blk):
+        xb, dtb, bb, cb = blk                          # [B,c,d_in],[B,c,d_in],[B,c,N]x2
+        abar = jnp.exp(dtb[..., None] * a)             # [B,c,d_in,N]
+        bx = (dtb * xb)[..., None] * bb[:, :, None, :]
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_sc, h_sc = lax.associative_scan(combine, (abar, bx), axis=1)
+        h_all = h_sc + a_sc * h[:, None]
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, cb)
+        return h_all[:, -1], y
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    resh = lambda v: jnp.moveaxis(v.reshape(b, nc, c, v.shape[-1]), 1, 0)
+    h_fin, ys = lax.scan(chunk_body, h0, (resh(xf), resh(dt), resh(b_ssm), resh(c_ssm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t_p, d_in)[:, :t]
+    y = y + xf[:, :t] * p["d_skip"]
+    y = y.astype(x_in.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"]
+
+    cache = None
+    if cache_len:
+        dc = mc.d_conv
+        if kv_len is not None:
+            idx = jnp.maximum(kv_len[:, None] - (dc - 1) + jnp.arange(dc - 1)[None, :], 0)
+            tail = jax.vmap(lambda v, i: v[i])(x_raw, idx)
+        else:
+            tail = x_raw[:, -(dc - 1):]
+        cache = {"conv": tail, "ssm": h_fin}
+    return out, cache
+
+
+def mamba_decode(cfg: ModelConfig, p, x_in, cache):
+    """x_in: [B, 1, d]; cache {conv [B,dc-1,d_in], ssm [B,d_in,N]}."""
+    mc = cfg.mamba
+    n = mc.d_state
+    xz = x_in[:, 0] @ p["in_proj"]["w"]
+    x_raw, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([cache["conv"], x_raw[:, None]], axis=1)
+    xc = jnp.einsum("bcd,cd->bd", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    x = jax.nn.silu(xc).astype(x_in.dtype)
+    dt, b_ssm, c_ssm = _selective_inputs(p, x, n)      # [B,d_in],[B,N],[B,N]
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[..., None] * a)                  # [B,d_in,N]
+    bx = (dt * x.astype(jnp.float32))[..., None] * b_ssm[:, None, :]
+    h = abar * cache["ssm"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm)
+    y = y + x.astype(jnp.float32) * p["d_skip"]
+    y = y.astype(x_in.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]["w"]
+    return out[:, None], {"conv": window[:, 1:], "ssm": h}

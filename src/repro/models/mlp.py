@@ -1,0 +1,54 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLPs, plus the RWKV
+channel-mix (squared-relu, token-shifted).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import activation, apply_dense, dense_init
+
+
+def mlp_init(cfg: ModelConfig, key, dtype, *, hidden: int | None = None):
+    hidden = hidden or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, cfg.d_model, hidden, dtype),
+         "down": dense_init(k2, hidden, cfg.d_model, dtype)}
+    if cfg.gated_mlp:
+        p["gate"] = dense_init(k3, cfg.d_model, hidden, dtype)
+    return p
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    up = apply_dense(p["up"], x)
+    if cfg.gated_mlp:
+        up = activation(cfg, apply_dense(p["gate"], x)) * up
+    else:
+        up = activation(cfg, up)
+    return apply_dense(p["down"], up)
+
+
+# ------------------------------------------------------------ rwkv channel mix
+
+def channel_mix_init(cfg: ModelConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "key": dense_init(k1, cfg.d_model, cfg.d_ff, dtype),
+        "value": dense_init(k2, cfg.d_ff, cfg.d_model, dtype),
+        "mix_k": jnp.full((cfg.d_model,), 0.5, dtype),
+    }
+
+
+def channel_mix_apply(cfg: ModelConfig, p, x, shifted):
+    """x, shifted: [B, S, d]; shifted = x delayed by one token."""
+    xk = x + (shifted - x) * p["mix_k"]
+    k = jnp.square(jax.nn.relu(apply_dense(p["key"], xk)))
+    return apply_dense(p["value"], k)
+
+
+def token_shift(x, last: jnp.ndarray | None = None):
+    """[B, S, d] -> previous token's features; position 0 sees `last`
+    (carried state) or zeros."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)

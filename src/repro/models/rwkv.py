@@ -1,0 +1,101 @@
+"""RWKV-6 ("Finch") time-mix block: token shift, data-dependent decay via a
+low-rank projection (the Finch signature), WKV recurrence through the
+kernels.wkv6 op, grouped head-norm, and a SiLU output gate.
+
+Simplification vs the full release (DESIGN.md): the five per-projection
+dynamic lerp loras are collapsed to static mix vectors; the *decay* lora —
+the architectural novelty of RWKV-6 — is kept faithful.
+Decode cache = {shift [B, d], state [B, H, hd, hd]}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.wkv6 import wkv6, wkv6_step
+from repro.models.common import dense_init, group_norm
+from repro.models.mlp import token_shift
+
+
+def rwkv_init(cfg: ModelConfig, key, dtype):
+    rc = cfg.rwkv
+    d = cfg.d_model
+    h = d // rc.head_size
+    keys = jax.random.split(key, 8)
+    return {
+        "r": dense_init(keys[0], d, d, dtype),
+        "k": dense_init(keys[1], d, d, dtype),
+        "v": dense_init(keys[2], d, d, dtype),
+        "g": dense_init(keys[3], d, d, dtype),
+        "o": dense_init(keys[4], d, d, dtype),
+        "w0": jnp.full((d,), -5.0, jnp.float32),     # base log-decay (exp(-exp(.)))
+        "w_lora_a": (jax.random.normal(keys[5], (d, rc.decay_lora), jnp.float32)
+                     * d ** -0.5).astype(dtype),
+        "w_lora_b": jnp.zeros((rc.decay_lora, d), dtype),
+        "u": (jax.random.normal(keys[6], (h, rc.head_size), jnp.float32) * 0.3
+              ).astype(jnp.float32),
+        "mix_r": jnp.full((d,), 0.5, dtype),
+        "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "ln_scale": jnp.ones((d,), dtype),
+        "ln_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def _mix(x, shifted, m):
+    return x + (shifted - x) * m
+
+
+def _project(cfg, p, x, shifted):
+    rc = cfg.rwkv
+    d = cfg.d_model
+    h = d // rc.head_size
+    lead = x.shape[:-1]
+    r = _mix(x, shifted, p["mix_r"]) @ p["r"]["w"]
+    k = _mix(x, shifted, p["mix_k"]) @ p["k"]["w"]
+    v = _mix(x, shifted, p["mix_v"]) @ p["v"]["w"]
+    g = _mix(x, shifted, p["mix_g"]) @ p["g"]["w"]
+    xw = _mix(x, shifted, p["mix_w"])
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x A) B))
+    dlog = p["w0"] + (jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dlog))
+    hs = rc.head_size
+    shp = (*lead, h, hs)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            w.reshape(shp).astype(jnp.float32), g)
+
+
+def rwkv_prefill(cfg: ModelConfig, p, x, *, cache_len: int = 0, kv_len=None):
+    """x: [B, T, d] -> (y, cache or None)."""
+    rc = cfg.rwkv
+    b, t, d = x.shape
+    h = d // rc.head_size
+    shifted = token_shift(x)
+    r, k, v, w, g = _project(cfg, p, x, shifted)
+    out, state = wkv6(r, k, v, w, p["u"])
+    out = group_norm(out.reshape(b, t, d), p["ln_scale"], p["ln_bias"], h)
+    y = (out * jax.nn.silu(g)) @ p["o"]["w"]
+    cache = None
+    if cache_len:
+        if kv_len is not None:
+            last = jax.vmap(lambda xi, i: xi[jnp.maximum(i - 1, 0)])(x, kv_len)
+        else:
+            last = x[:, -1]
+        cache = {"shift": last, "state": state}
+    return y, cache
+
+
+def rwkv_decode(cfg: ModelConfig, p, x, cache):
+    """x: [B, 1, d]; cache {shift [B,d], state [B,H,hs,hs]}."""
+    rc = cfg.rwkv
+    b, _, d = x.shape
+    h = d // rc.head_size
+    xt = x[:, 0]
+    r, k, v, w, g = _project(cfg, p, xt, cache["shift"])
+    out, state = wkv6_step(r, k, v, w, p["u"], cache["state"])
+    out = group_norm(out.reshape(b, d), p["ln_scale"], p["ln_bias"], h)
+    y = (out * jax.nn.silu(g)) @ p["o"]["w"]
+    return y[:, None], {"shift": xt, "state": state}

@@ -1,0 +1,4 @@
+from repro.serving.engine import BatchResult, EngineConfig, InferenceEngine  # noqa: F401
+from repro.serving.simulator import (LatencyModel, SimResult,  # noqa: F401
+                                     morphling_deploy_overhead, paper_cluster,
+                                     simulate)

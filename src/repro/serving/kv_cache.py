@@ -1,0 +1,121 @@
+"""Paged KV-cache manager (beyond-paper; the paper cites PagedAttention as
+the memory-efficiency frontier its padding-based cost model predates).
+
+Host-side block allocator + device-side paged layout:
+
+* the pool is ``[n_blocks, block, KV, hd]`` per layer-kind;
+* each sequence owns an ordered block list (the block table);
+* allocation is O(1) from a free list; freeing a finished sequence returns
+  its blocks — no compaction, no per-sequence max-length reservation, which
+  is exactly the padding-waste UELLM's scheduler also attacks (the two
+  compose: SLO-ODBS shapes the batch, paging shapes the memory).
+
+``gather_cache`` materializes a sequence's contiguous view for the
+(non-paged) decode kernels; a paged Pallas decode kernel would read through
+the block table directly — left as the recorded next step in EXPERIMENTS §Perf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagedKVConfig:
+    n_blocks: int
+    block_size: int = 16
+    n_kv_heads: int = 1
+    head_dim: int = 64
+    dtype: str = "float32"
+
+
+class BlockAllocator:
+    """O(1) free-list allocator with per-sequence block tables."""
+
+    def __init__(self, n_blocks: int):
+        self.free: list[int] = list(range(n_blocks - 1, -1, -1))
+        self.tables: dict[int, list[int]] = {}
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self.free) >= n
+
+    def alloc(self, seq_id: int, n: int = 1) -> list[int]:
+        if len(self.free) < n:
+            raise MemoryError("KV pool exhausted")
+        blocks = [self.free.pop() for _ in range(n)]
+        self.tables.setdefault(seq_id, []).extend(blocks)
+        return blocks
+
+    def free_seq(self, seq_id: int) -> int:
+        blocks = self.tables.pop(seq_id, [])
+        self.free.extend(reversed(blocks))
+        return len(blocks)
+
+    @property
+    def used_blocks(self) -> int:
+        return sum(len(v) for v in self.tables.values())
+
+
+class PagedKVCache:
+    """One layer's paged K/V pool + the allocator bookkeeping."""
+
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        shape = (cfg.n_blocks, cfg.block_size, cfg.n_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        self.v = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        self.alloc = BlockAllocator(cfg.n_blocks)
+        self.lengths: dict[int, int] = {}
+
+    # ------------------------------------------------------------------ ops
+    def ensure_capacity(self, seq_id: int, new_len: int) -> None:
+        bs = self.cfg.block_size
+        have = len(self.alloc.tables.get(seq_id, [])) * bs
+        need = new_len - have
+        if need > 0:
+            self.alloc.alloc(seq_id, -(-need // bs))
+
+    def append(self, seq_id: int, k_new: jnp.ndarray, v_new: jnp.ndarray):
+        """k_new/v_new: [T, KV, hd] appended at the sequence tail."""
+        t = k_new.shape[0]
+        pos = self.lengths.get(seq_id, 0)
+        self.ensure_capacity(seq_id, pos + t)
+        bs = self.cfg.block_size
+        table = self.alloc.tables[seq_id]
+        for i in range(t):
+            p = pos + i
+            blk, off = table[p // bs], p % bs
+            self.k = self.k.at[blk, off].set(k_new[i])
+            self.v = self.v.at[blk, off].set(v_new[i])
+        self.lengths[seq_id] = pos + t
+
+    def gather(self, seq_id: int) -> tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Contiguous [L, KV, hd] view of a sequence (for non-paged kernels)."""
+        ln = self.lengths.get(seq_id, 0)
+        bs = self.cfg.block_size
+        table = self.alloc.tables.get(seq_id, [])
+        idx = np.asarray(table, np.int32)
+        k = self.k[idx].reshape(-1, self.cfg.n_kv_heads, self.cfg.head_dim)[:ln]
+        v = self.v[idx].reshape(-1, self.cfg.n_kv_heads, self.cfg.head_dim)[:ln]
+        return k, v, ln
+
+    def release(self, seq_id: int) -> None:
+        self.alloc.free_seq(seq_id)
+        self.lengths.pop(seq_id, None)
+
+    # -------------------------------------------------------------- metrics
+    def utilization(self) -> float:
+        used_slots = sum(self.lengths.values())
+        alloc_slots = self.alloc.used_blocks * self.cfg.block_size
+        return used_slots / alloc_slots if alloc_slots else 1.0
+
+    def waste_vs_padded(self, reserved_len: int) -> float:
+        """Memory saved vs per-sequence max-length reservation (the padding
+        regime the paper's Fig. 3 counts tokens for)."""
+        n_seqs = len(self.lengths)
+        padded = n_seqs * reserved_len
+        paged = self.alloc.used_blocks * self.cfg.block_size
+        return 1.0 - paged / padded if padded else 0.0

@@ -1,0 +1,266 @@
+"""Discrete-event cluster simulator.
+
+Reproduces the paper's evaluation environment (§5.1): a 4-GPU heterogeneous
+cluster (Table 2 power caps -> per-device performance scalars; PIX/NODE link
+latencies), ChatGLM2-6B, Poisson request loads with random SLOs in [1, 350] s.
+The latency model derives per-iteration times from the analytic cost model
+(repro.perf.cost_model) applied to the deployer's DeviceMap: pipeline stage
+compute + link latency per token (sequential execution — the paper's
+Observation #1), so deployment quality and batching quality interact exactly
+as in the paper.
+
+Semantics of padded batching (§4.2 / Fig. 3): a batch prefills together at
+max input length and decodes for max-true-output iterations; each request's
+*answer* completes at its own EOS, but the replica stays busy until the batch
+drains.  GPU utilization = useful token work / (peak work available over the
+makespan) — the simulator's analogue of nvidia-smi utilization.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.deployer import HELRConfig, bgs, helr
+from repro.core.monitor import Monitor
+from repro.core.profiler import ResourceProfiler
+from repro.core.scheduler import SchedulerConfig
+from repro.core.types import Batch, DeviceMap, DeviceNode, Request
+
+
+# ------------------------------------------------------ paper's cluster (T2)
+
+def paper_cluster() -> tuple[list[DeviceNode], list[list[float]]]:
+    """4 GPUs with Table-2 power caps scaled to effective TFLOP/s, and the
+    PIX/NODE topology."""
+    perf = [35e12, 30e12, 25e12, 15e12]     # 350W/300W/250W/150W caps
+    nodes = [DeviceNode(i, memory=24e9, performance=perf[i], name=f"GPU#{i}")
+             for i in range(4)]
+    pix, node = 5e-5, 2e-4                  # per-token link latencies (s)
+    lat = [[0.0, pix, node, node],
+           [pix, 0.0, node, node],
+           [node, node, 0.0, pix],
+           [node, node, pix, 0.0]]
+    return nodes, lat
+
+
+# ------------------------------------------------------------- latency model
+
+@dataclass
+class LatencyModel:
+    """Roofline iteration times for a model deployed per DeviceMap.
+
+    Decode stages are max(compute, HBM) bound: the weight read is
+    batch-independent, so batching is nearly free until the compute term
+    crosses it — the physics behind the paper's Observation #2 (batching
+    raises token rate because weights are shared)."""
+    cfg: ModelConfig
+    nodes: list[DeviceNode]
+    latency: list[list[float]]
+    dmap: DeviceMap
+    efficiency: float = 0.45          # fraction of peak a real kernel hits
+    hbm_bw: float = 900e9             # bytes/s (RTX3090-class)
+
+    def _stage_flops_token(self, layers: int, kv: int) -> float:
+        c = self.cfg
+        per_layer = 2.0 * (c._attn_params() + c._mlp_params(c.d_ff))
+        attn = 4.0 * kv * c.n_heads * c.head_dim_eff
+        return layers * (per_layer + attn)
+
+    def _stage_bytes(self, layers: int, batch: int, kv: int) -> float:
+        c = self.cfg
+        per_layer_w = 2.0 * (c._attn_params() + c._mlp_params(c.d_ff))
+        kv_bytes = 2.0 * 2.0 * kv * c.n_kv_heads * c.head_dim_eff * batch
+        return layers * (per_layer_w + kv_bytes)
+
+    def token_time(self, batch: int, kv: int) -> float:
+        """One decode iteration for the whole batch (pipeline stages execute
+        sequentially per token — paper Observation #1)."""
+        t = 0.0
+        path = [d for d in self.dmap.path if self.dmap.layers.get(d, 0) > 0]
+        for idx, dev in enumerate(path):
+            nl = self.dmap.layers[dev]
+            t_comp = self._stage_flops_token(nl, kv) * batch \
+                / (self.nodes[dev].performance * self.efficiency)
+            t_mem = self._stage_bytes(nl, batch, kv) / self.hbm_bw
+            t += max(t_comp, t_mem)
+            if idx + 1 < len(path):
+                t += self.latency[dev][path[idx + 1]]
+        return t
+
+    def prefill_time(self, batch: int, in_len: int) -> float:
+        t = 0.0
+        path = [d for d in self.dmap.path if self.dmap.layers.get(d, 0) > 0]
+        for idx, dev in enumerate(path):
+            nl = self.dmap.layers[dev]
+            fl = self._stage_flops_token(nl, in_len / 2) * batch * in_len
+            t_comp = fl / (self.nodes[dev].performance * self.efficiency)
+            t_mem = self._stage_bytes(nl, batch, in_len) / self.hbm_bw
+            t += max(t_comp, t_mem)
+            if idx + 1 < len(path):
+                t += self.latency[dev][path[idx + 1]]
+        return t
+
+    @property
+    def peak_flops(self) -> float:
+        return sum(self.nodes[d].performance for d in self.dmap.path
+                   if self.dmap.layers.get(d, 0) > 0)
+
+
+# ---------------------------------------------------------------- simulation
+
+@dataclass
+class SimResult:
+    requests: list[Request]
+    makespan: float
+    useful_flops: float
+    busy_flops_capacity: float
+    deploy_overhead: float = 0.0
+    batch_count: int = 0
+    total_padded_tokens: int = 0
+    total_true_tokens: int = 0
+
+    @property
+    def avg_latency(self) -> float:
+        ls = [r.latency for r in self.requests if r.latency is not None]
+        return float(np.mean(ls)) if ls else float("nan")
+
+    @property
+    def p99_latency(self) -> float:
+        ls = [r.latency for r in self.requests if r.latency is not None]
+        return float(np.percentile(ls, 99)) if ls else float("nan")
+
+    @property
+    def slo_violation_rate(self) -> float:
+        met = [r.slo_met for r in self.requests if r.slo_met is not None]
+        return 1.0 - float(np.mean(met)) if met else float("nan")
+
+    @property
+    def throughput(self) -> float:
+        """tokens/s over the serving window (paper metric 2)."""
+        return self.total_true_tokens / self.makespan if self.makespan else 0.0
+
+    @property
+    def gpu_util(self) -> float:
+        return self.useful_flops / self.busy_flops_capacity \
+            if self.busy_flops_capacity else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "avg_latency_s": round(self.avg_latency, 3),
+            "p99_latency_s": round(self.p99_latency, 3),
+            "slo_violation": round(self.slo_violation_rate, 4),
+            "throughput_tok_s": round(self.throughput, 2),
+            "gpu_util": round(self.gpu_util, 4),
+            "batches": self.batch_count,
+            "padded_tokens": self.total_padded_tokens,
+            "true_tokens": self.total_true_tokens,
+        }
+
+
+def simulate(
+    requests: list[Request],
+    model_cfg: ModelConfig,
+    scheduler: Callable[[list[Request], SchedulerConfig], list[Batch]],
+    sched_cfg: SchedulerConfig,
+    *,
+    profiler: Optional[ResourceProfiler] = None,
+    monitor: Optional[Monitor] = None,
+    deploy: Callable = helr,
+    deploy_overhead: float = 0.0,
+    nodes=None, latency=None,
+    model_mem: Optional[float] = None,
+    window: float = 10.0,
+) -> SimResult:
+    """Event loop: requests arrive; every scheduling window (or whenever the
+    replica goes idle) the pending pool is profiled and batched; batches run
+    sequentially on the deployed pipeline (single replica, like the paper's
+    testbed)."""
+    if nodes is None:
+        nodes, latency = paper_cluster()
+    model_mem = model_mem or model_cfg.param_count() * 2.0
+    dmap = deploy(model_mem, model_cfg.n_layers, nodes, latency)
+    if not dmap.path:
+        raise RuntimeError("deployment infeasible")
+    lm = LatencyModel(model_cfg, nodes, latency, dmap)
+
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    t = deploy_overhead
+    i = 0
+    pending: list[Request] = []
+    useful = 0.0
+    busy_time = 0.0
+    batches_run = 0
+    padded_total = 0
+    true_total = 0
+
+    while i < len(reqs) or pending:
+        # admit everything that has arrived by t (plus wait if idle)
+        while i < len(reqs) and reqs[i].arrival <= t:
+            pending.append(reqs[i])
+            i += 1
+        if not pending:
+            t = max(t, reqs[i].arrival)
+            continue
+        if profiler is not None:
+            profiler.profile(pending)
+        else:
+            for r in pending:
+                r.predicted_output_len = r.true_output_len   # oracle fallback
+        batches = scheduler(pending, sched_cfg)
+        # event-driven: run only the FIRST batch, then re-admit arrivals and
+        # re-schedule the remainder — a real serving loop reconsiders the
+        # queue every time the replica frees up
+        b = next((b_ for b_ in batches if b_.requests), None)
+        pending = [r for b_ in batches for r in b_.requests
+                   if b is None or r not in b.requests]
+        if b is None:
+            continue
+        in_len = b.padded_input
+        n = len(b)
+        t_pre = lm.prefill_time(n, in_len)
+        t_cursor = t + t_pre
+        remaining = sorted(b.requests, key=lambda r: r.true_output_len)
+        kv = in_len
+        step_start = 0
+        for r in remaining:
+            steps = r.true_output_len - step_start
+            if steps > 0:
+                tt = lm.token_time(n, kv + step_start + steps / 2)
+                t_cursor += steps * tt
+                step_start = r.true_output_len
+            r.start_time = t
+            r.finish_time = t_cursor
+            if monitor is not None:
+                monitor.observe(r)
+        busy_time += t_cursor - t
+        useful += sum(lm._stage_flops_token(model_cfg.n_layers,
+                                            in_len / 2 + r.true_output_len / 2)
+                      * (r.input_len + r.true_output_len)
+                      for r in b.requests)
+        padded_total += b.total_tokens
+        true_total += sum(r.true_output_len for r in b.requests)
+        batches_run += 1
+        t = t_cursor
+
+    return SimResult(
+        requests=reqs, makespan=t, useful_flops=useful,
+        busy_flops_capacity=lm.peak_flops * lm.efficiency * max(t, 1e-9),
+        deploy_overhead=deploy_overhead, batch_count=batches_run,
+        total_padded_tokens=padded_total, total_true_tokens=true_total)
+
+
+# --------------------------------------------------- baseline deploy systems
+
+def morphling_deploy_overhead(model_cfg: ModelConfig, nodes, latency,
+                              n_trials: int = 8) -> float:
+    """Morphling stress-tests sampled configurations before committing
+    (paper §3.1): each trial runs a short profiling workload on the cluster.
+    Returns the serving-start delay it costs."""
+    dmap = bgs(model_cfg.param_count() * 2.0, model_cfg.n_layers, nodes, latency)
+    lm = LatencyModel(model_cfg, nodes, latency, dmap)
+    per_trial = lm.prefill_time(8, 128) + 64 * lm.token_time(8, 192)
+    return n_trials * per_trial

@@ -1,0 +1,2 @@
+from repro.sharding.plan import (  # noqa: F401
+    ShardingPlan, axis_size, batch_spec, constrain, divisible)

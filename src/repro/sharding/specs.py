@@ -1,0 +1,195 @@
+"""Parameter and cache PartitionSpec trees.
+
+``param_specs`` walks the parameter structure by path and applies the
+per-tensor rules of DESIGN.md §6: TP on the model axis wherever the tensor's
+sharded dimension divides (head-aligned for attention, always for FFN/vocab),
+FSDP over the plan's fsdp axes, EP for expert banks, replication elsewhere.
+The divisible-else-replicate policy is what lets a single 16-wide model axis
+host 9-head and 64-head models alike.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding.plan import ShardingPlan
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 1 and n % size == 0
+
+
+def param_specs(cfg: ModelConfig, plan: Optional[ShardingPlan], params_struct,
+                mesh_shape: dict[str, int]):
+    """PartitionSpec tree matching params_struct."""
+    if plan is None:
+        return jax.tree.map(lambda _: P(), params_struct)
+    tp_ax = plan.model_axis
+    tp = mesh_shape.get(tp_ax, 1) if tp_ax else 1
+    fsdp = plan.fsdp_axes or None
+    fsdp_size = 1
+    for a in (plan.fsdp_axes or ()):
+        fsdp_size *= mesh_shape.get(a, 1)
+    ep_ax = plan.ep_axis
+    ep = mesh_shape.get(ep_ax, 1) if ep_ax else 1
+
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    hd, dv = cfg.head_dim_eff, cfg.v_head_dim_eff
+    d = cfg.d_model
+
+    def fs(dim: int):
+        """fsdp axes if the dim divides, else None."""
+        return fsdp if (fsdp and dim % fsdp_size == 0) else None
+
+    def leaf_spec(path: tuple[str, ...], x) -> P:
+        shape = x.shape
+        stacked = path[0] in ("blocks", "enc_blocks", "dec_blocks")
+        lead = (None,) if stacked else ()
+        body = shape[1:] if stacked else shape
+        name = path[-1]          # 'w' / 'b' / tensor name
+        parent = path[-2] if len(path) >= 2 else ""
+
+        def spec(*parts):
+            return P(*(lead + parts))
+
+        # ---- embeddings / head
+        if path[0] == "embed":
+            return P(tp_ax if _div(shape[0], tp) else None, fs(shape[1]))
+        if path[0] == "head":
+            return P(fs(shape[0]), tp_ax if _div(shape[1], tp) else None)
+        if "norm" in path[0] or "norm" in parent:
+            return P(*([None] * len(shape)))
+
+        # ---- MoE banks [G, E, a, b]: EP on the expert dim when enabled,
+        # else ZeRO/FSDP on the dense dim (gathered per layer for compute)
+        if parent == "mlp" and name in ("up", "gate", "down") and len(body) == 3:
+            e_ax = ep_ax if (ep_ax and _div(body[0], ep)) else None
+            bank_fs = (lambda d_: fs(d_)) if e_ax is None else (lambda d_: None)
+            if name == "down":     # [E, f, d]
+                return spec(e_ax, tp_ax if _div(body[1], tp) else None,
+                            bank_fs(body[2]))
+            return spec(e_ax, bank_fs(body[1]),
+                        tp_ax if _div(body[2], tp) else None)
+        if parent == "router":
+            return spec(*([None] * len(body)))
+
+        # ---- dense / shared-expert MLPs {up,gate,down}/{w,b}
+        if parent in ("up", "gate", "key"):
+            if name == "b":
+                return spec(tp_ax if _div(body[0], tp) else None)
+            return spec(fs(body[0]), tp_ax if _div(body[1], tp) else None)
+        if parent in ("down", "value"):
+            if name == "b":
+                return spec(None)
+            return spec(tp_ax if _div(body[0], tp) else None, fs(body[1]))
+
+        # ---- attention projections
+        if parent in ("q",):
+            if name == "b":
+                return spec(tp_ax if _div(h, tp) else None)
+            return spec(fs(body[0]), tp_ax if _div(h, tp) else None)
+        if parent in ("k", "v"):
+            if name == "b":
+                return spec(tp_ax if _div(kv, tp) else None)
+            return spec(fs(body[0]), tp_ax if _div(kv, tp) else None)
+        if parent == "o":
+            if name == "b":
+                return spec(None)
+            return spec(tp_ax if _div(h, tp) else None, fs(body[1]))
+        # MLA pieces: replicate over tp unless head count divides
+        if parent in ("q_down", "kv_down"):
+            return spec(fs(body[0]), None)
+        if parent in ("q_up", "kv_up"):
+            return spec(None, tp_ax if _div(h, tp) else None)
+
+        # ---- mamba
+        if parent == "in_proj":
+            return spec(fs(body[0]), tp_ax if _div(body[1], tp) else None)
+        if parent == "out_proj":
+            return spec(tp_ax if _div(body[0], tp) else None, fs(body[1]))
+        if parent == "bcdt_proj":
+            return spec(tp_ax if _div(body[0], tp) else None, None)
+        if name == "conv_w":
+            return spec(None, tp_ax if _div(body[1], tp) else None)
+        if name in ("conv_b", "dt_bias", "d_skip"):
+            return spec(tp_ax if _div(body[0], tp) else None)
+        if name == "a_log":
+            return spec(tp_ax if _div(body[0], tp) else None, None)
+
+        # ---- rwkv time-mix: head count rarely divides -> replicate matmuls,
+        # shard nothing but fsdp
+        if parent in ("r", "g"):
+            return spec(fs(body[0]), None)
+        if name in ("w_lora_a", "w_lora_b", "u", "w0"):
+            return spec(*([None] * len(body)))
+
+        # default: fsdp on the largest dim when possible, else replicate
+        if len(body) >= 2:
+            return spec(fs(body[0]), *([None] * (len(body) - 1)))
+        return spec(*([None] * len(body)))
+
+    return _tree_map_with_path(leaf_spec, params_struct)
+
+
+def _tree_map_with_path(fn, tree):
+    out = jax.tree_util.tree_map_with_path(
+        lambda kp, x: fn(tuple(_key_str(k) for k in kp), x), tree)
+    return out
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def cache_specs_tree(cfg: ModelConfig, plan: Optional[ShardingPlan],
+                     cache_struct, mesh_shape: dict[str, int]):
+    """PartitionSpecs for the decode cache: KV sequence-sharded over
+    plan.seq_axes (flash-decoding layout), states batch-sharded."""
+    if plan is None:
+        return jax.tree.map(lambda _: P(), cache_struct)
+    batch = plan.batch_axes if len(plan.batch_axes) > 1 else \
+        (plan.batch_axes[0] if plan.batch_axes else None)
+    seq = None
+    if plan.seq_axes:
+        seq = plan.seq_axes if len(plan.seq_axes) > 1 else plan.seq_axes[0]
+
+    tp_ax = plan.model_axis
+    tp = mesh_shape.get(tp_ax, 1) if tp_ax else 1
+    head_tp = tp_ax is not None and tp > 1 and cfg.mla is None \
+        and cfg.n_kv_heads % tp == 0
+
+    def leaf(path, x):
+        name = path[-1]
+        lead = (None,)          # stacked groups dim
+        body = x.shape[1:]
+        if name in ("k", "v", "ck", "cv") and head_tp and len(body) == 4:
+            # head-TP cache: [B, S, KV, hd] with KV over the model axis —
+            # matches the head-sharded k/v projections, decode is fully local
+            return P(*(lead + (batch, None, tp_ax, None)))
+        seq_ok = seq is not None and len(body) >= 2 \
+            and body[1] % _axprod(plan.seq_axes, mesh_shape) == 0
+        # ring-buffer window caches without head-TP stay batch-sharded: they
+        # are small and the ring decode computes locally per batch shard
+        if cfg.sliding_window and len(body) >= 2 and body[1] <= cfg.sliding_window:
+            seq_ok = False
+        if name in ("k", "v", "c_kv", "k_rope", "ck", "cv"):
+            parts = [batch, seq if seq_ok else None] + [None] * (len(body) - 2)
+            return P(*(lead + tuple(parts)))
+        # states / shifts: batch-sharded only
+        return P(*(lead + (batch,) + (None,) * (len(body) - 1)))
+
+    return _tree_map_with_path(leaf, cache_struct)
+
+
+def _axprod(axes, mesh_shape) -> int:
+    t = 1
+    for a in axes:
+        t *= mesh_shape.get(a, 1)
+    return t

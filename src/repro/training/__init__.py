@@ -1,0 +1,4 @@
+from repro.training.optimizer import (OptConfig, apply_updates,  # noqa: F401
+                                      init_opt_state, opt_state_specs)
+from repro.training.trainer import (TrainConfig, init_training,  # noqa: F401
+                                    make_train_step)

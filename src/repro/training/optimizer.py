@@ -1,0 +1,121 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment,
+the memory-viable choice for the 400B-class models on 16 GB chips —
+EXPERIMENTS.md §Dry-run records the arithmetic).
+
+Pure-pytree implementation (no optax dependency): ``init(params)`` ->
+state, ``update(grads, state, params, step)`` -> (new_params, new_state).
+State tensors inherit the parameter sharding (same tree structure), so FSDP
+shards optimizer state for free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: Literal["adamw", "adafactor"] = "adamw"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    # adafactor
+    decay_pow: float = 0.8
+    clip_threshold: float = 1.0
+
+
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.kind == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def vrow(p):
+        if p.ndim < 2:
+            return jnp.zeros(p.shape, jnp.float32)
+        return jnp.zeros(p.shape[:-1], jnp.float32)
+
+    def vcol(p):
+        if p.ndim < 2:
+            return jnp.zeros((1,), jnp.float32)       # unused for vectors
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+    return {"vr": jax.tree.map(vrow, params), "vc": jax.tree.map(vcol, params)}
+
+
+def _adamw_update(g, m, v, p, step, cfg: OptConfig):
+    gf = g.astype(jnp.float32)
+    m = cfg.b1 * m + (1 - cfg.b1) * gf
+    v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+    mh = m / (1 - cfg.b1 ** step)
+    vh = v / (1 - cfg.b2 ** step)
+    upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype), m, v
+
+
+def _adafactor_update(g, vr, vc, p, step, cfg: OptConfig):
+    gf = g.astype(jnp.float32)
+    decay = 1.0 - (step + 1.0) ** -cfg.decay_pow
+    g2 = gf * gf + 1e-30
+    if p.ndim < 2:
+        vr_new = decay * vr + (1 - decay) * g2
+        upd = gf / jnp.sqrt(vr_new + cfg.eps)
+        vc_new = vc
+    else:
+        vr_new = decay * vr + (1 - decay) * g2.mean(axis=-1)
+        vc_new = decay * vc + (1 - decay) * g2.mean(axis=-2)
+        r = vr_new / jnp.maximum(vr_new.mean(axis=-1, keepdims=True), 1e-30)
+        upd = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc_new)[..., None, :]
+                    + cfg.eps)
+    # update clipping (adafactor rms rule)
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms / cfg.clip_threshold)
+    new_p = (p.astype(jnp.float32)
+             - cfg.lr * (upd + cfg.weight_decay * p.astype(jnp.float32)))
+    return new_p.astype(p.dtype), vr_new, vc_new
+
+
+def apply_updates(params, grads, state, step, cfg: OptConfig):
+    """step: 1-based int32 scalar."""
+    if cfg.kind == "adamw":
+        out = jax.tree.map(
+            lambda p, g, m, v: _adamw_update(g, m, v, p, step, cfg),
+            params, grads, state["m"], state["v"])
+        params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return params, {"m": m, "v": v}
+    out = jax.tree.map(
+        lambda p, g, vr, vc: _adafactor_update(g, vr, vc, p, step, cfg),
+        params, grads, state["vr"], state["vc"])
+    params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    vr = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    vc = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return params, {"vr": vr, "vc": vc}
+
+
+def opt_state_specs(param_spec_tree, cfg: OptConfig):
+    """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+    if cfg.kind == "adamw":
+        return {"m": param_spec_tree, "v": param_spec_tree}
+
+    def row(spec):
+        parts = list(spec)
+        return P(*parts[:-1]) if len(parts) >= 2 else spec
+
+    def col(spec):
+        parts = list(spec)
+        if len(parts) >= 2:
+            return P(*(parts[:-2] + parts[-1:]))
+        return P(None)
+
+    return {"vr": jax.tree.map(row, param_spec_tree),
+            "vc": jax.tree.map(col, param_spec_tree)}

@@ -1,0 +1,81 @@
+"""Training step factory: loss+grad (with microbatch gradient accumulation),
+optimizer update, and the sharding-aware jit wrapper the launcher and the
+multi-pod dry-run both use.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.sharding.plan import ShardingPlan
+from repro.training.optimizer import OptConfig, apply_updates, init_opt_state
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    grad_clip: float = 1.0
+
+
+def _split_micro(batch, n):
+    def resh(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(resh, batch)
+
+
+def make_train_step(cfg: ModelConfig, plan: Optional[ShardingPlan],
+                    tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        loss, metrics = api.loss_fn(cfg, params, mb, plan=plan)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        n = tcfg.microbatches
+        if n > 1:
+            micro = _split_micro(batch, n)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g_sum, loss_sum), _ = lax.scan(acc_body, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / n, g_sum)
+            loss = loss_sum / n
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        params, opt_state = apply_updates(params, grads, opt_state,
+                                          step.astype(jnp.float32) + 1.0,
+                                          tcfg.opt)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_training(cfg: ModelConfig, key, tcfg: TrainConfig, dtype=None):
+    params = api.init_params(cfg, key, dtype)
+    opt_state = init_opt_state(params, tcfg.opt)
+    return params, opt_state

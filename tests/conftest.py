@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see the real single CPU device — the 512-way
+# placeholder override belongs to launch/dryrun.py ONLY.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

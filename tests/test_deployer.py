@@ -1,0 +1,127 @@
+"""HELR deployer: exact-DP optimality vs brute force (hypothesis), memory
+feasibility, variant behaviour, hierarchical scaling, and the TPU mesh
+adaptation."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPES, get_config
+from repro.core.deployer import (EXACT_DP_MAX, HELRConfig, _caps, bgs,
+                                 candidate_plans, he, helr, helr_mesh, lr)
+from repro.core.types import DeviceNode
+
+
+def brute_force(model_mem, n_layers, nodes, lat, cfg):
+    """Enumerate all subsets × orderings with the same greedy layer fill and
+    the same objective as the DP."""
+    n = len(nodes)
+    caps = _caps(nodes, model_mem, n_layers, cfg)
+    m = model_mem / max(n_layers, 1)
+    unit = cfg.p * m / max(sum(d.performance for d in nodes) / n, 1e-9)
+    best = float("inf")
+    for k in range(1, n + 1):
+        for perm in itertools.permutations(range(n), k):
+            rem = n_layers
+            t = 0.0
+            feasible_prefix = False
+            for idx, j in enumerate(perm):
+                take = min(caps[j], rem)
+                rem -= take
+                t += cfg.p * take * m / nodes[j].performance
+                if idx > 0:
+                    t += lat[perm[idx - 1]][j]
+                if rem <= 0:
+                    feasible_prefix = True
+                    score = cfg.a1 * t + cfg.a2 * (idx + 1) * unit + 1e-6 * t
+                    best = min(best, score)
+                    break
+    return best
+
+
+nodes_strategy = st.lists(
+    st.tuples(st.floats(4e9, 32e9), st.floats(5e12, 40e12)),
+    min_size=2, max_size=5,
+).map(lambda lst: [DeviceNode(i, m, p) for i, (m, p) in enumerate(lst)])
+
+
+@given(nodes_strategy, st.floats(8e9, 60e9), st.integers(8, 48),
+       st.floats(0.0, 5.0))
+@settings(max_examples=40, deadline=None)
+def test_helr_matches_brute_force(nodes, model_mem, n_layers, a1):
+    n = len(nodes)
+    rng = np.random.default_rng(n)
+    lat = rng.uniform(1e-5, 1e-3, (n, n))
+    lat = ((lat + lat.T) / 2).tolist()
+    for i in range(n):
+        lat[i][i] = 0.0
+    cfg = HELRConfig(a1=a1, a2=1.0)
+    dm = helr(model_mem, n_layers, nodes, lat, cfg)
+    bf = brute_force(model_mem, n_layers, nodes, lat, cfg)
+    if bf == float("inf"):
+        assert not dm.path
+    else:
+        assert dm.path, "DP missed a feasible solution"
+        assert dm.est_latency <= bf * (1 + 1e-9)
+
+
+def test_helr_respects_memory():
+    nodes = [DeviceNode(0, 8e9, 30e12), DeviceNode(1, 8e9, 30e12)]
+    lat = [[0, 1e-4], [1e-4, 0]]
+    dm = helr(30e9, 28, nodes, lat)       # cannot fit
+    assert not dm.path
+    dm = helr(10e9, 28, nodes, lat)       # needs both devices
+    assert len([d for d in dm.path if dm.layers.get(d, 0) > 0]) == 2
+    assert sum(dm.layers.values()) == 28
+
+
+def test_he_minimizes_devices_lr_minimizes_latency():
+    # fast pair crosses a slow link; one big slow device also fits
+    nodes = [DeviceNode(0, 10e9, 40e12), DeviceNode(1, 10e9, 40e12),
+             DeviceNode(2, 20e9, 8e12)]
+    lat = [[0, 5e-2, 1e-4], [5e-2, 0, 1e-4], [1e-4, 1e-4, 0]]
+    dm_he = he(16e9, 32, nodes, lat)
+    used_he = [d for d in dm_he.path if dm_he.layers.get(d, 0) > 0]
+    assert len(used_he) == 1 and used_he[0] == 2       # fewest devices
+    dm_lr = lr(16e9, 32, nodes, lat)
+    assert dm_lr.path  # picks something; must avoid the 50ms link
+    t_he = sum(dm_he.layers.values())
+    assert t_he == 32
+
+
+def test_bgs_greedy_baseline():
+    nodes = [DeviceNode(0, 8e9, 10e12), DeviceNode(1, 8e9, 40e12)]
+    lat = [[0, 1e-4], [1e-4, 0]]
+    dm = bgs(12e9, 24, nodes, lat)
+    assert dm.path[0] == 1                 # fastest first
+
+
+def test_hierarchical_large_cluster():
+    n = 64                                  # > EXACT_DP_MAX -> hierarchical
+    nodes = [DeviceNode(i, 4e9, 20e12) for i in range(n)]
+    lat = [[0.0 if i == j else (1e-5 if i // 8 == j // 8 else 1e-3)
+            for j in range(n)] for i in range(n)]
+    dm = helr(64e9, 128, nodes, lat)
+    assert dm.path
+    assert sum(dm.layers.values()) == 128
+    used = [d for d in dm.path if dm.layers.get(d, 0) > 0]
+    assert len(used) >= 20                  # needs many devices for 64GB
+
+
+def test_helr_mesh_all_cells_feasible():
+    from repro.configs import cell_is_runnable, list_archs
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = cell_is_runnable(cfg, shape)
+            if not ok:
+                continue
+            mp = helr_mesh(cfg, shape)
+            assert mp.fits, (arch, shape.name, mp.name, mp.hbm_used / 2**30)
+
+
+def test_helr_mesh_prefers_cheaper_plan_for_small_models():
+    mp = helr_mesh(get_config("smollm-135m"), SHAPES["train_4k"])
+    # pure DP beats TP-16 for a 135M model on slow interconnect
+    assert mp.desc.tp == 1

@@ -1,0 +1,64 @@
+"""Flash-attention kernel sweeps: Pallas (interpret) and blocked-XLA vs the
+pure-jnp oracle across shapes, dtypes, GQA ratios, masking modes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_reference
+from repro.kernels.flash_attention.xla import flash_attention_xla
+
+CASES = [
+    # b, sq, skv, h, kv, d, causal, window, softcap, q_offset
+    (2, 64, 64, 4, 2, 16, True, None, None, 0),
+    (1, 37, 37, 3, 3, 8, True, None, None, 0),
+    (2, 64, 64, 4, 4, 16, True, 24, 50.0, 0),
+    (1, 1, 96, 4, 2, 16, True, None, None, 95),
+    (2, 48, 48, 2, 1, 32, False, None, None, 0),
+    (1, 128, 128, 8, 8, 64, True, None, None, 0),
+    (2, 33, 65, 4, 2, 16, True, None, None, 32),
+]
+
+
+def _gen(rng, b, sq, skv, h, kv, d, dtype):
+    q = rng.standard_normal((b, sq, h, d)).astype(dtype)
+    k = rng.standard_normal((b, skv, kv, d)).astype(dtype)
+    v = rng.standard_normal((b, skv, kv, d)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_flash_matches_oracle(rng, case, impl):
+    b, sq, skv, h, kv, d, causal, window, cap, qoff = case
+    q, k, v = _gen(rng, b, sq, skv, h, kv, d, np.float32)
+    kw = dict(causal=causal, window=window, softcap=cap, q_offset=qoff)
+    ref = flash_attention_reference(q, k, v, **kw)
+    if impl == "xla":
+        out = flash_attention_xla(q, k, v, q_block=16, kv_block=16, **kw)
+    else:
+        out = flash_attention_pallas(q, k, v, q_block=16, kv_block=16,
+                                     interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_dtypes(rng, dtype):
+    q, k, v = _gen(rng, 2, 64, 64, 4, 2, 32, np.float32)
+    q, k, v = (x.astype(dtype) for x in (q, k, v))
+    ref = flash_attention_reference(q, k, v, causal=True)
+    out = flash_attention_pallas(q, k, v, q_block=16, kv_block=32,
+                                 interpret=True, causal=True)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+    assert out.dtype == q.dtype
+
+
+def test_flash_block_size_invariance(rng):
+    q, k, v = _gen(rng, 1, 96, 96, 2, 2, 16, np.float32)
+    outs = [np.asarray(flash_attention_xla(q, k, v, q_block=qb, kv_block=kb))
+            for qb, kb in [(16, 16), (32, 96), (96, 32)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=2e-5, rtol=2e-5)

@@ -1,0 +1,61 @@
+"""Optimizers: both decrease a quadratic; adafactor state is factored
+(memory check); microbatched train step == full-batch step."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.training import (OptConfig, TrainConfig, init_opt_state,
+                            init_training, make_train_step)
+from repro.training.optimizer import apply_updates
+
+
+@pytest.mark.parametrize("kind", ["adamw", "adafactor"])
+def test_optimizer_decreases_quadratic(kind):
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((16, 32)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((16, 32))}
+    cfg = OptConfig(kind=kind, lr=0.05, weight_decay=0.0)
+    state = init_opt_state(params, cfg)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for step in range(60):
+        g = jax.grad(loss)(params)
+        params, state = apply_updates(params, g, state, float(step + 1), cfg)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((64, 128)), "b": jnp.zeros((128,))}
+    st = init_opt_state(params, OptConfig(kind="adafactor"))
+    assert st["vr"]["w"].shape == (64,)
+    assert st["vc"]["w"].shape == (128,)
+    assert st["vr"]["b"].shape == (128,)   # vectors keep full second moment
+    adam = init_opt_state(params, OptConfig(kind="adamw"))
+    n_adam = sum(x.size for x in jax.tree.leaves(adam))
+    n_af = sum(x.size for x in jax.tree.leaves(st))
+    assert n_af < n_adam / 20
+
+
+def test_microbatch_equals_fullbatch():
+    cfg = get_config("smollm-135m").reduced()
+    key = jax.random.PRNGKey(0)
+    tcfg1 = TrainConfig(opt=OptConfig(lr=1e-3), microbatches=1)
+    tcfg4 = TrainConfig(opt=OptConfig(lr=1e-3), microbatches=4)
+    params, opt = init_training(cfg, key, tcfg1, jnp.float32)
+    toks = jax.random.randint(key, (8, 16), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+             "mask": jnp.ones((8, 16))}
+    p1, _, m1 = make_train_step(cfg, None, tcfg1)(params, opt, batch,
+                                                  jnp.zeros((), jnp.int32))
+    p4, _, m4 = make_train_step(cfg, None, tcfg4)(params, opt, batch,
+                                                  jnp.zeros((), jnp.int32))
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=2e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-4)

@@ -1,0 +1,70 @@
+"""Resource profiler: bucket predictor learns the workload signal, online
+updates help, the monitor adapts memory reservations."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.monitor import Monitor
+from repro.core.profiler import (LengthPredictor, PredictorConfig,
+                                 ResourceProfiler, make_buckets)
+from repro.data.workload import WorkloadConfig, gen_requests, train_pairs
+
+
+@pytest.fixture(scope="module")
+def trained_predictor():
+    pred = LengthPredictor(PredictorConfig(), seed=0)
+    toks, lens = train_pairs(WorkloadConfig(), 768, seed=1)
+    acc = pred.fit(toks, lens, epochs=20)
+    return pred, acc
+
+
+def test_buckets_monotone():
+    b = make_buckets(10, 1024)
+    assert (np.diff(b) > 0).all()
+    assert b[-1] == 1024
+
+
+def test_predictor_learns(trained_predictor):
+    pred, acc = trained_predictor
+    assert acc > 0.9, f"train accuracy {acc}"
+    toks, lens = train_pairs(WorkloadConfig(), 256, seed=99)
+    holdout = pred.accuracy(toks, lens)
+    assert holdout > 0.5, f"holdout accuracy {holdout}"
+
+
+def test_profiler_attaches_estimates(trained_predictor):
+    pred, _ = trained_predictor
+    prof = ResourceProfiler(copy.deepcopy(pred), get_config("chatglm2-6b"))
+    reqs = gen_requests(WorkloadConfig(n_requests=16, seed=5))
+    prof.profile(reqs)
+    for r in reqs:
+        assert r.predicted_output_len is not None
+        assert r.kv_bytes_estimate > 0
+
+
+def test_online_update_moves_prediction(trained_predictor):
+    pred, _ = trained_predictor
+    pred = copy.deepcopy(pred)
+    toks = list(np.random.default_rng(0).integers(200, 900, size=64))
+    b0, _ = pred.predict(toks)
+    target_len = int(pred.buckets[-1])
+    for _ in range(50):
+        pred.online_update(toks, target_len)
+    b1, _ = pred.predict(toks)
+    assert b1 >= b0    # moved toward the long bucket
+
+
+def test_monitor_adjusts_memory(trained_predictor):
+    pred, _ = trained_predictor
+    prof = ResourceProfiler(copy.deepcopy(pred), get_config("chatglm2-6b"))
+    mon = Monitor(prof, update_on_miss=False)
+    reqs = gen_requests(WorkloadConfig(n_requests=32, seed=6))
+    prof.profile(reqs)
+    for r in reqs:                     # force systematic under-prediction
+        r.predicted_output_len = max(1, r.true_output_len // 4)
+        r.predicted_bucket = 0
+        mon.observe(r)
+    assert prof.memory_adjust > 1.0
+    assert mon.stats.observed == 32

@@ -1,0 +1,98 @@
+"""SLO-ODBS scheduler: unit behaviour + hypothesis property tests of the
+system invariants (conservation, capacity, memory, ordering)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (SchedulerConfig, fifo, odbs, s3_binpack,
+                                  slo_dbs, slo_odbs)
+from repro.core.types import Batch, Request
+
+
+def mk_req(i, slo, out_len, in_len=32, kv=1e6, arrival=0.0):
+    return Request(rid=i, tokens=[1] * in_len, input_len=in_len, slo=slo,
+                   arrival=arrival, true_output_len=out_len,
+                   predicted_output_len=out_len, kv_bytes_estimate=kv)
+
+
+reqs_strategy = st.lists(
+    st.tuples(st.floats(1.0, 350.0), st.integers(1, 1024),
+              st.integers(1, 256)),
+    min_size=1, max_size=60,
+).map(lambda lst: [mk_req(i, slo, out, inl)
+                   for i, (slo, out, inl) in enumerate(lst)])
+
+
+@given(reqs_strategy, st.floats(1e3, 1e6), st.floats(0.0, 2.0),
+       st.floats(0.0, 2.0))
+@settings(max_examples=60, deadline=None)
+def test_conservation_and_caps(reqs, threshold, w1, w2):
+    """Every request scheduled exactly once; no batch exceeds the dynamic cap,
+    the hardware cap, or the memory budget."""
+    cfg = SchedulerConfig(w1=w1, w2=w2, threshold=threshold, max_batch=16,
+                          memory_budget=64e6)
+    batches = slo_odbs(reqs, cfg)
+    seen = [r.rid for b in batches for r in b.requests]
+    assert sorted(seen) == sorted(r.rid for r in reqs)
+    for b in batches:
+        assert 1 <= len(b) <= cfg.max_batch
+        assert sum(r.kv_bytes_estimate for r in b.requests) <= \
+            cfg.memory_budget + max(r.kv_bytes_estimate for r in b.requests)
+
+
+@given(reqs_strategy)
+@settings(max_examples=30, deadline=None)
+def test_slo_ordering(reqs):
+    """SLO-ODBS emits batches in non-decreasing min-SLO order (tightest
+    deadlines first) — the property that drives the low violation rate."""
+    cfg = SchedulerConfig()
+    batches = slo_odbs(reqs, cfg)
+    mins = [b.min_slo for b in batches]
+    assert all(mins[i] <= mins[i + 1] + 1e-9 for i in range(len(mins) - 1))
+
+
+@given(reqs_strategy)
+@settings(max_examples=30, deadline=None)
+def test_all_schedulers_conserve(reqs):
+    cfg = SchedulerConfig()
+    for fn in (slo_dbs, odbs, s3_binpack, fifo):
+        batches = fn(reqs, cfg)
+        seen = sorted(r.rid for b in batches for r in b.requests)
+        assert seen == sorted(r.rid for r in reqs), fn.__name__
+
+
+def test_odbs_groups_similar_lengths():
+    """The paper's Fig. 3 point: grouping by predicted output length cuts the
+    padded token count vs FIFO on a bimodal workload."""
+    reqs = []
+    for i in range(16):
+        reqs.append(mk_req(i, slo=100 + i, out_len=16 if i % 2 == 0 else 512))
+    cfg = SchedulerConfig(max_batch=8, threshold=3e4)
+    fifo_batches = fifo(reqs, cfg, batch_size=8)
+    odbs_batches = odbs(reqs, cfg)
+    waste = lambda bs: sum(b.padding_waste for b in bs)
+    assert waste(odbs_batches) < waste(fifo_batches)
+
+
+def test_threshold_splits_batches():
+    reqs = [mk_req(i, slo=300.0, out_len=1000) for i in range(32)]
+    small = slo_odbs(reqs, SchedulerConfig(threshold=5e3))
+    large = slo_odbs(reqs, SchedulerConfig(threshold=5e7))
+    assert len(small) > len(large)
+
+
+def test_memory_budget_respected():
+    cfg = SchedulerConfig(memory_budget=10e6, threshold=1e12, max_batch=64)
+    reqs = [mk_req(i, slo=10.0, out_len=10, kv=4e6) for i in range(12)]
+    batches = slo_odbs(reqs, cfg)
+    for b in batches:
+        assert len(b) <= 3   # 3*4e6 > 10e6 would exceed
+
+
+def test_batch_metrics():
+    b = Batch(requests=[mk_req(0, 1.0, 10, in_len=5),
+                        mk_req(1, 2.0, 30, in_len=15)])
+    assert b.padded_input == 15
+    assert b.padded_output == 30
+    assert b.total_tokens == 2 * (15 + 30)
+    assert b.padding_waste == 2 * 45 - (5 + 10) - (15 + 30)

@@ -1,0 +1,126 @@
+"""Serving runtime: padded vs continuous engine equivalence on real JAX
+models, simulator end-to-end sanity, and the UELLM-vs-baseline orderings the
+paper claims (directionally, on the simulated paper cluster)."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (LengthPredictor, Monitor, ResourceProfiler, bgs,
+                        get_scheduler, helr)
+from repro.core.profiler import PredictorConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.core.types import Batch, DeviceNode
+from repro.data.workload import WorkloadConfig, gen_requests, train_pairs
+from repro.models import api
+from repro.serving import (EngineConfig, InferenceEngine, LatencyModel,
+                           morphling_deploy_overhead, paper_cluster, simulate)
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    cfg = get_config("smollm-135m").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = InferenceEngine(cfg, params,
+                          EngineConfig(max_batch=4, cache_len=64,
+                                       max_new_tokens=12))
+    return cfg, eng
+
+
+def _reqs(cfg, n=6, out_max=8):
+    reqs = gen_requests(WorkloadConfig(n_requests=n, seed=5,
+                                       vocab=cfg.vocab_size))
+    for r in reqs:
+        r.tokens = [t % cfg.vocab_size for t in r.tokens[:10]]
+        r.input_len = len(r.tokens)
+        r.true_output_len = min(r.true_output_len % out_max + 1, out_max)
+    return reqs
+
+
+def test_padded_engine_runs(small_engine):
+    cfg, eng = small_engine
+    reqs = _reqs(cfg, 4)
+    res = eng.run_batch(Batch(requests=reqs),
+                        true_lens={r.rid: r.true_output_len for r in reqs})
+    for r in reqs:
+        assert len(res.outputs[r.rid]) == r.true_output_len
+    assert res.steps == max(r.true_output_len for r in reqs)
+
+
+def test_continuous_matches_padded_tokens(small_engine):
+    """Same greedy model -> identical generated tokens under padded and
+    continuous batching for requests admitted in the first wave."""
+    cfg, eng = small_engine
+    reqs = _reqs(cfg, 4)
+    tl = {r.rid: r.true_output_len for r in reqs}
+    res_p = eng.run_batch(Batch(requests=reqs), true_lens=tl)
+    res_c = eng.run_continuous(reqs)
+    for r in reqs:
+        assert res_p.outputs[r.rid] == res_c.outputs[r.rid], r.rid
+
+
+def test_continuous_slot_reuse(small_engine):
+    cfg, eng = small_engine
+    reqs = _reqs(cfg, 7)           # > max_batch=4 -> slots must recycle
+    res = eng.run_continuous(reqs)
+    assert set(res.outputs) == {r.rid for r in reqs}
+    for r in reqs:
+        assert len(res.outputs[r.rid]) == min(r.true_output_len, 12)
+
+
+# ----------------------------------------------------------------- simulator
+
+@pytest.fixture(scope="module")
+def sim_setup():
+    model = get_config("chatglm2-6b")
+    pred = LengthPredictor(PredictorConfig(), seed=0)
+    toks, lens = train_pairs(WorkloadConfig(), 512, seed=1)
+    pred.fit(toks, lens, epochs=12)
+    perf = [35e12, 25e12, 30e12, 15e12]     # fastest pair spans a NODE link
+    nodes = [DeviceNode(i, memory=10e9, performance=perf[i]) for i in range(4)]
+    pix, nd = 5e-5, 2e-4
+    lat = [[0, pix, nd, nd], [pix, 0, nd, nd],
+           [nd, nd, 0, pix], [nd, nd, pix, 0]]
+    wl = gen_requests(WorkloadConfig(n_requests=96, arrival_rate=24.0, seed=7))
+    return model, pred, nodes, lat, wl
+
+
+def _run(sim_setup, sched, deploy, overhead=0.0):
+    model, pred, nodes, lat, wl = sim_setup
+    prof = ResourceProfiler(copy.deepcopy(pred), model)
+    mon = Monitor(prof)
+    rs = [copy.deepcopy(r) for r in wl]
+    return simulate(rs, model, get_scheduler(sched), SchedulerConfig(),
+                    profiler=prof, monitor=mon, deploy=deploy,
+                    deploy_overhead=overhead, nodes=nodes, latency=lat)
+
+
+def test_simulator_conserves_requests(sim_setup):
+    out = _run(sim_setup, "slo-odbs", helr)
+    assert all(r.finish_time is not None for r in out.requests)
+    assert out.throughput > 0
+    assert 0 <= out.slo_violation_rate <= 1
+
+
+def test_ua_beats_fifo_on_slo(sim_setup):
+    ua = _run(sim_setup, "slo-odbs", helr)
+    fifo_ = _run(sim_setup, "fifo", helr)
+    assert ua.slo_violation_rate <= fifo_.slo_violation_rate + 1e-9
+
+
+def test_helr_not_worse_than_bgs(sim_setup):
+    ua = _run(sim_setup, "slo-odbs", helr)
+    ub = _run(sim_setup, "slo-odbs", bgs)
+    assert ua.avg_latency <= ub.avg_latency * 1.05
+
+
+def test_morphling_overhead_costs_latency(sim_setup):
+    model, pred, nodes, lat, wl = sim_setup
+    oh = morphling_deploy_overhead(model, nodes, lat)
+    assert oh > 0
+    mor = _run(sim_setup, "fifo", helr, overhead=oh)
+    ud = _run(sim_setup, "fifo", helr)
+    assert mor.avg_latency > ud.avg_latency
