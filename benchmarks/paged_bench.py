@@ -1,0 +1,96 @@
+"""Paged-vs-contiguous serving benchmarks: (1) decode-attention microbench —
+the block-table gather path against the contiguous cache path at equal
+logical length; (2) end-to-end engine comparison — padded batch serving vs
+paged continuous batching on the reduced model (tokens/s and the KV-memory
+gauges recorded in EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, emit, timeit
+from repro.configs import get_config
+from repro.core.types import Batch
+from repro.data.workload import WorkloadConfig, gen_requests
+from repro.kernels.decode_attention.xla import decode_attention_xla
+from repro.kernels.paged_attention.xla import paged_decode_attention_xla
+from repro.models import api
+from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
+                           PagedEngineConfig)
+
+
+def _kernel_micro(rows: dict) -> None:
+    rng = np.random.default_rng(0)
+    b, s, h, kv, d, bs = 8, 2048, 8, 2, 64, 16
+    nb = s // bs
+    q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+    kl = jnp.full((b,), s, jnp.int32)
+    f = jax.jit(lambda q, k, v, l: decode_attention_xla(q, k, v, l))
+    us_c = timeit(lambda: jax.block_until_ready(f(q, k, v, kl)), n=10)
+
+    kp = jnp.asarray(rng.standard_normal((b * nb + 1, bs, kv, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((b * nb + 1, bs, kv, d)), jnp.float32)
+    bt = jnp.asarray(1 + np.arange(b * nb).reshape(b, nb), jnp.int32)
+    g = jax.jit(lambda q, kp, vp, bt, l: paged_decode_attention_xla(
+        q, kp, vp, bt, l))
+    us_p = timeit(lambda: jax.block_until_ready(g(q, kp, vp, bt, kl)), n=10)
+    rows["decode_2k_contiguous"] = {"us": us_c}
+    rows["decode_2k_paged_xla"] = {"us": us_p,
+                                   "gather_overhead": us_p / max(us_c, 1e-9)}
+    csv_row("paged_kernel_decode_2k", us_p,
+            f"contiguous_us={us_c:.1f},overhead_x={us_p/max(us_c,1e-9):.2f}")
+
+
+def _engine_e2e(rows: dict) -> None:
+    cfg = get_config("smollm-135m").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    reqs = gen_requests(WorkloadConfig(n_requests=12, seed=3,
+                                       vocab=cfg.vocab_size))
+    for r in reqs:
+        r.tokens = [t % cfg.vocab_size for t in r.tokens[:12]]
+        r.input_len = len(r.tokens)
+        r.true_output_len = r.true_output_len % 10 + 1
+
+    eng = InferenceEngine(cfg, params, EngineConfig(
+        max_batch=4, cache_len=64, max_new_tokens=12))
+    # one warmup pass so both engines are timed with warm jit caches
+    for warm in (True, False):
+        toks = 0
+        t_pad = 0.0
+        for i in range(0, len(reqs), 4):
+            b = Batch(requests=reqs[i:i + 4])
+            res = eng.run_batch(b, true_lens={r.rid: r.true_output_len
+                                              for r in b.requests})
+            t_pad += res.prefill_s + res.decode_s
+            toks += sum(len(v) for v in res.outputs.values())
+    # warmed-up paged engine (jit caches shared across the two runs)
+    peng = PagedEngine(cfg, params, PagedEngineConfig(
+        max_batch=4, block_size=8, n_blocks=64, max_seq_len=64,
+        max_new_tokens=12))
+    peng.run_continuous(reqs)
+    res_p = peng.run_continuous(reqs)
+    t_paged = res_p.prefill_s + res_p.decode_s
+    toks_p = sum(len(v) for v in res_p.outputs.values())
+    rows["engine_padded"] = {"tok_s": toks / max(t_pad, 1e-9)}
+    rows["engine_paged"] = {
+        "tok_s": toks_p / max(t_paged, 1e-9),
+        "kv_utilization": res_p.kv_utilization,
+        "waste_vs_padded": res_p.waste_vs_padded,
+        "prefill_tokens": res_p.prefill_tokens,
+        "admission_waves": res_p.admission_waves,
+    }
+    csv_row("paged_engine_tok_s", t_paged * 1e6 / max(toks_p, 1),
+            f"paged_tok_s={toks_p/max(t_paged,1e-9):.1f},"
+            f"padded_tok_s={toks/max(t_pad,1e-9):.1f},"
+            f"waste_vs_padded={res_p.waste_vs_padded:.3f}")
+
+
+def run() -> dict:
+    rows: dict = {}
+    _kernel_micro(rows)
+    _engine_e2e(rows)
+    emit("paged_bench", rows)
+    return rows

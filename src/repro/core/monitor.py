@@ -17,10 +17,25 @@ class MonitorStats:
     overpredict_tokens: int = 0
     underpredict_tokens: int = 0
     online_updates: int = 0
+    # --- paged-KV gauges (fed by PagedEngine.run_continuous) ---
+    kv_samples: int = 0
+    kv_util_sum: float = 0.0
+    kv_waste_sum: float = 0.0
 
     @property
     def bucket_accuracy(self) -> float:
         return self.bucket_hits / self.observed if self.observed else 0.0
+
+    @property
+    def kv_utilization(self) -> float:
+        """Mean valid-token / allocated-block-slot ratio of the paged pool."""
+        return self.kv_util_sum / self.kv_samples if self.kv_samples else 0.0
+
+    @property
+    def kv_waste_vs_padded(self) -> float:
+        """Mean memory saved vs per-slot max-length reservation (the padding
+        regime the paper's Fig. 3 counts tokens for)."""
+        return self.kv_waste_sum / self.kv_samples if self.kv_samples else 0.0
 
 
 class Monitor:
@@ -54,9 +69,17 @@ class Monitor:
                 (1 - self.ewma) * self.profiler.memory_adjust
                 + self.ewma * max(ratio, 1.0))
 
+    def observe_kv(self, utilization: float, waste_vs_padded: float) -> None:
+        """Called by the paged serving runtime with its pool gauges so KV
+        efficiency lands next to the prediction-quality feedback loop."""
+        st = self.stats
+        st.kv_samples += 1
+        st.kv_util_sum += utilization
+        st.kv_waste_sum += waste_vs_padded
+
     def metrics(self) -> dict:
         st = self.stats
-        return {
+        out = {
             "observed": st.observed,
             "bucket_accuracy": st.bucket_accuracy,
             "online_updates": st.online_updates,
@@ -64,3 +87,7 @@ class Monitor:
             "under_tokens": st.underpredict_tokens,
             "memory_adjust": self.profiler.memory_adjust,
         }
+        if st.kv_samples:
+            out["kv_utilization"] = round(st.kv_utilization, 4)
+            out["kv_waste_vs_padded"] = round(st.kv_waste_vs_padded, 4)
+        return out

@@ -1,0 +1,32 @@
+"""Dispatching wrapper for paged decode attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.backend import get_backend
+from repro.kernels.paged_attention.ref import paged_decode_attention_reference
+from repro.kernels.paged_attention.xla import paged_decode_attention_xla
+from repro.kernels.paged_attention.paged_attention import (
+    paged_decode_attention_pallas)
+
+__all__ = ["paged_decode_attention"]
+
+
+def paged_decode_attention(
+    q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray, kv_len: jnp.ndarray,
+    *, softcap: Optional[float] = None, scale: Optional[float] = None,
+) -> jnp.ndarray:
+    backend = get_backend()
+    kw = dict(softcap=softcap, scale=scale)
+    if backend == "naive":
+        return paged_decode_attention_reference(
+            q, k_pool, v_pool, block_tables, kv_len, **kw)
+    if backend == "xla":
+        return paged_decode_attention_xla(
+            q, k_pool, v_pool, block_tables, kv_len, **kw)
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, block_tables, kv_len,
+        interpret=(backend == "pallas_interpret"), **kw)

@@ -1,0 +1,130 @@
+"""Paged flash-decoding Pallas TPU kernel: one query token per sequence
+attends to a KV cache scattered across fixed-size physical blocks, addressed
+through a ``[B, nb]`` block table.
+
+Grid (batch, kv_head, logical_block); the K/V BlockSpec index maps read the
+block table via scalar prefetch — ``(bt[b, i], 0, h, 0)`` — so the DMA engine
+fetches exactly the physical block that logical slot ``i`` of sequence ``b``
+owns.  No contiguous copy of the cache ever exists: this is the PagedAttention
+memory model with the flash-decoding online softmax of
+``decode_attention.decode_attention_pallas`` (same (m, l, acc) VMEM scratch
+carried across the block sweep; tail blocks past ``kv_len`` are skipped).
+
+Block-table entries past a sequence's last block must still be *valid*
+physical indices (the serving runtime pads rows with a reserved null block) —
+they are masked out, but the index map dereferences them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(kv_len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float,
+                  softcap: Optional[float], block_size: int, nb: int,
+                  g_pad: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    kv_len = kv_len_ref[bi]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = ki * block_size
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32) * scale      # [g_pad, d]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)              # [bs, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (g_pad, block_size), 1)
+        mask = k_pos < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * corr + p.sum(axis=-1, keepdims=True)
+        m_ref[:, :1] = m_new
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ki == nb - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("softcap", "scale", "interpret"))
+def paged_decode_attention_pallas(
+    q: jnp.ndarray,              # [B, H, D]
+    k_pool: jnp.ndarray,         # [N, bs, KV, D]
+    v_pool: jnp.ndarray,         # [N, bs, KV, Dv]
+    block_tables: jnp.ndarray,   # [B, nb] int32 (pad rows with a valid block)
+    kv_len: jnp.ndarray,         # [B] int32
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    _, bs, kv, dv = v_pool.shape
+    nb = block_tables.shape[1]
+    group = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    g_pad = max(8, group)
+
+    qg = q.reshape(b, kv, group, d)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, softcap=softcap, block_size=bs, nb=nb,
+        g_pad=g_pad)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # kv_len, block_tables
+        grid=(b, kv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, d),
+                         lambda bi, hi, ki, kvl, bt: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d),
+                         lambda bi, hi, ki, kvl, bt: (bt[bi, ki], 0, hi, 0)),
+            pl.BlockSpec((1, bs, 1, dv),
+                         lambda bi, hi, ki, kvl, bt: (bt[bi, ki], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, dv),
+                               lambda bi, hi, ki, kvl, bt: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+            pltpu.VMEM((g_pad, dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g_pad, dv), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), block_tables.astype(jnp.int32),
+      qg, k_pool, v_pool)
+    return out[:, :, :group, :].reshape(b, h, dv)

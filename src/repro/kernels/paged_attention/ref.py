@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention: gather the block-table view
+into a contiguous cache and defer to the decode_attention oracle.  Tests only.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_reference
+
+
+def gather_pool(pool: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """[N, bs, KV, d] pool + [B, nb] table -> contiguous [B, nb*bs, KV, d]."""
+    b, nb = block_tables.shape
+    _, bs, kv, d = pool.shape
+    return pool[block_tables].reshape(b, nb * bs, kv, d)
+
+
+def paged_decode_attention_reference(
+    q: jnp.ndarray,              # [B, H, D]  (one new token)
+    k_pool: jnp.ndarray,         # [N, bs, KV, D]   paged K pool
+    v_pool: jnp.ndarray,         # [N, bs, KV, Dv]
+    block_tables: jnp.ndarray,   # [B, nb] int32 — physical block per logical slot
+    kv_len: jnp.ndarray,         # [B] int32 — valid cache entries per sequence
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    k = gather_pool(k_pool, block_tables)
+    v = gather_pool(v_pool, block_tables)
+    return decode_attention_reference(q, k, v, kv_len, softcap=softcap,
+                                      scale=scale)

@@ -1,0 +1,35 @@
+"""Paged decode attention in plain XLA: one dense gather through the block
+table materializes the contiguous view, then the same masked partial-softmax
+math as decode_attention_xla.  CPU + dry-run default and the TPU fallback —
+the Pallas kernel avoids the materialized gather entirely.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.xla import decode_attention_partial
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale"))
+def paged_decode_attention_xla(
+    q: jnp.ndarray,              # [B, H, D]
+    k_pool: jnp.ndarray,         # [N, bs, KV, D]
+    v_pool: jnp.ndarray,         # [N, bs, KV, Dv]
+    block_tables: jnp.ndarray,   # [B, nb] int32
+    kv_len: jnp.ndarray,         # [B] int32
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, nb = block_tables.shape
+    _, bs, kv, dv = v_pool.shape
+    k = k_pool[block_tables].reshape(b, nb * bs, kv, -1)
+    v = v_pool[block_tables].reshape(b, nb * bs, kv, dv)
+    acc, m, l = decode_attention_partial(q, k, v, kv_len, softcap=softcap,
+                                         scale=scale)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

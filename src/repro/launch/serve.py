@@ -3,6 +3,9 @@
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --requests 12 --scheduler slo-odbs
 
+``--paged`` serves through the paged continuous-batching runtime instead
+(block-table KV, per-prompt prefill, allocator-gated admission); the pool is
+sized from ``--kv-budget`` bytes — the same budget surface SLO-ODBS uses.
 On a TPU pod this runs under the production mesh with the HELR-mesh plan;
 on CPU (--reduced) it serves the reduced config end-to-end.
 """
@@ -20,7 +23,8 @@ from repro.core import (LengthPredictor, Monitor, ResourceProfiler,
 from repro.core.profiler import PredictorConfig
 from repro.data.workload import WorkloadConfig, gen_requests, train_pairs
 from repro.models import api
-from repro.serving import EngineConfig, InferenceEngine
+from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
+                           PagedEngineConfig)
 
 
 def main():
@@ -32,6 +36,10 @@ def main():
                     choices=["slo-odbs", "slo-dbs", "odbs", "fifo", "s3"])
     ap.add_argument("--continuous", action="store_true",
                     help="beyond-paper continuous batching mode")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged continuous batching (block-table KV cache)")
+    ap.add_argument("--kv-budget", type=float, default=2e6,
+                    help="paged KV pool budget in bytes (shared with SLO-ODBS)")
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
 
@@ -61,7 +69,25 @@ def main():
     prof.profile(reqs)
 
     t0 = time.perf_counter()
-    if args.continuous:
+    if args.paged:
+        # size the block tables for the longest admitted prompt plus the
+        # decode budget so any --max-new value is admissible
+        max_prompt = max(len(r.tokens) for r in reqs)
+        max_seq = max(64, -(-(max_prompt + args.max_new) // 8) * 8)
+        pcfg = PagedEngineConfig.from_memory_budget(
+            cfg, args.kv_budget, max_batch=4, block_size=8,
+            max_seq_len=max_seq, max_new_tokens=args.max_new)
+        print(f"paged pool: {pcfg.n_blocks} blocks x {pcfg.block_size} slots "
+              f"({args.kv_budget:.0f} B budget)")
+        paged = PagedEngine(cfg, params, pcfg, monitor=mon)
+        res = paged.run_continuous(sorted(reqs, key=lambda r: r.arrival))
+        done = res.outputs
+        print(f"paged: {res.admission_waves} admission waves, "
+              f"prefill_tokens={res.prefill_tokens}, "
+              f"peak_blocks={res.peak_blocks}, "
+              f"kv_util={res.kv_utilization:.3f}, "
+              f"waste_vs_padded={res.waste_vs_padded:.3f}")
+    elif args.continuous:
         res = engine.run_continuous(sorted(reqs, key=lambda r: r.arrival))
         done = res.outputs
     else:

@@ -44,6 +44,58 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, kv_len, *, plan=None):
     return T.lm_decode_step(cfg, params, tokens, cache, kv_len, plan=plan)
 
 
+# -------------------------------------------------------------- paged decode
+
+def paged_decode_step(cfg: ModelConfig, params, tokens, pools, block_tables,
+                      kv_len, *, plan=None):
+    """Decode one token per sequence against paged KV pools (block-table
+    addressed; see kernels.paged_attention).  tokens [B, 1]; block_tables
+    [B, nb] int32; kv_len [B]."""
+    if cfg.is_encdec:
+        raise NotImplementedError("paged decode: enc-dec uses cross caches")
+    return T.lm_paged_decode_step(cfg, params, tokens, pools, block_tables,
+                                  kv_len, plan=plan)
+
+
+def paged_compatible(cfg: ModelConfig) -> tuple[bool, str]:
+    """Whether the architecture's decode cache can live in paged KV blocks:
+    every mixer a full-attention GQA layer (no MLA latents, no sliding-window
+    ring buffers, no mamba/rwkv recurrent state, no enc-dec cross cache)."""
+    if cfg.is_encdec:
+        return False, "enc-dec cross-attention cache is not paged"
+    if cfg.mla is not None:
+        return False, "MLA decodes from the compressed latent cache"
+    for spec in cfg.layer_plan():
+        if spec.mixer != "attn":
+            return False, f"{spec.mixer} state is recurrent, not a KV cache"
+        if spec.attn == "window" and cfg.sliding_window:
+            return False, "sliding-window layers use the ring cache"
+    return True, ""
+
+
+def init_paged_pools(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    """Zero-initialized paged K/V pools mirroring the decode-cache tree:
+    {"l{i}": {"mixer": {"k": [n_groups, n_blocks, bs, KV, hd], "v": ...}}} —
+    the same stacked layer-group layout lax.scan consumes, with the per-
+    sequence (b, s) axes replaced by the physical (n_blocks, block_size)
+    pool axes shared by every sequence."""
+    ok, why = paged_compatible(cfg)
+    if not ok:
+        raise ValueError(f"{cfg.name}: {why}")
+    from repro.models.transformer import group_period
+    period = group_period(cfg)
+    n_groups = cfg.n_layers // period
+    kv, hd, dv = cfg.n_kv_heads, cfg.head_dim_eff, cfg.v_head_dim_eff
+    pools = {}
+    for i in range(period):
+        pools[f"l{i}"] = {"mixer": {
+            "k": jnp.zeros((n_groups, n_blocks, block_size, kv, hd), dtype),
+            "v": jnp.zeros((n_groups, n_blocks, block_size, kv, dv), dtype),
+        }}
+    return pools
+
+
 # ----------------------------------------------------------------- dry-run IO
 
 def _frames_len(cfg: ModelConfig, shape: ShapeConfig) -> int:

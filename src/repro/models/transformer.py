@@ -71,13 +71,22 @@ def block_init(cfg: ModelConfig, spec: LayerSpec, key, dtype):
 
 
 def block_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions, plan,
-                cache, kv_len, mode: str, cache_len: int):
-    """Returns (x, new_cache_entry, aux)."""
+                cache, kv_len, mode: str, cache_len: int, block_tables=None):
+    """Returns (x, new_cache_entry, aux).  When ``block_tables`` is given the
+    decode path reads/writes the paged KV pool instead of a contiguous cache
+    (attention layers only; gated by api.paged_compatible)."""
     aux = {}
     h = apply_norm(cfg, p["norm1"], x)
     new_cache = {}
+    if block_tables is not None and spec.mixer != "attn":
+        raise NotImplementedError(
+            f"paged decode only supports attention mixers, got {spec.mixer}")
     if spec.mixer == "attn":
-        if mode == "decode":
+        if mode == "decode" and block_tables is not None:
+            mx, c = attn.attn_paged_decode(cfg, spec, p["mixer"], h,
+                                           cache["mixer"], block_tables,
+                                           kv_len, plan=plan)
+        elif mode == "decode":
             mx, c = attn.attn_decode(cfg, spec, p["mixer"], h, cache["mixer"],
                                      kv_len, plan=plan)
         else:
@@ -162,7 +171,8 @@ def init_params(cfg: ModelConfig, key, dtype=None):
 
 
 def apply_stack(cfg: ModelConfig, params, x, *, positions, plan, mode: str,
-                cache=None, kv_len=None, cache_len: int = 0):
+                cache=None, kv_len=None, cache_len: int = 0,
+                block_tables=None):
     """Run all layer groups.  Returns (x, new_cache, aux)."""
     period = group_period(cfg)
     specs = cfg.layer_plan()[:period]
@@ -175,7 +185,8 @@ def apply_stack(cfg: ModelConfig, params, x, *, positions, plan, mode: str,
             c_i = gc[f"l{i}"] if gc is not None else None
             xc, nc, aux = block_apply(
                 cfg, specs[i], gp[f"l{i}"], xc, positions=positions, plan=plan,
-                cache=c_i, kv_len=kv_len, mode=mode, cache_len=cache_len)
+                cache=c_i, kv_len=kv_len, mode=mode, cache_len=cache_len,
+                block_tables=block_tables)
             if nc is not None:
                 new_gc[f"l{i}"] = nc
             if "lb_loss" in aux:
@@ -321,3 +332,16 @@ def lm_decode_step(cfg: ModelConfig, params, tokens, cache, kv_len, *, plan=None
                                   mode="decode", cache=cache, kv_len=kv_len)
     x = apply_norm(cfg, params["final_norm"], x)
     return lm_head(cfg, params, x[:, 0]), new_cache
+
+
+def lm_paged_decode_step(cfg: ModelConfig, params, tokens, pools,
+                         block_tables, kv_len, *, plan=None):
+    """One decode step against paged KV pools.  tokens [B, 1]; pools: the
+    stacked layer-group tree from api.init_paged_pools; block_tables [B, nb];
+    kv_len [B].  Returns (logits [B, Vp], new_pools)."""
+    x = embed_tokens(cfg, params, tokens)
+    x, new_pools, _ = apply_stack(cfg, params, x, positions=None, plan=plan,
+                                  mode="decode", cache=pools, kv_len=kv_len,
+                                  block_tables=block_tables)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_head(cfg, params, x[:, 0]), new_pools

@@ -1,4 +1,9 @@
 from repro.serving.engine import BatchResult, EngineConfig, InferenceEngine  # noqa: F401
+from repro.serving.kv_cache import (BlockAllocator, PagedKVCache,  # noqa: F401
+                                    PagedKVConfig)
+from repro.serving.paged_engine import (PagedBatchResult,  # noqa: F401
+                                        PagedDecodeState, PagedEngine,
+                                        PagedEngineConfig, kv_block_bytes)
 from repro.serving.simulator import (LatencyModel, SimResult,  # noqa: F401
                                      morphling_deploy_overhead, paper_cluster,
                                      simulate)

@@ -10,9 +10,10 @@ Host-side block allocator + device-side paged layout:
   is exactly the padding-waste UELLM's scheduler also attacks (the two
   compose: SLO-ODBS shapes the batch, paging shapes the memory).
 
-``gather_cache`` materializes a sequence's contiguous view for the
-(non-paged) decode kernels; a paged Pallas decode kernel would read through
-the block table directly — left as the recorded next step in EXPERIMENTS §Perf.
+``gather`` materializes a sequence's contiguous view for the (non-paged)
+decode kernels; the paged Pallas decode kernel (kernels.paged_attention)
+reads through the block table directly, and serving.paged_engine drives it —
+see EXPERIMENTS.md §Perf for the design record and bench numbers.
 """
 from __future__ import annotations
 
@@ -79,17 +80,18 @@ class PagedKVCache:
             self.alloc.alloc(seq_id, -(-need // bs))
 
     def append(self, seq_id: int, k_new: jnp.ndarray, v_new: jnp.ndarray):
-        """k_new/v_new: [T, KV, hd] appended at the sequence tail."""
+        """k_new/v_new: [T, KV, hd] appended at the sequence tail — a single
+        scatter over (block, offset) index arrays, not one dispatch/token."""
         t = k_new.shape[0]
         pos = self.lengths.get(seq_id, 0)
         self.ensure_capacity(seq_id, pos + t)
         bs = self.cfg.block_size
-        table = self.alloc.tables[seq_id]
-        for i in range(t):
-            p = pos + i
-            blk, off = table[p // bs], p % bs
-            self.k = self.k.at[blk, off].set(k_new[i])
-            self.v = self.v.at[blk, off].set(v_new[i])
+        table = np.asarray(self.alloc.tables[seq_id], np.int32)
+        p = pos + np.arange(t)
+        blk = jnp.asarray(table[p // bs])
+        off = jnp.asarray((p % bs).astype(np.int32))
+        self.k = self.k.at[blk, off].set(k_new)
+        self.v = self.v.at[blk, off].set(v_new)
         self.lengths[seq_id] = pos + t
 
     def gather(self, seq_id: int) -> tuple[jnp.ndarray, jnp.ndarray, int]:

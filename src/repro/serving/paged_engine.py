@@ -1,0 +1,335 @@
+"""Paged continuous-batching inference engine.
+
+``InferenceEngine.run_continuous`` re-prefills the *entire* slot set on every
+admission wave (padded wave prefill, all decode state discarded); this engine
+is the production-shaped alternative the paper's batch shaping composes with:
+
+* KV lives in fixed-size physical blocks (``kernels.paged_attention``); each
+  slot owns an ordered block list from a single ``BlockAllocator`` — O(1)
+  alloc/free, no per-slot max-length reservation;
+* newly admitted sequences are prefilled **individually** (batch of one,
+  padded only to the block boundary) and their prompt K/V scattered into
+  their blocks while resident slots keep decoding — prefill FLOPs are
+  proportional to admitted prompts only;
+* admission is gated on ``BlockAllocator.can_alloc`` over the *worst-case*
+  block demand of the candidate (prompt + decode budget), net of blocks
+  already promised to residents — decode can therefore never run out of
+  blocks mid-flight, and backpressure lands where the paper's SLO-ODBS
+  ``memory_budget`` already operates (``PagedEngineConfig.from_memory_budget``
+  sizes the pool from that same budget, so scheduler and allocator agree).
+
+Physical block 0 is reserved as the *null block*: free slots' block-table
+rows point at it, so the fixed-batch decode step stays shape-stable without
+ever writing into live blocks.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.monitor import Monitor
+from repro.core.types import Request
+from repro.models import api
+from repro.serving.engine import BatchResult
+from repro.serving.kv_cache import BlockAllocator
+from repro.serving.sampling import greedy
+from repro.sharding.plan import ShardingPlan
+
+
+def kv_block_bytes(cfg: ModelConfig, block_size: int,
+                   dtype_bytes: int = 4) -> int:
+    """Bytes one physical block costs across all layers (K + V)."""
+    per_tok = cfg.n_layers * cfg.n_kv_heads * \
+        (cfg.head_dim_eff + cfg.v_head_dim_eff) * dtype_bytes
+    return block_size * per_tok
+
+
+@dataclass
+class PagedEngineConfig:
+    max_batch: int = 8
+    block_size: int = 16
+    n_blocks: int = 128            # physical pool size (incl. the null block)
+    max_seq_len: int = 256         # cap on prompt + generated (block-table width)
+    max_new_tokens: int = 128
+
+    @classmethod
+    def from_memory_budget(cls, cfg: ModelConfig, memory_budget: float,
+                           *, dtype_bytes: int = 4, **kw) -> "PagedEngineConfig":
+        """Size the physical pool from the scheduler's KV ``memory_budget``
+        (SchedulerConfig.memory_budget) so admission control and SLO-ODBS
+        batch shaping enforce the same byte ceiling."""
+        self = cls(**kw)
+        bb = kv_block_bytes(cfg, self.block_size, dtype_bytes)
+        self.n_blocks = max(2, int(memory_budget // bb))
+        return self
+
+    @property
+    def max_blocks(self) -> int:
+        return -(-self.max_seq_len // self.block_size)
+
+
+@dataclass
+class PagedBatchResult(BatchResult):
+    prefill_tokens: int = 0        # tokens actually prefilled (block-padded)
+    admission_waves: int = 0
+    peak_blocks: int = 0           # high-water mark of live blocks
+    kv_utilization: float = 0.0    # mean valid-token / allocated-slot ratio
+    waste_vs_padded: float = 0.0   # mean 1 - allocated / max-len reservation
+
+
+@dataclass
+class PagedDecodeState:
+    """Host + device state of the paged decode loop: the layer pools tree on
+    device, and the per-slot block tables / lengths / last tokens mirrored on
+    host (pushed to device each step)."""
+    pools: Any                                   # api.init_paged_pools tree
+    block_tables: np.ndarray                     # [B, max_blocks] int32
+    kv_len: np.ndarray                           # [B] int32
+    cur_tok: np.ndarray                          # [B] int32 (next input token)
+    alloc: BlockAllocator
+    null_block: int
+    active: list                                 # [B] Optional[Request]
+
+    @classmethod
+    def create(cls, cfg: ModelConfig, pcfg: PagedEngineConfig,
+               dtype=jnp.float32) -> "PagedDecodeState":
+        pools = api.init_paged_pools(cfg, pcfg.n_blocks, pcfg.block_size, dtype)
+        alloc = BlockAllocator(pcfg.n_blocks)
+        null = alloc.alloc(-1, 1)[0]             # reserved garbage block
+        b, nb = pcfg.max_batch, pcfg.max_blocks
+        return cls(pools=pools,
+                   block_tables=np.full((b, nb), null, np.int32),
+                   kv_len=np.zeros(b, np.int32),
+                   cur_tok=np.zeros(b, np.int32),
+                   alloc=alloc, null_block=null,
+                   active=[None] * b)
+
+    # ------------------------------------------------------------ block ops
+    def ensure_blocks(self, slot: int, new_len: int, block_size: int) -> None:
+        """Grow slot's block list to cover new_len tokens (O(1) per block)."""
+        table = self.alloc.tables.setdefault(slot, [])
+        need = -(-new_len // block_size) - len(table)
+        if need > 0:
+            start = len(table)
+            self.alloc.alloc(slot, need)
+            self.block_tables[slot, start:start + need] = table[start:]
+
+    def free_slot(self, slot: int) -> None:
+        self.alloc.free_seq(slot)
+        self.block_tables[slot, :] = self.null_block
+        self.kv_len[slot] = 0
+        self.cur_tok[slot] = 0
+        self.active[slot] = None
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks held by sequences (excludes the reserved null block)."""
+        return self.alloc.used_blocks - 1
+
+
+class PagedEngine:
+    """Continuous batching over paged KV blocks.  Greedy decoding, token-
+    identical to ``InferenceEngine.run_batch`` for the same requests (the
+    decode math only differs in cache addressing)."""
+
+    def __init__(self, cfg: ModelConfig, params, pcfg: PagedEngineConfig,
+                 plan: Optional[ShardingPlan] = None,
+                 monitor: Optional[Monitor] = None,
+                 dtype=jnp.float32):
+        ok, why = api.paged_compatible(cfg)
+        if not ok:
+            raise ValueError(f"{cfg.name} cannot serve paged: {why}")
+        self.cfg = cfg
+        self.params = params
+        self.pcfg = pcfg
+        self.plan = plan
+        self.monitor = monitor
+        self.dtype = dtype
+        # donate the pools (argnum 2 of (params, tokens, pools, bt, kv_len))
+        # so the per-step K/V scatter aliases in place instead of copying the
+        # whole pool every token
+        self._decode = jax.jit(
+            functools.partial(api.paged_decode_step, cfg, plan=plan),
+            donate_argnums=(2,))
+        self._prefill = jax.jit(
+            lambda params, toks, kv_len, cache_len: api.prefill(
+                cfg, params, {"tokens": toks}, plan=plan,
+                cache_len=cache_len, kv_len=kv_len),
+            static_argnames=("cache_len",))
+        self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+
+    @staticmethod
+    def _scatter_impl(pools, cache, blk, off):
+        """Write a b=1 prefill cache (leaves [n_groups, 1, cl, KV, hd]) into
+        the pools at (blk[t], off[t]) — one scatter per layer leaf."""
+        def write(pool, c):
+            return pool.at[:, blk, off].set(c[:, 0])
+        return jax.tree.map(write, pools, cache)
+
+    # --------------------------------------------------------------- admission
+    def _worst_blocks(self, r: Request, budget: int) -> int:
+        horizon = len(r.tokens) + min(r.true_output_len, budget)
+        return -(-horizon // self.pcfg.block_size)
+
+    def _reserved_remaining(self, st: PagedDecodeState, budget: int) -> int:
+        """Blocks still promised to resident slots beyond what they hold."""
+        total = 0
+        for slot, r in enumerate(st.active):
+            if r is None:
+                continue
+            held = len(st.alloc.tables.get(slot, []))
+            total += max(0, self._worst_blocks(r, budget) - held)
+        return total
+
+    def can_admit(self, st: PagedDecodeState, r: Request, budget: int) -> bool:
+        wb = self._worst_blocks(r, budget)
+        return st.alloc.can_alloc(wb + self._reserved_remaining(st, budget))
+
+    def _admit(self, st: PagedDecodeState, queue: list, outs: dict,
+               res: PagedBatchResult, budget: int) -> int:
+        """Fill free slots from the queue head (FIFO; head-of-line blocking
+        is the backpressure signal).  Each admitted prompt is prefilled
+        individually — resident slots are untouched."""
+        admitted = 0
+        t0 = time.perf_counter()
+        for slot in range(self.pcfg.max_batch):
+            if st.active[slot] is not None or not queue:
+                continue
+            r = queue[0]
+            if not self.can_admit(st, r, budget):
+                break
+            queue.pop(0)
+            st.active[slot] = r
+            self._prefill_into(st, slot, r, outs)
+            res.prefill_tokens += self._padded_len(len(r.tokens))
+            admitted += 1
+        if admitted:
+            res.admission_waves += 1
+            res.prefill_s += time.perf_counter() - t0
+        return admitted
+
+    def _padded_len(self, n: int) -> int:
+        bs = self.pcfg.block_size
+        return -(-n // bs) * bs
+
+    def _prefill_into(self, st: PagedDecodeState, slot: int, r: Request,
+                      outs: dict) -> None:
+        prompt = list(r.tokens)
+        ln = len(prompt)
+        cl = self._padded_len(ln)                # pad to the block boundary
+        toks = np.zeros((1, cl), np.int32)
+        toks[0, :ln] = prompt
+        logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                      jnp.asarray([ln], jnp.int32), cl)
+        st.ensure_blocks(slot, ln, self.pcfg.block_size)
+        table = st.alloc.tables[slot]
+        pos = np.arange(cl)
+        blk = np.asarray([table[p // self.pcfg.block_size] if p < ln
+                          else st.null_block for p in pos], np.int32)
+        off = (pos % self.pcfg.block_size).astype(np.int32)
+        st.pools = self._scatter(st.pools, cache, jnp.asarray(blk),
+                                 jnp.asarray(off))
+        st.kv_len[slot] = ln
+        first = int(np.asarray(greedy(logits, self.cfg.vocab_size))[0])
+        st.cur_tok[slot] = first
+        outs[r.rid] = [first]
+
+    # ------------------------------------------------------------------ serve
+    def run_continuous(self, requests: list, *,
+                       max_new: Optional[int] = None) -> PagedBatchResult:
+        """Serve all requests with continuous batching: finished slots free
+        their blocks and are refilled (subject to block backpressure) while
+        the rest keep decoding.  Greedy; request i stops after
+        min(true_output_len, budget) generated tokens."""
+        res = PagedBatchResult()
+        budget = max_new or self.pcfg.max_new_tokens
+        for r in requests:
+            horizon = len(r.tokens) + min(r.true_output_len, budget)
+            if horizon > self.pcfg.max_seq_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.tokens)} + output "
+                    f"budget exceeds max_seq_len {self.pcfg.max_seq_len}")
+            wb = self._worst_blocks(r, budget)
+            if wb > self.pcfg.n_blocks - 1:        # -1: reserved null block
+                raise ValueError(
+                    f"request {r.rid}: needs {wb} blocks, pool has "
+                    f"{self.pcfg.n_blocks - 1} usable")
+        st = PagedDecodeState.create(self.cfg, self.pcfg, self.dtype)
+        queue = list(requests)
+        outs: dict[int, list[int]] = {}
+        util_sum = waste_sum = 0.0
+        util_n = 0
+        # _admit accrues res.prefill_s itself (mid-run waves included);
+        # decode_s is the remainder of the serving wall clock
+        t_total = time.perf_counter()
+        if queue:
+            self._admit(st, queue, outs, res, budget)
+        steps = 0
+        while True:
+            # a) finish/admit fixpoint: retiring slots frees blocks which can
+            #    admit new prompts, whose stop count may already be met by
+            #    their prefill token (stop==1) — loop until stable so the
+            #    decode step below never runs a completed sequence
+            progress = True
+            while progress:
+                progress = False
+                for slot, r in enumerate(st.active):
+                    if r is not None and len(outs[r.rid]) >= min(
+                            r.true_output_len, budget):
+                        self._finish(st, slot, r)
+                        progress = True
+                if progress and queue:
+                    self._admit(st, queue, outs, res, budget)
+            if not any(a is not None for a in st.active):
+                break
+            # b) grow block lists to cover the token about to be written
+            for slot, r in enumerate(st.active):
+                if r is not None:
+                    st.ensure_blocks(slot, int(st.kv_len[slot]) + 1,
+                                     self.pcfg.block_size)
+            # c) KV gauges at the allocation high-water mark (post-growth)
+            live = st.live_blocks
+            res.peak_blocks = max(res.peak_blocks, live)
+            valid = int(st.kv_len[[i for i, a in enumerate(st.active)
+                                   if a is not None]].sum())
+            alloc_slots = live * self.pcfg.block_size
+            n_active = sum(a is not None for a in st.active)
+            if alloc_slots:
+                util_sum += valid / alloc_slots
+                waste_sum += 1.0 - alloc_slots / (n_active *
+                                                  self.pcfg.max_seq_len)
+                util_n += 1
+            # d) one fixed-shape decode step over all slots
+            logits, st.pools = self._decode(
+                self.params, jnp.asarray(st.cur_tok)[:, None], st.pools,
+                jnp.asarray(st.block_tables), jnp.asarray(st.kv_len))
+            nxt = np.asarray(greedy(logits, self.cfg.vocab_size))
+            steps += 1
+            for slot, r in enumerate(st.active):
+                if r is None:
+                    continue
+                outs[r.rid].append(int(nxt[slot]))
+                st.cur_tok[slot] = int(nxt[slot])
+                st.kv_len[slot] += 1
+        jax.block_until_ready(st.pools)
+        res.decode_s = time.perf_counter() - t_total - res.prefill_s
+        res.steps = steps
+        res.outputs = outs
+        if util_n:
+            res.kv_utilization = util_sum / util_n
+            res.waste_vs_padded = waste_sum / util_n
+        if self.monitor is not None and util_n:
+            self.monitor.observe_kv(res.kv_utilization, res.waste_vs_padded)
+        return res
+
+    def _finish(self, st: PagedDecodeState, slot: int, r: Request) -> None:
+        st.free_slot(slot)
+        if self.monitor is not None:
+            self.monitor.observe(r)

@@ -122,6 +122,11 @@ class SimResult:
     batch_count: int = 0
     total_padded_tokens: int = 0
     total_true_tokens: int = 0
+    # --- paged-KV accounting (kv_block_size-granular alternative to the
+    # padded per-batch reservation that total_padded_tokens measures) ---
+    kv_block_size: int = 16
+    paged_kv_blocks: int = 0       # sum of ceil(seq_len / block) per request
+    total_seq_tokens: int = 0      # sum of input + true output per request
 
     @property
     def avg_latency(self) -> float:
@@ -148,6 +153,24 @@ class SimResult:
         return self.useful_flops / self.busy_flops_capacity \
             if self.busy_flops_capacity else 0.0
 
+    @property
+    def paged_kv_tokens(self) -> int:
+        """KV slots a paged allocator holds for the same work."""
+        return self.paged_kv_blocks * self.kv_block_size
+
+    @property
+    def paged_kv_util(self) -> float:
+        """Valid tokens / allocated paged slots (block-rounding overhead)."""
+        return self.total_seq_tokens / self.paged_kv_tokens \
+            if self.paged_kv_tokens else 1.0
+
+    @property
+    def waste_vs_padded(self) -> float:
+        """KV memory a paged pool saves vs the padded per-batch reservation
+        (Fig-4/5 style paged-vs-padded comparison axis)."""
+        return 1.0 - self.paged_kv_tokens / self.total_padded_tokens \
+            if self.total_padded_tokens else 0.0
+
     def summary(self) -> dict:
         return {
             "avg_latency_s": round(self.avg_latency, 3),
@@ -158,6 +181,9 @@ class SimResult:
             "batches": self.batch_count,
             "padded_tokens": self.total_padded_tokens,
             "true_tokens": self.total_true_tokens,
+            "paged_kv_tokens": self.paged_kv_tokens,
+            "paged_kv_util": round(self.paged_kv_util, 4),
+            "waste_vs_padded": round(self.waste_vs_padded, 4),
         }
 
 
@@ -174,6 +200,7 @@ def simulate(
     nodes=None, latency=None,
     model_mem: Optional[float] = None,
     window: float = 10.0,
+    kv_block_size: int = 16,
 ) -> SimResult:
     """Event loop: requests arrive; every scheduling window (or whenever the
     replica goes idle) the pending pool is profiled and batched; batches run
@@ -196,6 +223,8 @@ def simulate(
     batches_run = 0
     padded_total = 0
     true_total = 0
+    paged_blocks = 0
+    seq_tokens = 0
 
     while i < len(reqs) or pending:
         # admit everything that has arrived by t (plus wait if idle)
@@ -243,6 +272,10 @@ def simulate(
                       for r in b.requests)
         padded_total += b.total_tokens
         true_total += sum(r.true_output_len for r in b.requests)
+        paged_blocks += sum(
+            -(-(r.input_len + r.true_output_len) // kv_block_size)
+            for r in b.requests)
+        seq_tokens += sum(r.input_len + r.true_output_len for r in b.requests)
         batches_run += 1
         t = t_cursor
 
@@ -250,7 +283,9 @@ def simulate(
         requests=reqs, makespan=t, useful_flops=useful,
         busy_flops_capacity=lm.peak_flops * lm.efficiency * max(t, 1e-9),
         deploy_overhead=deploy_overhead, batch_count=batches_run,
-        total_padded_tokens=padded_total, total_true_tokens=true_total)
+        total_padded_tokens=padded_total, total_true_tokens=true_total,
+        kv_block_size=kv_block_size, paged_kv_blocks=paged_blocks,
+        total_seq_tokens=seq_tokens)
 
 
 # --------------------------------------------------- baseline deploy systems

@@ -1,0 +1,57 @@
+"""Version bridge for the sharding APIs this codebase targets (the jax>=0.6
+spellings: ``jax.shard_map``, ``jax.sharding.set_mesh`` /
+``get_abstract_mesh``, ``jax.lax.pvary``) running on older 0.4.x jax, where
+the same machinery lives under ``jax.experimental.shard_map`` with
+``check_rep`` instead of ``check_vma`` and mesh context comes from the
+``with mesh:`` resource env.  All sharded call sites go through here so the
+repo runs unmodified on either line.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_NEW_MESH_CTX = hasattr(jax.sharding, "set_mesh")
+
+# vma/rep typechecking marker: identity where the concept doesn't exist
+pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    if _NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Context manager on both lines (new jax's set_mesh is already one).
+    On 0.4.x, ``with mesh:`` publishes through the thread-resource env that
+    get_abstract_mesh reads back — no extra state needed."""
+    if _NEW_MESH_CTX:
+        with jax.sharding.set_mesh(mesh):
+            yield mesh
+        return
+    with mesh:
+        yield mesh
+
+
+def get_abstract_mesh():
+    """The mesh of the active set_mesh scope (None-like empty mesh outside)."""
+    if _NEW_MESH_CTX:
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """compiled.cost_analysis() returns a dict (new) or [dict] (0.4.x)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.sharding.compat import get_abstract_mesh
+
 
 @dataclass(frozen=True)
 class ShardingPlan:
@@ -30,7 +32,7 @@ class ShardingPlan:
 
 
 def _mesh_axis_sizes() -> dict[str, int]:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return {}
     return dict(mesh.shape)
