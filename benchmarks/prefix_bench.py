@@ -1,0 +1,102 @@
+"""Prefix-cache benchmark: the same shared-prefix workload served by the
+paged engine with the radix prefix cache off vs on, at the same (tight)
+memory budget.
+
+Measures the two wins the subsystem is built for (EXPERIMENTS.md §Perf):
+
+* prefill-token reduction — shared-template prompts prefill only their
+  uncached suffix, so total (block-padded) prefill tokens drop;
+* admitted-batch growth — ``can_admit`` charges worst-case block demand net
+  of prefix hits, so at a pool too small for the full resident set the
+  cached run fits strictly more concurrent sequences.
+
+Both runs must stay token-identical (greedy); the harness raises otherwise,
+so a fidelity regression fails ``benchmarks.run``.
+"""
+from __future__ import annotations
+
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, emit
+from repro.configs import get_config
+from repro.core.scheduler import prefix_affinity_key
+from repro.data.workload import SharedPrefixConfig, gen_shared_prefix_requests
+from repro.models import api
+from repro.serving import PagedEngine, PagedEngineConfig
+
+BS = 8            # KV block size
+N_BLOCKS = 12     # 11 usable + null: too small for 3 uncached residents
+
+
+def _workload(cfg):
+    reqs = gen_shared_prefix_requests(SharedPrefixConfig(
+        n_requests=12, n_templates=2, prefix_len=24, suffix_mean=2.0,
+        suffix_sigma=0.2, vocab=cfg.vocab_size, seed=4))
+    for r in reqs:
+        r.tokens = [t % cfg.vocab_size for t in r.tokens[:32]]
+        r.input_len = len(r.tokens)
+        r.true_output_len = r.true_output_len % 8 + 1
+    # the scheduler's cache-aware sort: same-template requests land in the
+    # same batch window, so the first prefill seeds the radix tree for the
+    # rest of its group (core.scheduler.prefix_affinity_key)
+    return sorted(reqs, key=prefix_affinity_key(reqs, block=BS))
+
+
+def _serve(cfg, params, reqs, prefix: bool):
+    pcfg = PagedEngineConfig(max_batch=6, block_size=BS, n_blocks=N_BLOCKS,
+                             max_seq_len=64, max_new_tokens=12,
+                             prefix_cache=prefix)
+    eng = PagedEngine(cfg, params, pcfg)
+    return eng.run_continuous([copy.copy(r) for r in reqs])
+
+
+def run() -> dict:
+    cfg = get_config("smollm-135m").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    reqs = _workload(cfg)
+    res_off = _serve(cfg, params, reqs, prefix=False)
+    res_on = _serve(cfg, params, reqs, prefix=True)
+
+    if any(res_off.outputs[r.rid] != res_on.outputs[r.rid] for r in reqs):
+        raise AssertionError("prefix cache changed greedy outputs")
+    if res_on.prefill_tokens >= res_off.prefill_tokens:
+        raise AssertionError(
+            f"prefix cache did not reduce prefill tokens "
+            f"({res_on.prefill_tokens} vs {res_off.prefill_tokens})")
+    if res_on.peak_residents < res_off.peak_residents + 1:
+        raise AssertionError(
+            f"prefix hits bought no admission capacity "
+            f"({res_on.peak_residents} vs {res_off.peak_residents} residents)")
+
+    rows = {
+        "engine_paged_off": {
+            "prefill_tokens": res_off.prefill_tokens,
+            "peak_residents": res_off.peak_residents,
+            "peak_blocks": res_off.peak_blocks,
+            "admission_waves": res_off.admission_waves,
+        },
+        "engine_prefix_on": {
+            "prefill_tokens": res_on.prefill_tokens,
+            "peak_residents": res_on.peak_residents,
+            "peak_blocks": res_on.peak_blocks,
+            "admission_waves": res_on.admission_waves,
+            "hit_rate": round(res_on.prefix_hits /
+                              max(res_on.prefix_lookups, 1), 4),
+            "hit_tokens": res_on.prefix_hit_tokens,
+            "evictions": res_on.prefix_evictions,
+            "cow_forks": res_on.cow_forks,
+            "prefill_reduction": round(
+                1.0 - res_on.prefill_tokens / res_off.prefill_tokens, 4),
+        },
+    }
+    csv_row("prefix_cache_prefill_tokens", float(res_on.prefill_tokens),
+            f"off={res_off.prefill_tokens},"
+            f"reduction={1 - res_on.prefill_tokens / res_off.prefill_tokens:.3f},"
+            f"residents={res_off.peak_residents}->{res_on.peak_residents},"
+            f"hit_tokens={res_on.prefix_hit_tokens}")
+    emit("prefix_bench", rows)
+    return rows

@@ -11,13 +11,13 @@ import traceback
 def main() -> None:
     from benchmarks import (ablation_weights, fig1_config_sweep,
                             fig4_batching, fig4_deploy, fig5_e2e,
-                            kernel_bench, paged_bench, profiler_accuracy,
-                            roofline, table1_device_map)
+                            kernel_bench, paged_bench, prefix_bench,
+                            profiler_accuracy, roofline, table1_device_map)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (table1_device_map, fig1_config_sweep, fig4_batching,
                 fig4_deploy, fig5_e2e, ablation_weights, profiler_accuracy,
-                kernel_bench, paged_bench):
+                kernel_bench, paged_bench, prefix_bench):
         try:
             mod.run()
         except Exception:                              # noqa: BLE001

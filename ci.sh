@@ -3,6 +3,7 @@
 #
 #   ./ci.sh            # everything
 #   ./ci.sh kernels    # kernel parity tests only (fast)
+#   ./ci.sh serving    # paged-engine + prefix-cache runtime tests (fast)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -10,9 +11,15 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 KERNEL_TESTS=(tests/test_kernels_flash.py tests/test_kernels_decode.py
               tests/test_kernels_wkv6.py tests/test_paged_attention.py)
+SERVING_TESTS=(tests/test_paged_engine.py tests/test_prefix_cache.py)
 
 if [[ "${1:-}" == "kernels" ]]; then
     python -m pytest -q "${KERNEL_TESTS[@]}"
+    exit 0
+fi
+
+if [[ "${1:-}" == "serving" ]]; then
+    python -m pytest -q "${SERVING_TESTS[@]}"
     exit 0
 fi
 

@@ -21,6 +21,19 @@ class MonitorStats:
     kv_samples: int = 0
     kv_util_sum: float = 0.0
     kv_waste_sum: float = 0.0
+    # --- block-pool gauges (latest BlockAllocator.stats() snapshot) ---
+    pool_total_blocks: int = 0
+    pool_free_blocks: int = 0
+    pool_used_blocks: int = 0
+    pool_cached_blocks: int = 0
+    pool_fragmentation: float = 0.0   # 1 - valid tokens / allocated slots
+    # --- prefix-cache counters (serving.prefix_cache.PrefixCacheStats) ---
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_hit_blocks: int = 0
+    prefix_evicted_blocks: int = 0
+    prefix_cow_forks: int = 0
 
     @property
     def bucket_accuracy(self) -> float:
@@ -36,6 +49,12 @@ class MonitorStats:
         """Mean memory saved vs per-slot max-length reservation (the padding
         regime the paper's Fig. 3 counts tokens for)."""
         return self.kv_waste_sum / self.kv_samples if self.kv_samples else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompts that reused at least one cached block."""
+        return self.prefix_hits / self.prefix_lookups \
+            if self.prefix_lookups else 0.0
 
 
 class Monitor:
@@ -77,6 +96,29 @@ class Monitor:
         st.kv_util_sum += utilization
         st.kv_waste_sum += waste_vs_padded
 
+    def observe_pool(self, pool_stats: dict, *,
+                     fragmentation: float = 0.0) -> None:
+        """Latest ``BlockAllocator.stats()`` snapshot (free/used/cached
+        block counts) plus the engine's internal-fragmentation gauge
+        (allocated-but-invalid token slots)."""
+        st = self.stats
+        st.pool_total_blocks = pool_stats.get("total", 0)
+        st.pool_free_blocks = pool_stats.get("free", 0)
+        st.pool_used_blocks = pool_stats.get("used", 0)
+        st.pool_cached_blocks = pool_stats.get("cached", 0)
+        st.pool_fragmentation = fragmentation
+
+    def observe_prefix(self, prefix_stats, *, cow_forks: int = 0) -> None:
+        """Accumulate a run's prefix-cache counters
+        (serving.prefix_cache.PrefixCacheStats)."""
+        st = self.stats
+        st.prefix_lookups += prefix_stats.lookups
+        st.prefix_hits += prefix_stats.hits
+        st.prefix_hit_tokens += prefix_stats.hit_tokens
+        st.prefix_hit_blocks += prefix_stats.hit_blocks
+        st.prefix_evicted_blocks += prefix_stats.evicted_blocks
+        st.prefix_cow_forks += cow_forks
+
     def metrics(self) -> dict:
         st = self.stats
         out = {
@@ -90,4 +132,14 @@ class Monitor:
         if st.kv_samples:
             out["kv_utilization"] = round(st.kv_utilization, 4)
             out["kv_waste_vs_padded"] = round(st.kv_waste_vs_padded, 4)
+        if st.pool_total_blocks:
+            out["pool_free_blocks"] = st.pool_free_blocks
+            out["pool_used_blocks"] = st.pool_used_blocks
+            out["pool_cached_blocks"] = st.pool_cached_blocks
+            out["pool_fragmentation"] = round(st.pool_fragmentation, 4)
+        if st.prefix_lookups:
+            out["prefix_hit_rate"] = round(st.prefix_hit_rate, 4)
+            out["prefix_hit_tokens"] = st.prefix_hit_tokens
+            out["prefix_evicted_blocks"] = st.prefix_evicted_blocks
+            out["prefix_cow_forks"] = st.prefix_cow_forks
         return out

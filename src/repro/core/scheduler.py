@@ -34,6 +34,28 @@ class SchedulerConfig:
     max_batch: int = 64            # hardware cap
     memory_budget: float = 16e9    # KV budget per replica (bytes)
     base_cap: int = 64             # CM-driven dynamic cap baseline (line 20)
+    # cache-aware batching (beyond-paper; serving.prefix_cache): group
+    # shared-prefix requests into the same batch window so the radix tree
+    # serves their hits while the blocks are hot
+    prefix_aware: bool = False
+    prefix_block: int = 16         # tokens of leading prompt that define a group
+
+
+def prefix_affinity_key(requests: list, block: int = 16
+                        ) -> Callable[[Request], tuple]:
+    """Cache-aware sort key for slo_odbs: requests sharing their first KV
+    block sort adjacently (one prefill computes the prefix, the rest hit the
+    radix tree), and groups are ordered by their most urgent member's SLO so
+    affinity never strands a tight deadline behind a slack group."""
+    urgency: dict[tuple, float] = {}
+    for r in requests:
+        key = tuple(r.tokens[:block])
+        urgency[key] = min(urgency.get(key, float("inf")), r.slo)
+
+    def sort_key(r: Request) -> tuple:
+        key = tuple(r.tokens[:block])
+        return (urgency[key], key, r.slo)
+    return sort_key
 
 
 def _dynamic_cap(cm: float, cfg: SchedulerConfig) -> int:
@@ -49,8 +71,14 @@ def _dynamic_cap(cm: float, cfg: SchedulerConfig) -> int:
 def slo_odbs(requests: Iterable[Request], cfg: SchedulerConfig,
              *, sort_key: Optional[Callable[[Request], float]] = None
              ) -> list[Batch]:
-    """Algorithm 1 (SLO and Output-Driven Dynamic Batch Scheduler)."""
-    reqs = sorted(requests, key=sort_key or (lambda r: r.slo))
+    """Algorithm 1 (SLO and Output-Driven Dynamic Batch Scheduler).  With
+    ``cfg.prefix_aware`` (and no explicit sort_key) requests are grouped by
+    shared leading prompt block before the SLO-ascending walk, so batches
+    pack prefix-cache hits together."""
+    reqs = list(requests)
+    if sort_key is None and cfg.prefix_aware:
+        sort_key = prefix_affinity_key(reqs, cfg.prefix_block)
+    reqs = sorted(reqs, key=sort_key or (lambda r: r.slo))
     batches: list[Batch] = []
     cur = Batch()
     l_cm = o_cm = cm = 0.0

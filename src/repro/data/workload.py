@@ -55,6 +55,64 @@ def gen_requests(cfg: WorkloadConfig) -> list[Request]:
     return reqs
 
 
+@dataclass
+class SharedPrefixConfig:
+    """Shared-prefix / multi-turn serving scenario (beyond-paper; the
+    template-heavy workload mix SageServe's cloud traces show and the
+    'Taming the Titans' survey names prefix caching for — PAPERS.md).
+
+    ``turns == 1``: every request is ``template + unique suffix`` — the
+    system-prompt / few-shot pattern, replayable through PagedEngine's
+    prefix cache as-is.  ``turns > 1``: conversations whose turn-k prompt
+    is the previous prompt + a synthetic assistant answer + new user text —
+    the prompt-*growth* pattern for scheduler/simulator studies (a live
+    engine's hits additionally depend on the tokens it actually generated).
+    """
+    n_requests: int = 64
+    n_templates: int = 4               # distinct system prompts
+    prefix_len: int = 48               # template length (tokens)
+    suffix_mean: float = 3.0           # lognormal of the unique-suffix length
+    suffix_sigma: float = 0.5
+    turns: int = 1
+    answer_len: int = 24               # synthetic assistant tokens per turn
+    arrival_rate: float = 8.0
+    slo_lo: float = 1.0
+    slo_hi: float = 350.0
+    vocab: int = 1024
+    output_base: float = 32.0
+    output_max: int = 1024
+    seed: int = 0
+
+
+def gen_shared_prefix_requests(cfg: SharedPrefixConfig) -> list[Request]:
+    rng = np.random.default_rng(cfg.seed)
+    templates = [rng.integers(0, cfg.vocab, cfg.prefix_len).tolist()
+                 for _ in range(cfg.n_templates)]
+    arrivals = np.cumsum(rng.exponential(1.0 / cfg.arrival_rate,
+                                         cfg.n_requests))
+    # round-robin conversations over templates; each conversation's context
+    # grows turn over turn
+    n_convs = max(1, cfg.n_requests // cfg.turns)
+    contexts = [list(templates[c % cfg.n_templates]) for c in range(n_convs)]
+    reqs = []
+    for i in range(cfg.n_requests):
+        conv = i % n_convs
+        suffix_len = int(np.clip(
+            rng.lognormal(cfg.suffix_mean, cfg.suffix_sigma), 4, 256))
+        prompt = contexts[conv] + rng.integers(0, cfg.vocab,
+                                               suffix_len).tolist()
+        out_len = int(np.clip(rng.lognormal(np.log(cfg.output_base), 0.5),
+                              1, cfg.output_max))
+        reqs.append(Request(
+            rid=i, tokens=prompt, input_len=len(prompt),
+            slo=float(rng.uniform(cfg.slo_lo, cfg.slo_hi)),
+            arrival=float(arrivals[i]), true_output_len=out_len))
+        if cfg.turns > 1:
+            contexts[conv] = prompt + rng.integers(
+                0, cfg.vocab, cfg.answer_len).tolist()
+    return reqs
+
+
 def train_pairs(cfg: WorkloadConfig, n: int, seed: int = 1):
     """(tokens_padded [n, max_len], lengths [n]) for predictor training."""
     wcfg = WorkloadConfig(**{**cfg.__dict__, "n_requests": n, "seed": seed})

@@ -6,6 +6,10 @@
 ``--paged`` serves through the paged continuous-batching runtime instead
 (block-table KV, per-prompt prefill, allocator-gated admission); the pool is
 sized from ``--kv-budget`` bytes — the same budget surface SLO-ODBS uses.
+``--prefix-cache`` layers the radix-tree prefix cache on top (shared-prefix
+prompts prefill only their uncached suffix; ``--workload shared-prefix``
+generates a template-heavy mix that exercises it), and ``--lookahead N``
+lets admission skip a too-big queue head when a later request fits.
 On a TPU pod this runs under the production mesh with the HELR-mesh plan;
 on CPU (--reduced) it serves the reduced config end-to-end.
 """
@@ -21,7 +25,9 @@ from repro.configs import SHAPES, get_config
 from repro.core import (LengthPredictor, Monitor, ResourceProfiler,
                         SchedulerConfig, get_scheduler, helr_mesh)
 from repro.core.profiler import PredictorConfig
-from repro.data.workload import WorkloadConfig, gen_requests, train_pairs
+from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
+                                 gen_requests, gen_shared_prefix_requests,
+                                 train_pairs)
 from repro.models import api
 from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
                            PagedEngineConfig)
@@ -38,10 +44,22 @@ def main():
                     help="beyond-paper continuous batching mode")
     ap.add_argument("--paged", action="store_true",
                     help="paged continuous batching (block-table KV cache)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix sharing over the paged pool "
+                         "(implies --paged)")
+    ap.add_argument("--lookahead", type=int, default=0,
+                    help="queue entries scanned past a blocked head "
+                         "(paged admission)")
+    ap.add_argument("--workload", default="alpaca",
+                    choices=["alpaca", "shared-prefix"],
+                    help="alpaca: lognormal Poisson mix; shared-prefix: "
+                         "template-heavy prompts exercising the prefix cache")
     ap.add_argument("--kv-budget", type=float, default=2e6,
                     help="paged KV pool budget in bytes (shared with SLO-ODBS)")
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
+    if args.prefix_cache:
+        args.paged = True
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -54,10 +72,18 @@ def main():
                              EngineConfig(max_batch=4, cache_len=64,
                                           max_new_tokens=args.max_new))
 
-    reqs = gen_requests(WorkloadConfig(n_requests=args.requests, seed=0,
-                                       vocab=cfg.vocab_size))
+    if args.workload == "shared-prefix":
+        reqs = gen_shared_prefix_requests(SharedPrefixConfig(
+            n_requests=args.requests, n_templates=max(2, args.requests // 6),
+            prefix_len=16, suffix_mean=2.0, vocab=cfg.vocab_size, seed=0))
+        for r in reqs:
+            r.tokens = [t % cfg.vocab_size for t in r.tokens[:32]]
+    else:
+        reqs = gen_requests(WorkloadConfig(n_requests=args.requests, seed=0,
+                                           vocab=cfg.vocab_size))
+        for r in reqs:
+            r.tokens = [t % cfg.vocab_size for t in r.tokens[:16]]
     for r in reqs:
-        r.tokens = [t % cfg.vocab_size for t in r.tokens[:16]]
         r.input_len = len(r.tokens)
         r.true_output_len = r.true_output_len % args.max_new + 1
 
@@ -76,9 +102,12 @@ def main():
         max_seq = max(64, -(-(max_prompt + args.max_new) // 8) * 8)
         pcfg = PagedEngineConfig.from_memory_budget(
             cfg, args.kv_budget, max_batch=4, block_size=8,
-            max_seq_len=max_seq, max_new_tokens=args.max_new)
+            max_seq_len=max_seq, max_new_tokens=args.max_new,
+            prefix_cache=args.prefix_cache,
+            admit_lookahead=args.lookahead)
         print(f"paged pool: {pcfg.n_blocks} blocks x {pcfg.block_size} slots "
-              f"({args.kv_budget:.0f} B budget)")
+              f"({args.kv_budget:.0f} B budget, "
+              f"prefix_cache={'on' if pcfg.prefix_cache else 'off'})")
         paged = PagedEngine(cfg, params, pcfg, monitor=mon)
         res = paged.run_continuous(sorted(reqs, key=lambda r: r.arrival))
         done = res.outputs
@@ -87,6 +116,12 @@ def main():
               f"peak_blocks={res.peak_blocks}, "
               f"kv_util={res.kv_utilization:.3f}, "
               f"waste_vs_padded={res.waste_vs_padded:.3f}")
+        if pcfg.prefix_cache:
+            print(f"prefix: {res.prefix_hits}/{res.prefix_lookups} hits, "
+                  f"hit_tokens={res.prefix_hit_tokens}, "
+                  f"cow_forks={res.cow_forks}, "
+                  f"evictions={res.prefix_evictions}, "
+                  f"peak_residents={res.peak_residents}")
     elif args.continuous:
         res = engine.run_continuous(sorted(reqs, key=lambda r: r.arrival))
         done = res.outputs

@@ -28,14 +28,19 @@ def loss_fn(cfg: ModelConfig, params, batch, *, plan=None):
 
 
 def prefill(cfg: ModelConfig, params, batch, *, plan=None, cache_len: int,
-            kv_len=None):
-    """batch: {tokens} (+ frames/embeds for stub frontends)."""
+            kv_len=None, prefix_kv=None):
+    """batch: {tokens} (+ frames/embeds for stub frontends).  ``prefix_kv``
+    (a stacked K/V tree of an already-computed prompt prefix) requests
+    continuation prefill of the uncached suffix — see T.lm_prefill."""
     if cfg.is_encdec:
+        if prefix_kv is not None:
+            raise NotImplementedError(
+                "prefix-continuation prefill: enc-dec uses cross caches")
         return E.encdec_prefill(cfg, params, batch["frames"], batch["tokens"],
                                 plan=plan, cache_len=cache_len, kv_len=kv_len)
     return T.lm_prefill(cfg, params, batch["tokens"], plan=plan,
                         cache_len=cache_len, kv_len=kv_len,
-                        embeds=batch.get("embeds"))
+                        embeds=batch.get("embeds"), prefix_kv=prefix_kv)
 
 
 def decode_step(cfg: ModelConfig, params, tokens, cache, kv_len, *, plan=None):

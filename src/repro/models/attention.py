@@ -198,11 +198,41 @@ def _run_flash(cfg: ModelConfig, plan, q, k, v, *, causal, window):
 
 def attn_prefill(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions,
                  plan: Optional[ShardingPlan], causal: bool = True,
-                 cache_len: int = 0, kv_len: Optional[jnp.ndarray] = None):
+                 cache_len: int = 0, kv_len: Optional[jnp.ndarray] = None,
+                 prefix: Optional[dict] = None):
     """Full-sequence attention.  Returns (y, cache_entry or None).
     cache_len > 0 allocates a cache padded to that length; kv_len [B] gives
-    per-sequence valid prompt lengths (defaults to the full sequence)."""
+    per-sequence valid prompt lengths (defaults to the full sequence).
+
+    ``prefix`` ({"k": [B, P, KV, hd], "v": [B, P, KV, dv]}) switches to
+    *continuation* prefill: x holds only the uncached suffix of the prompt
+    (``positions`` already offset by P); queries attend over the cached
+    prefix K/V concatenated with the suffix K/V, causal at absolute
+    positions via flash attention's ``q_offset``.  The returned cache entry
+    covers the **suffix only** — the prefix K/V already lives in the paged
+    pool (serving.prefix_cache decides which blocks are shared).  Plain GQA
+    caches only; MLA latents and sliding-window ring buffers are rejected
+    (the serving runtime gates on api.paged_compatible)."""
     window = cfg.sliding_window if spec.attn == "window" else None
+    if prefix is not None:
+        if cfg.mla is not None or window is not None:
+            raise NotImplementedError(
+                "prefix-continuation prefill needs a plain GQA cache")
+        if plan is not None and (plan.model_axis is not None or plan.seq_axes):
+            raise NotImplementedError(
+                "prefix-continuation prefill: sharded plans not supported")
+        q, k, v = _qkv(cfg, p, x, positions)
+        b, s, h, _ = q.shape
+        k_full = jnp.concatenate([prefix["k"].astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([prefix["v"].astype(v.dtype), v], axis=1)
+        out = flash_attention(q, k_full, v_full, causal=causal,
+                              softcap=cfg.attn_softcap,
+                              q_offset=prefix["k"].shape[1])
+        y = apply_dense(p["o"], out.reshape(b, s, -1))
+        cache = None
+        if cache_len:
+            cache = {"k": _pad_seq(k, cache_len), "v": _pad_seq(v, cache_len)}
+        return y, cache
     if cfg.mla is not None:
         q, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
         k, v = _mla_expand(cfg, p, c_kv, k_rope)

@@ -90,16 +90,25 @@ def block_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions, plan,
             mx, c = attn.attn_decode(cfg, spec, p["mixer"], h, cache["mixer"],
                                      kv_len, plan=plan)
         else:
+            # a cache entry in prefill mode is a cached *prefix* K/V to
+            # continue from (serving.prefix_cache suffix prefill)
             mx, c = attn.attn_prefill(cfg, spec, p["mixer"], h,
                                       positions=positions, plan=plan,
-                                      cache_len=cache_len, kv_len=kv_len)
+                                      cache_len=cache_len, kv_len=kv_len,
+                                      prefix=(cache or {}).get("mixer"))
     elif spec.mixer == "mamba":
+        if mode != "decode" and cache is not None:
+            raise NotImplementedError(
+                "prefix-continuation prefill: mamba state is recurrent")
         if mode == "decode":
             mx, c = mamba_mod.mamba_decode(cfg, p["mixer"], h, cache["mixer"])
         else:
             mx, c = mamba_mod.mamba_prefill(cfg, p["mixer"], h,
                                             cache_len=cache_len, kv_len=kv_len)
     else:  # rwkv6
+        if mode != "decode" and cache is not None:
+            raise NotImplementedError(
+                "prefix-continuation prefill: rwkv6 state is recurrent")
         if mode == "decode":
             mx, c = rwkv_mod.rwkv_decode(cfg, p["mixer"], h, cache["mixer"])
         else:
@@ -308,14 +317,25 @@ def lm_loss(cfg: ModelConfig, params, batch, *, plan=None,
 
 
 def lm_prefill(cfg: ModelConfig, params, tokens, *, plan=None, cache_len: int,
-               kv_len=None, embeds=None):
-    """Prompt processing.  Returns (last_token_logits [B, Vp], cache)."""
+               kv_len=None, embeds=None, prefix_kv=None):
+    """Prompt processing.  Returns (last_token_logits [B, Vp], cache).
+
+    ``prefix_kv`` (stacked {"l{i}": {"mixer": {"k": [n_groups, B, P, KV, hd],
+    "v": ...}}}, mirroring the decode-cache tree) switches to continuation
+    prefill: ``tokens`` holds only the uncached suffix of the prompt, the
+    cached prefix K/V is attended through (models.attention.attn_prefill),
+    and the returned cache covers the suffix only.  ``kv_len`` then counts
+    valid *suffix* tokens."""
     x = embeds if embeds is not None else embed_tokens(cfg, params, tokens)
     b, s = x.shape[:2]
-    positions = default_positions(cfg, b, s)
+    p_len = 0
+    if prefix_kv is not None:
+        p_len = jax.tree.leaves(prefix_kv)[0].shape[2]
+    positions = default_positions(cfg, b, s, offset=p_len)
     x = constrain(x, batch_spec(plan, 3), plan)
     x, cache, _ = apply_stack(cfg, params, x, positions=positions, plan=plan,
-                              mode="prefill", kv_len=kv_len, cache_len=cache_len)
+                              mode="prefill", kv_len=kv_len, cache_len=cache_len,
+                              cache=prefix_kv)
     x = apply_norm(cfg, params["final_norm"], x)
     if kv_len is not None:
         last = jax.vmap(lambda v, i: v[jnp.maximum(i - 1, 0)])(x, kv_len)

@@ -4,6 +4,8 @@ from repro.serving.kv_cache import (BlockAllocator, PagedKVCache,  # noqa: F401
 from repro.serving.paged_engine import (PagedBatchResult,  # noqa: F401
                                         PagedDecodeState, PagedEngine,
                                         PagedEngineConfig, kv_block_bytes)
+from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,  # noqa: F401
+                                        RadixBlockTree)
 from repro.serving.simulator import (LatencyModel, SimResult,  # noqa: F401
                                      morphling_deploy_overhead, paper_cluster,
                                      simulate)

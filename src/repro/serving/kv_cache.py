@@ -4,11 +4,15 @@ the memory-efficiency frontier its padding-based cost model predates).
 Host-side block allocator + device-side paged layout:
 
 * the pool is ``[n_blocks, block, KV, hd]`` per layer-kind;
-* each sequence owns an ordered block list (the block table);
-* allocation is O(1) from a free list; freeing a finished sequence returns
-  its blocks — no compaction, no per-sequence max-length reservation, which
-  is exactly the padding-waste UELLM's scheduler also attacks (the two
-  compose: SLO-ODBS shapes the batch, paging shapes the memory).
+* each sequence references an ordered block list (the block table); blocks
+  are **refcounted**, so a prompt prefix can be one physical block shared by
+  many tables (serving.prefix_cache drives sharing + copy-on-write forks);
+* allocation is O(1) from a free list; freeing a finished sequence drops
+  references — blocks the prefix tree retains stay resident as evictable
+  cache, the rest return to the free list.  No compaction, no per-sequence
+  max-length reservation, which is exactly the padding-waste UELLM's
+  scheduler also attacks (the two compose: SLO-ODBS shapes the batch,
+  paging shapes the memory, prefix sharing de-duplicates it).
 
 ``gather`` materializes a sequence's contiguous view for the (non-paged)
 decode kernels; the paged Pallas decode kernel (kernels.paged_attention)
@@ -34,30 +38,132 @@ class PagedKVConfig:
 
 
 class BlockAllocator:
-    """O(1) free-list allocator with per-sequence block tables."""
+    """O(1) free-list allocator with per-**block** refcounts and per-sequence
+    block tables.
+
+    Ownership is refcount-based so one physical block can back the same
+    prefix of several sequences at once (serving.prefix_cache):
+
+    * ``alloc``   — pop fresh blocks from the free list (refcount 1);
+    * ``share``   — add an existing block to another sequence's table
+      (refcount +1, revives cached blocks);
+    * ``cow``     — copy-on-write fork: a sequence about to *write* a block
+      it does not exclusively own swaps in a fresh block (the caller copies
+      the device contents);
+    * ``free_seq``— idempotent; drops one reference per table entry.  A block
+      reaching refcount zero returns to the free list — unless the prefix
+      tree has ``retain``-ed it, in which case it parks in ``cached``
+      (evictable) until the registered ``reclaimer`` evicts it LRU-first
+      when the pool runs dry.
+    """
 
     def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
         self.free: list[int] = list(range(n_blocks - 1, -1, -1))
         self.tables: dict[int, list[int]] = {}
+        self.refcnt: dict[int, int] = {}
+        self.retained: set[int] = set()    # blocks the prefix tree holds onto
+        self.cached: set[int] = set()      # retained blocks with refcount 0
+        self.reclaimer = None              # Callable[[int], int]: evict >= n
+
+    # ---------------------------------------------------------- allocation
+    @property
+    def available(self) -> int:
+        """Blocks obtainable right now: free plus evictable-cached."""
+        return len(self.free) + (len(self.cached) if self.reclaimer else 0)
 
     def can_alloc(self, n: int) -> bool:
-        return len(self.free) >= n
+        return self.available >= n
+
+    def _replenish(self, n: int) -> None:
+        if len(self.free) < n and self.reclaimer is not None:
+            self.reclaimer(n - len(self.free))
+
+    def start_seq(self, seq_id: int) -> None:
+        """Open a sequence's table; raises if the seq id is already live (a
+        slot-recycling bug would otherwise silently merge two sequences)."""
+        if seq_id in self.tables:
+            raise ValueError(f"seq {seq_id} is already live")
+        self.tables[seq_id] = []
 
     def alloc(self, seq_id: int, n: int = 1) -> list[int]:
+        self._replenish(n)
         if len(self.free) < n:
             raise MemoryError("KV pool exhausted")
         blocks = [self.free.pop() for _ in range(n)]
+        for b in blocks:
+            self.refcnt[b] = 1
         self.tables.setdefault(seq_id, []).extend(blocks)
         return blocks
 
+    def share(self, seq_id: int, blocks: list[int]) -> None:
+        """Reference existing blocks from ``seq_id``'s table (prefix hits)."""
+        for b in blocks:
+            self.refcnt[b] = self.refcnt.get(b, 0) + 1
+            self.cached.discard(b)
+        self.tables.setdefault(seq_id, []).extend(blocks)
+
+    def cow(self, seq_id: int, block: int) -> int:
+        """Make ``block`` writable for ``seq_id``: if exclusively owned and
+        not retained by the prefix tree, it is returned unchanged; otherwise
+        a fresh block is swapped into the table (refcount of the shared one
+        drops) and returned — the caller must copy the device contents."""
+        if self.refcnt.get(block, 0) == 1 and block not in self.retained:
+            return block
+        self._replenish(1)
+        if not self.free:
+            raise MemoryError("KV pool exhausted (copy-on-write)")
+        new = self.free.pop()
+        self.refcnt[new] = 1
+        t = self.tables[seq_id]
+        t[t.index(block)] = new
+        self._decref(block)
+        return new
+
+    # ------------------------------------------------------------ release
+    def _decref(self, block: int) -> None:
+        rc = self.refcnt.get(block, 0) - 1
+        if rc > 0:
+            self.refcnt[block] = rc
+            return
+        self.refcnt.pop(block, None)
+        if block in self.retained:
+            self.cached.add(block)
+        else:
+            self.free.append(block)
+
     def free_seq(self, seq_id: int) -> int:
+        """Drop all of a sequence's references.  Idempotent: freeing a seq
+        that is not live is a no-op returning 0."""
         blocks = self.tables.pop(seq_id, [])
-        self.free.extend(reversed(blocks))
+        for b in blocks:
+            self._decref(b)
         return len(blocks)
 
+    # ------------------------------------------- prefix-tree cooperation
+    def retain(self, block: int) -> None:
+        """Mark a block as held by the prefix tree: at refcount zero it is
+        parked in ``cached`` instead of returning to the free list."""
+        self.retained.add(block)
+        if self.refcnt.get(block, 0) == 0:
+            self.cached.add(block)
+
+    def release_cached(self, block: int) -> None:
+        """Evict a cached block back to the free list (prefix-tree LRU)."""
+        self.cached.discard(block)
+        self.retained.discard(block)
+        if self.refcnt.get(block, 0) == 0:
+            self.free.append(block)
+
+    # -------------------------------------------------------------- stats
     @property
     def used_blocks(self) -> int:
-        return sum(len(v) for v in self.tables.values())
+        """Distinct physical blocks referenced by live sequences."""
+        return len(self.refcnt)
+
+    def stats(self) -> dict:
+        return {"total": self.n_blocks, "free": len(self.free),
+                "used": self.used_blocks, "cached": len(self.cached)}
 
 
 class PagedKVCache:

@@ -39,6 +39,7 @@ from repro.core.types import Request
 from repro.models import api
 from repro.serving.engine import BatchResult
 from repro.serving.kv_cache import BlockAllocator
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import greedy
 from repro.sharding.plan import ShardingPlan
 
@@ -58,6 +59,13 @@ class PagedEngineConfig:
     n_blocks: int = 128            # physical pool size (incl. the null block)
     max_seq_len: int = 256         # cap on prompt + generated (block-table width)
     max_new_tokens: int = 128
+    prefix_cache: bool = False     # radix-tree prefix sharing (prefix_cache.py)
+    admit_lookahead: int = 0       # queue entries scanned past a blocked head
+    # partial-tail sharing saves tail_len more prefill tokens per hit but
+    # widens the continuation-prefill shape space (one jit specialization
+    # per distinct hit length vs per hit *block count*); turn off where
+    # compile latency matters more than the tail FLOPs
+    share_partial_tails: bool = True
 
     @classmethod
     def from_memory_budget(cls, cfg: ModelConfig, memory_budget: float,
@@ -81,7 +89,17 @@ class PagedBatchResult(BatchResult):
     admission_waves: int = 0
     peak_blocks: int = 0           # high-water mark of live blocks
     kv_utilization: float = 0.0    # mean valid-token / allocated-slot ratio
+    #   (can exceed 1.0 with the prefix cache: shared blocks hold valid
+    #   tokens for several sequences at once)
     waste_vs_padded: float = 0.0   # mean 1 - allocated / max-len reservation
+    peak_residents: int = 0        # high-water mark of concurrent sequences
+    hol_skips: int = 0             # admissions that jumped a blocked queue head
+    # --- prefix-cache accounting (zeros with prefix_cache=False) ---
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0     # prompt tokens served from cached blocks
+    prefix_evictions: int = 0      # cached blocks reclaimed under pressure
+    cow_forks: int = 0             # partial tail blocks forked before writing
 
 
 @dataclass
@@ -96,6 +114,7 @@ class PagedDecodeState:
     alloc: BlockAllocator
     null_block: int
     active: list                                 # [B] Optional[Request]
+    prefix: Optional[PrefixCache] = None         # radix prefix-sharing tree
 
     @classmethod
     def create(cls, cfg: ModelConfig, pcfg: PagedEngineConfig,
@@ -104,12 +123,14 @@ class PagedDecodeState:
         alloc = BlockAllocator(pcfg.n_blocks)
         null = alloc.alloc(-1, 1)[0]             # reserved garbage block
         b, nb = pcfg.max_batch, pcfg.max_blocks
+        prefix = PrefixCache(alloc, pcfg.block_size) if pcfg.prefix_cache \
+            else None
         return cls(pools=pools,
                    block_tables=np.full((b, nb), null, np.int32),
                    kv_len=np.zeros(b, np.int32),
                    cur_tok=np.zeros(b, np.int32),
                    alloc=alloc, null_block=null,
-                   active=[None] * b)
+                   active=[None] * b, prefix=prefix)
 
     # ------------------------------------------------------------ block ops
     def ensure_blocks(self, slot: int, new_len: int, block_size: int) -> None:
@@ -163,7 +184,20 @@ class PagedEngine:
                 cfg, params, {"tokens": toks}, plan=plan,
                 cache_len=cache_len, kv_len=kv_len),
             static_argnames=("cache_len",))
+        # continuation prefill: only the uncached suffix runs through the
+        # model, attending through the gathered prefix K/V (prefix_cache.py)
+        self._prefill_suffix = jax.jit(
+            lambda params, toks, kv_len, cache_len, prefix: api.prefill(
+                cfg, params, {"tokens": toks}, plan=plan,
+                cache_len=cache_len, kv_len=kv_len, prefix_kv=prefix),
+            static_argnames=("cache_len",))
         self._scatter = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        # copy-on-write block fork: clone one physical block across all
+        # layer pools in place (src/dst are scalars, donated pools alias)
+        self._cow_copy = jax.jit(
+            lambda pools, src, dst: jax.tree.map(
+                lambda p: p.at[:, dst].set(p[:, src]), pools),
+            donate_argnums=(0,))
 
     @staticmethod
     def _scatter_impl(pools, cache, blk, off):
@@ -188,28 +222,56 @@ class PagedEngine:
             total += max(0, self._worst_blocks(r, budget) - held)
         return total
 
+    def _prefix_discount(self, st: PagedDecodeState, r: Request
+                         ) -> tuple[int, int]:
+        """(full-block hits, matched blocks currently cached) for a candidate
+        — a peek: no refcounts move, no LRU touch.  Only *full* blocks
+        discount demand (a matched partial tail is forked copy-on-write into
+        a fresh block, so its slot is still charged)."""
+        if st.prefix is None:
+            return 0, 0
+        m = st.prefix.lookup(r.tokens, peek=True,
+                             partial=self.pcfg.share_partial_tails)
+        cached = sum(b in st.alloc.cached for b in m.blocks())
+        return len(m.full), cached
+
     def can_admit(self, st: PagedDecodeState, r: Request, budget: int) -> bool:
-        wb = self._worst_blocks(r, budget)
-        return st.alloc.can_alloc(wb + self._reserved_remaining(st, budget))
+        """Worst-case block demand, net of prefix hits: shared full blocks
+        are already resident, so cache hits directly buy admission capacity.
+        Matched blocks sitting in the evictable cache are excluded from the
+        supply — sharing them revives them, they cannot also be evicted."""
+        full, cached = self._prefix_discount(st, r)
+        need = max(0, self._worst_blocks(r, budget) - full) \
+            + self._reserved_remaining(st, budget)
+        return st.alloc.available - cached >= need
 
     def _admit(self, st: PagedDecodeState, queue: list, outs: dict,
                res: PagedBatchResult, budget: int) -> int:
-        """Fill free slots from the queue head (FIFO; head-of-line blocking
-        is the backpressure signal).  Each admitted prompt is prefilled
-        individually — resident slots are untouched."""
+        """Fill free slots from the queue (FIFO).  A too-big queue head only
+        blocks admission for ``admit_lookahead == 0``; otherwise up to that
+        many later requests are scanned and the first that fits is admitted
+        — bounded, so the head cannot starve.  Each admitted prompt is
+        prefilled individually — resident slots are untouched."""
         admitted = 0
         t0 = time.perf_counter()
         for slot in range(self.pcfg.max_batch):
             if st.active[slot] is not None or not queue:
                 continue
-            r = queue[0]
-            if not self.can_admit(st, r, budget):
+            pick = None
+            for qi in range(min(len(queue), self.pcfg.admit_lookahead + 1)):
+                if self.can_admit(st, queue[qi], budget):
+                    pick = qi
+                    break
+            if pick is None:
                 break
-            queue.pop(0)
+            if pick:
+                res.hol_skips += 1
+            r = queue.pop(pick)
             st.active[slot] = r
-            self._prefill_into(st, slot, r, outs)
-            res.prefill_tokens += self._padded_len(len(r.tokens))
+            self._prefill_into(st, slot, r, outs, res)
             admitted += 1
+            res.peak_residents = max(
+                res.peak_residents, sum(a is not None for a in st.active))
         if admitted:
             res.admission_waves += 1
             res.prefill_s += time.perf_counter() - t0
@@ -219,24 +281,67 @@ class PagedEngine:
         bs = self.pcfg.block_size
         return -(-n // bs) * bs
 
+    def _gather_prefix(self, pools, blocks: list[int], p_len: int):
+        """Materialize the cached prefix K/V ([n_groups, 1, P, KV, hd] per
+        leaf) from the physical pool for the continuation prefill."""
+        idx = jnp.asarray(blocks, jnp.int32)
+
+        def g(pool):
+            sel = pool[:, idx]                  # [n_groups, nb, bs, KV, hd]
+            flat = sel.reshape(sel.shape[0], -1, *sel.shape[3:])
+            return flat[:, None, :p_len]
+        return jax.tree.map(g, pools)
+
     def _prefill_into(self, st: PagedDecodeState, slot: int, r: Request,
-                      outs: dict) -> None:
+                      outs: dict, res: PagedBatchResult) -> None:
         prompt = list(r.tokens)
         ln = len(prompt)
-        cl = self._padded_len(ln)                # pad to the block boundary
-        toks = np.zeros((1, cl), np.int32)
-        toks[0, :ln] = prompt
-        logits, cache = self._prefill(self.params, jnp.asarray(toks),
-                                      jnp.asarray([ln], jnp.int32), cl)
-        st.ensure_blocks(slot, ln, self.pcfg.block_size)
+        bs = self.pcfg.block_size
+        st.alloc.start_seq(slot)
+        p_len = n_shared = 0
+        if st.prefix is not None:
+            m = st.prefix.lookup(prompt,
+                                 partial=self.pcfg.share_partial_tails)
+            if m.hit_tokens:
+                st.prefix.share(slot, m)
+                p_len = m.hit_tokens
+                n_shared = len(m.full) + (1 if m.tail is not None else 0)
+                if m.tail is not None:
+                    # the suffix scatter writes into the tail block at
+                    # offset tail_len — fork it first if anyone else
+                    # (tree or sibling sequence) can still read it
+                    new = st.alloc.cow(slot, m.tail.block)
+                    if new != m.tail.block:
+                        st.pools = self._cow_copy(
+                            st.pools, jnp.int32(m.tail.block), jnp.int32(new))
+                        res.cow_forks += 1
+        st.ensure_blocks(slot, ln, bs)
         table = st.alloc.tables[slot]
-        pos = np.arange(cl)
-        blk = np.asarray([table[p // self.pcfg.block_size] if p < ln
+        st.block_tables[slot, :len(table)] = table
+        sn = ln - p_len                          # uncached suffix
+        cl = self._padded_len(sn)                # pad to the block boundary
+        toks = np.zeros((1, cl), np.int32)
+        toks[0, :sn] = prompt[p_len:]
+        if p_len:
+            pref = self._gather_prefix(st.pools, table[:n_shared], p_len)
+            logits, cache = self._prefill_suffix(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([sn], jnp.int32), cl, pref)
+        else:
+            logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                          jnp.asarray([sn], jnp.int32), cl)
+        pos = p_len + np.arange(cl)
+        blk = np.asarray([table[p // bs] if p < ln
                           else st.null_block for p in pos], np.int32)
-        off = (pos % self.pcfg.block_size).astype(np.int32)
+        off = (pos % bs).astype(np.int32)
         st.pools = self._scatter(st.pools, cache, jnp.asarray(blk),
                                  jnp.asarray(off))
         st.kv_len[slot] = ln
+        res.prefill_tokens += cl
+        if st.prefix is not None:
+            # publish the prompt's full blocks so same-prefix requests
+            # admitted while this one decodes already hit them
+            st.prefix.insert(prompt, table, (ln // bs) * bs)
         first = int(np.asarray(greedy(logits, self.cfg.vocab_size))[0])
         st.cur_tok[slot] = first
         outs[r.rid] = [first]
@@ -266,6 +371,8 @@ class PagedEngine:
         outs: dict[int, list[int]] = {}
         util_sum = waste_sum = 0.0
         util_n = 0
+        peak_live = -1
+        peak_pool_stats: Optional[dict] = None
         # _admit accrues res.prefill_s itself (mid-run waves included);
         # decode_s is the remainder of the serving wall clock
         t_total = time.perf_counter()
@@ -283,7 +390,7 @@ class PagedEngine:
                 for slot, r in enumerate(st.active):
                     if r is not None and len(outs[r.rid]) >= min(
                             r.true_output_len, budget):
-                        self._finish(st, slot, r)
+                        self._finish(st, slot, r, outs)
                         progress = True
                 if progress and queue:
                     self._admit(st, queue, outs, res, budget)
@@ -297,6 +404,9 @@ class PagedEngine:
             # c) KV gauges at the allocation high-water mark (post-growth)
             live = st.live_blocks
             res.peak_blocks = max(res.peak_blocks, live)
+            if live >= peak_live:
+                peak_live = live
+                peak_pool_stats = st.alloc.stats()
             valid = int(st.kv_len[[i for i, a in enumerate(st.active)
                                    if a is not None]].sum())
             alloc_slots = live * self.pcfg.block_size
@@ -325,11 +435,37 @@ class PagedEngine:
         if util_n:
             res.kv_utilization = util_sum / util_n
             res.waste_vs_padded = waste_sum / util_n
-        if self.monitor is not None and util_n:
-            self.monitor.observe_kv(res.kv_utilization, res.waste_vs_padded)
+        if st.prefix is not None:
+            ps = st.prefix.stats
+            res.prefix_lookups = ps.lookups
+            res.prefix_hits = ps.hits
+            res.prefix_hit_tokens = ps.hit_tokens
+            res.prefix_evictions = ps.evicted_blocks
+        if self.monitor is not None:
+            if util_n:
+                self.monitor.observe_kv(res.kv_utilization,
+                                        res.waste_vs_padded)
+            # gauges snapshot the pool at its occupancy high-water mark —
+            # post-drain stats would always show an empty pool
+            self.monitor.observe_pool(
+                peak_pool_stats or st.alloc.stats(),
+                fragmentation=max(0.0, 1.0 - res.kv_utilization)
+                if util_n else 0.0)
+            if st.prefix is not None:
+                self.monitor.observe_prefix(st.prefix.stats,
+                                            cow_forks=res.cow_forks)
         return res
 
-    def _finish(self, st: PagedDecodeState, slot: int, r: Request) -> None:
+    def _finish(self, st: PagedDecodeState, slot: int, r: Request,
+                outs: dict) -> None:
+        if st.prefix is not None:
+            # publish the full chain — prompt plus the generated tokens
+            # whose K/V was written (all but the last emitted token) — so a
+            # multi-turn follow-up whose prompt embeds this answer hits it;
+            # the non-aligned remainder becomes a COW-shareable partial leaf
+            n_kv = int(st.kv_len[slot])
+            chain = list(r.tokens) + outs[r.rid][:n_kv - len(r.tokens)]
+            st.prefix.insert(chain, st.alloc.tables[slot], n_kv)
         st.free_slot(slot)
         if self.monitor is not None:
             self.monitor.observe(r)
