@@ -5,7 +5,8 @@ from __future__ import annotations
 
 import copy
 
-from benchmarks.common import bench_cluster, csv_row, emit, trained_predictor
+from benchmarks.common import (bench_cluster, csv_row, emit, persist,
+                               trained_predictor)
 from repro.configs import get_config
 from repro.core import Monitor, ResourceProfiler, helr, slo_odbs
 from repro.core.scheduler import SchedulerConfig
@@ -39,4 +40,7 @@ def run(n_requests: int = 160, rate: float = 48.0) -> dict:
     best_slo = min(r["slo_violation"] for r in rows)
     csv_row("ablation_weights", 0.0,
             f"best_lat={best_lat};best_viol={best_slo}")
+    persist("ablation", latency_s=best_lat,
+            slo_attainment=round(1.0 - best_slo, 4),
+            extra={"sweep": rows})
     return out

@@ -1,0 +1,137 @@
+"""Cluster-serving benchmark: router-policy ablation + autoscaler vs static
+provisioning (EXPERIMENTS.md §Perf design record).
+
+Two claims, enforced with assertions so regressions fail ``benchmarks.run``:
+
+* **Routing** — at equal replica count on a multi-turn shared-prefix
+  workload, ``prefix_affinity`` and ``slo_aware`` beat ``round_robin`` on
+  SLO attainment, and affinity routing strictly raises the prefix hit rate
+  and strictly cuts total prefill tokens (conversations stay sticky to the
+  replica whose radix cache holds their grown context).  The conversation
+  count is chosen coprime to the replica count — with ``n_convs %
+  n_replicas == 0`` round-robin accidentally keeps every conversation
+  sticky and the ablation degenerates.
+* **Autoscaling** — under a bursty arrival process the forecast-driven
+  autoscaler holds at least the SLO attainment of a static fleet while
+  spending fewer replica-seconds (it drains the quiet valleys and
+  overshoots the static count inside bursts — elasticity buys burst
+  capacity static provisioning pays for all day).
+"""
+from __future__ import annotations
+
+import copy
+
+from benchmarks.common import csv_row, emit, persist
+from repro.configs import get_config
+from repro.core import get_scheduler
+from repro.core.scheduler import SchedulerConfig
+from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
+                                 gen_requests, gen_shared_prefix_requests)
+from repro.serving import AutoscalerConfig, simulate_cluster
+from repro.serving.cluster import RouterConfig
+
+N_REPLICAS = 3
+
+
+def _route_workload():
+    # 236 requests / 4 turns = 59 conversations: 59 % 3 != 0 (see module doc)
+    return gen_shared_prefix_requests(SharedPrefixConfig(
+        n_requests=236, n_templates=18, prefix_len=96, suffix_mean=3.0,
+        turns=4, arrival_rate=22.0, slo_lo=4.0, slo_hi=40.0,
+        output_base=48.0, seed=3))
+
+
+def _burst_workload():
+    return gen_requests(WorkloadConfig(
+        n_requests=300, arrival_rate=12.0, arrival_pattern="bursty",
+        burst_factor=4.0, quiet_factor=0.2, burst_mean_s=3.0,
+        quiet_mean_s=15.0, slo_lo=8.0, slo_hi=60.0, seed=9))
+
+
+def _run(reqs, cfg, *, router, n_replicas=N_REPLICAS, autoscale=None):
+    return simulate_cluster(
+        [copy.deepcopy(r) for r in reqs], cfg, get_scheduler("slo-odbs"),
+        SchedulerConfig(), n_replicas=n_replicas, router=router,
+        autoscale=autoscale)
+
+
+def run() -> dict:
+    cfg = get_config("chatglm2-6b")
+
+    # ---------------------------------------------- router-policy ablation
+    reqs = _route_workload()
+    policies = {
+        "round_robin": "round_robin",
+        "least_loaded": "least_loaded",
+        "prefix_affinity": "prefix_affinity",
+        "slo_aware": RouterConfig(policy="slo_aware", shed_slack=4.0),
+    }
+    rows = {}
+    for name, rc in policies.items():
+        res = _run(reqs, cfg, router=rc)
+        rows[name] = res.summary()
+    rr, aff, slo = rows["round_robin"], rows["prefix_affinity"], \
+        rows["slo_aware"]
+
+    if aff["slo_attainment"] <= rr["slo_attainment"]:
+        raise AssertionError(
+            f"prefix_affinity did not beat round_robin on SLO attainment "
+            f"({aff['slo_attainment']} vs {rr['slo_attainment']})")
+    if slo["slo_attainment"] <= rr["slo_attainment"]:
+        raise AssertionError(
+            f"slo_aware did not beat round_robin on SLO attainment "
+            f"({slo['slo_attainment']} vs {rr['slo_attainment']})")
+    if aff["prefill_tokens"] >= rr["prefill_tokens"]:
+        raise AssertionError(
+            f"affinity routing did not cut prefill tokens "
+            f"({aff['prefill_tokens']} vs {rr['prefill_tokens']})")
+    if aff["prefix_hit_rate"] <= rr["prefix_hit_rate"]:
+        raise AssertionError(
+            f"affinity routing did not raise the prefix hit rate "
+            f"({aff['prefix_hit_rate']} vs {rr['prefix_hit_rate']})")
+
+    # ------------------------------------------- autoscaler vs static fleet
+    burst = _burst_workload()
+    static = _run(burst, cfg, router="least_loaded", n_replicas=4)
+    auto = _run(burst, cfg, router="least_loaded", n_replicas=1,
+                autoscale=AutoscalerConfig(
+                    interval=1.0, min_replicas=1, max_replicas=6,
+                    spawn_delay=1.0, down_patience=3))
+    st, au = static.summary(), auto.summary()
+    if au["slo_attainment"] < st["slo_attainment"]:
+        raise AssertionError(
+            f"autoscaler lost SLO attainment vs static provisioning "
+            f"({au['slo_attainment']} vs {st['slo_attainment']})")
+    if au["replica_seconds"] >= st["replica_seconds"]:
+        raise AssertionError(
+            f"autoscaler used no fewer replica-seconds than static "
+            f"({au['replica_seconds']} vs {st['replica_seconds']})")
+
+    out = {"router_ablation": rows,
+           "autoscaler": {"static": st, "auto": au},
+           "claims": {
+               "affinity_vs_rr_attainment":
+                   f"{aff['slo_attainment']} vs {rr['slo_attainment']}",
+               "affinity_prefill_cut": round(
+                   1 - aff["prefill_tokens"] / rr["prefill_tokens"], 4),
+               "auto_replica_seconds_saved": round(
+                   1 - au["replica_seconds"] / st["replica_seconds"], 4),
+           }}
+    emit("cluster_bench", out)
+    persist("cluster",
+            latency_s=aff["avg_latency_s"],
+            p99_latency_s=aff["p99_latency_s"],
+            throughput=aff["throughput_tok_s"],
+            utilization=au["mean_utilization"],
+            slo_attainment=aff["slo_attainment"],
+            extra=out["claims"])
+    csv_row("cluster_router", 0.0,
+            f"attain_rr={rr['slo_attainment']};"
+            f"attain_aff={aff['slo_attainment']};"
+            f"attain_slo={slo['slo_attainment']};"
+            f"prefill_cut={out['claims']['affinity_prefill_cut']}")
+    csv_row("cluster_autoscale", 0.0,
+            f"attain_static={st['slo_attainment']};"
+            f"attain_auto={au['slo_attainment']};"
+            f"replica_s={st['replica_seconds']}->{au['replica_seconds']}")
+    return out

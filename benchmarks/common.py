@@ -23,6 +23,29 @@ def emit(name: str, payload: dict):
     (ART / f"{name}.json").write_text(json.dumps(payload, indent=1, default=str))
 
 
+def persist(name: str, *, latency_s=None, p99_latency_s=None,
+            throughput=None, utilization=None, slo_attainment=None,
+            extra: dict | None = None) -> dict:
+    """Write ``BENCH_<name>.json`` with the shared cross-PR schema so the
+    perf trajectory is machine-readable: every benchmark reports the same
+    latency / throughput / utilization / SLO fields (null where a harness
+    has no such axis) plus free-form ``extra`` detail."""
+    payload = {
+        "bench": name,
+        "schema": 1,
+        "latency_s": latency_s,
+        "p99_latency_s": p99_latency_s,
+        "throughput": throughput,
+        "utilization": utilization,
+        "slo_attainment": slo_attainment,
+        "extra": extra or {},
+    }
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"BENCH_{name}.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+    return payload
+
+
 def csv_row(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_cluster, csv_row, emit, timeit
+from benchmarks.common import bench_cluster, csv_row, emit, persist
 from repro.configs import get_config
 from repro.core.types import DeviceMap
 from repro.serving.simulator import LatencyModel
@@ -36,4 +36,6 @@ def run() -> dict:
            "latency_spread": round(max(lats) / min(lats), 1)}
     emit("fig1_config_sweep", out)
     csv_row("fig1_config_sweep", 0.0, f"latency_spread={out['latency_spread']}x")
+    persist("fig1", latency_s=min(lats) / 1e3,
+            extra={"latency_spread": out["latency_spread"]})
     return out

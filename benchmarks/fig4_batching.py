@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import copy
 
-from benchmarks.common import bench_cluster, csv_row, emit, trained_predictor
+from benchmarks.common import (bench_cluster, csv_row, emit, persist,
+                               trained_predictor)
 from repro.configs import get_config
 from repro.core import Monitor, ResourceProfiler, get_scheduler, helr
 from repro.core.scheduler import SchedulerConfig
@@ -33,4 +34,11 @@ def run(n_requests: int = 192, rate: float = 48.0) -> dict:
     csv_row("fig4_batching", 0.0,
             f"slo_odbs_viol={rows['slo-odbs']['slo_violation']};"
             f"fifo_viol={rows['fifo']['slo_violation']}")
+    best = rows["slo-odbs"]
+    persist("fig4_batching", latency_s=best["avg_latency_s"],
+            p99_latency_s=best["p99_latency_s"],
+            throughput=best["throughput_tok_s"],
+            utilization=best["gpu_util"],
+            slo_attainment=round(1.0 - best["slo_violation"], 4),
+            extra={"fifo_slo_violation": rows["fifo"]["slo_violation"]})
     return out

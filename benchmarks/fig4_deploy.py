@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import copy
 
-from benchmarks.common import csv_row, emit, trained_predictor
+from benchmarks.common import csv_row, emit, persist, trained_predictor
 from repro.configs import get_config
 from repro.core import (Monitor, ResourceProfiler, bgs, get_scheduler, he,
                         helr, lr)
@@ -57,4 +57,11 @@ def run(n_requests: int = 192, rate: float = 48.0) -> dict:
             f"he_util={rows['he']['gpu_util']};"
             f"lr_tput={rows['lr']['throughput_tok_s']};"
             f"bgs_tput={rows['bgs']['throughput_tok_s']}")
+    best = rows["helr"]
+    persist("fig4_deploy", latency_s=best["avg_latency_s"],
+            p99_latency_s=best["p99_latency_s"],
+            throughput=best["throughput_tok_s"],
+            utilization=best["gpu_util"],
+            slo_attainment=round(1.0 - best["slo_violation"], 4),
+            extra={"bgs_throughput": rows["bgs"]["throughput_tok_s"]})
     return out

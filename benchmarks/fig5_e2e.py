@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import copy
 
-from benchmarks.common import bench_cluster, csv_row, emit, trained_predictor
+from benchmarks.common import (bench_cluster, csv_row, emit, persist,
+                               trained_predictor)
 from repro.configs import get_config
 from repro.core import Monitor, ResourceProfiler, get_scheduler, helr
 from repro.core.deployer import default_even_deploy
@@ -62,4 +63,10 @@ def run(n_requests: int = 192, rate: float = 48.0, seed: int = 7) -> dict:
             f"lat_red_s3={derived['latency_reduction_vs_s3']};"
             f"tput_s3={derived['throughput_gain_vs_s3']}x;"
             f"ua_viol={derived['slo_violation_ua']}")
+    persist("fig5", latency_s=ua["avg_latency_s"],
+            p99_latency_s=ua["p99_latency_s"],
+            throughput=ua["throughput_tok_s"],
+            utilization=ua["gpu_util"],
+            slo_attainment=round(1.0 - ua["slo_violation"], 4),
+            extra=derived)
     return out

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, emit, timeit
+from benchmarks.common import csv_row, emit, persist, timeit
 from repro.kernels.decode_attention.xla import decode_attention_xla
 from repro.kernels.flash_attention.xla import flash_attention_xla
 from repro.kernels.wkv6.xla import wkv6_xla
@@ -50,4 +50,7 @@ def run() -> dict:
     csv_row("kernel_wkv6_256", us, "chunked")
 
     emit("kernel_bench", rows)
+    persist("kernels",
+            latency_s=rows["flash_prefill_512"]["us"] / 1e6,
+            extra=rows)
     return rows

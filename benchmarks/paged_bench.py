@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, emit, timeit
+from benchmarks.common import csv_row, emit, persist, timeit
 from repro.configs import get_config
 from repro.core.types import Batch
 from repro.data.workload import WorkloadConfig, gen_requests
@@ -93,4 +93,7 @@ def run() -> dict:
     _kernel_micro(rows)
     _engine_e2e(rows)
     emit("paged_bench", rows)
+    persist("paged", throughput=rows["engine_paged"]["tok_s"],
+            utilization=rows["engine_paged"]["kv_utilization"],
+            extra=rows)
     return rows

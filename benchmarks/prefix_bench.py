@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, emit
+from benchmarks.common import csv_row, emit, persist
 from repro.configs import get_config
 from repro.core.scheduler import prefix_affinity_key
 from repro.data.workload import SharedPrefixConfig, gen_shared_prefix_requests
@@ -99,4 +99,5 @@ def run() -> dict:
             f"residents={res_off.peak_residents}->{res_on.peak_residents},"
             f"hit_tokens={res_on.prefix_hit_tokens}")
     emit("prefix_bench", rows)
+    persist("prefix", extra=rows)
     return rows

@@ -8,7 +8,7 @@ import copy
 
 import numpy as np
 
-from benchmarks.common import csv_row, emit, trained_predictor
+from benchmarks.common import csv_row, emit, persist, trained_predictor
 from repro.data.workload import WorkloadConfig, train_pairs
 
 
@@ -38,4 +38,5 @@ def run() -> dict:
     csv_row("profiler_accuracy", 0.0,
             f"in_dist={in_dist:.3f};holdout={held:.3f};"
             f"shift_adapt={shifted0:.3f}->{shifted1:.3f}")
+    persist("profiler", extra=out)
     return out

@@ -16,7 +16,7 @@ from __future__ import annotations
 import json
 import pathlib
 
-from benchmarks.common import csv_row, emit
+from benchmarks.common import csv_row, emit, persist
 from repro.configs import TPU_V5E
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
@@ -80,6 +80,8 @@ def run(mesh: str = "16x16", plan: str = "baseline") -> dict:
     emit(f"roofline_{mesh}_{plan}", out)
     csv_row(f"roofline_{mesh}_{plan}", 0.0,
             f"cells={len(rows)};skips={len(skips)}")
+    persist(f"roofline_{mesh}_{plan}",
+            extra={"cells": len(rows), "skips": len(skips)})
     return out
 
 

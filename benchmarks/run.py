@@ -1,35 +1,67 @@
-"""Benchmark entrypoint: one harness per paper table/figure + roofline.
-Prints ``name,us_per_call,derived`` CSV rows; JSON artifacts land in
-artifacts/bench/.  Run: PYTHONPATH=src python -m benchmarks.run
+"""Benchmark entrypoint: one harness per paper table/figure + roofline +
+the serving-runtime benches.  Prints ``name,us_per_call,derived`` CSV rows;
+JSON artifacts (plus shared-schema ``BENCH_<name>.json`` results) land in
+artifacts/bench/.
+
+    PYTHONPATH=src python -m benchmarks.run              # whole suite
+    PYTHONPATH=src python -m benchmarks.run --list       # available names
+    PYTHONPATH=src python -m benchmarks.run --only cluster
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
+def _harnesses() -> dict:
+    from benchmarks import (ablation_weights, cluster_bench,
+                            fig1_config_sweep, fig4_batching, fig4_deploy,
+                            fig5_e2e, kernel_bench, paged_bench,
+                            prefix_bench, profiler_accuracy, roofline,
+                            table1_device_map)
+    return {
+        "table1": table1_device_map.run,
+        "fig1": fig1_config_sweep.run,
+        "fig4_batching": fig4_batching.run,
+        "fig4_deploy": fig4_deploy.run,
+        "fig5": fig5_e2e.run,
+        "ablation": ablation_weights.run,
+        "profiler": profiler_accuracy.run,
+        "kernels": kernel_bench.run,
+        "paged": paged_bench.run,
+        "prefix": prefix_bench.run,
+        "cluster": cluster_bench.run,
+        "roofline": lambda: (roofline.run("16x16", "baseline"),
+                             roofline.run("2x16x16", "baseline")),
+    }
+
+
 def main() -> None:
-    from benchmarks import (ablation_weights, fig1_config_sweep,
-                            fig4_batching, fig4_deploy, fig5_e2e,
-                            kernel_bench, paged_bench, prefix_bench,
-                            profiler_accuracy, roofline, table1_device_map)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", metavar="NAME",
+                    help="run a single benchmark (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark names and exit")
+    args = ap.parse_args()
+    harnesses = _harnesses()
+    if args.list:
+        print("\n".join(harnesses))
+        return
+    if args.only is not None:
+        if args.only not in harnesses:
+            raise SystemExit(f"unknown benchmark {args.only!r}; "
+                             f"choose from: {', '.join(harnesses)}")
+        harnesses = {args.only: harnesses[args.only]}
     print("name,us_per_call,derived")
     failures = 0
-    for mod in (table1_device_map, fig1_config_sweep, fig4_batching,
-                fig4_deploy, fig5_e2e, ablation_weights, profiler_accuracy,
-                kernel_bench, paged_bench, prefix_bench):
+    for name, fn in harnesses.items():
         try:
-            mod.run()
+            fn()
         except Exception:                              # noqa: BLE001
             failures += 1
-            print(f"BENCH-FAILED,{mod.__name__}", file=sys.stderr)
+            print(f"BENCH-FAILED,{name}", file=sys.stderr)
             traceback.print_exc()
-    try:
-        roofline.run("16x16", "baseline")
-        roofline.run("2x16x16", "baseline")
-    except Exception:                                  # noqa: BLE001
-        failures += 1
-        traceback.print_exc()
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import bench_cluster, csv_row, emit, timeit
+from benchmarks.common import bench_cluster, csv_row, emit, persist, timeit
 from repro.configs import get_config
 from repro.core.types import DeviceMap
 from repro.serving.simulator import LatencyModel
@@ -37,4 +37,6 @@ def run() -> dict:
                                                layers={0: 20, 1: 8})
                                      ).token_time(batch, kv), n=20)
     csv_row("table1_device_map", us, f"spread={out['spread']}x")
+    persist("table1", throughput=best,
+            extra={"worst_tok_s": worst, "spread": out["spread"]})
     return out

@@ -4,6 +4,7 @@
 #   ./ci.sh            # everything
 #   ./ci.sh kernels    # kernel parity tests only (fast)
 #   ./ci.sh serving    # paged-engine + prefix-cache runtime tests (fast)
+#   ./ci.sh cluster    # cluster router/autoscaler tests + smoke (fast)
 set -euo pipefail
 cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -12,6 +13,28 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 KERNEL_TESTS=(tests/test_kernels_flash.py tests/test_kernels_decode.py
               tests/test_kernels_wkv6.py tests/test_paged_attention.py)
 SERVING_TESTS=(tests/test_paged_engine.py tests/test_prefix_cache.py)
+CLUSTER_TESTS=(tests/test_cluster.py tests/test_workload.py)
+
+cluster_smoke() {
+    echo "== cluster smoke (2 simulated replicas, slo_aware router) =="
+    python - <<'PY'
+from repro.configs import get_config
+from repro.core import get_scheduler
+from repro.core.scheduler import SchedulerConfig
+from repro.data.workload import WorkloadConfig, gen_requests
+from repro.serving import simulate_cluster
+
+reqs = gen_requests(WorkloadConfig(n_requests=48, arrival_rate=16.0,
+                                   slo_lo=5.0, slo_hi=50.0, seed=1))
+res = simulate_cluster(reqs, get_config("chatglm2-6b"),
+                       get_scheduler("slo-odbs"), SchedulerConfig(),
+                       n_replicas=2, router="slo_aware")
+assert len(res.finished) + len(res.shed) == 48, res.summary()
+assert res.peak_replicas == 2
+assert 0.0 <= res.slo_attainment <= 1.0
+print("cluster smoke:", res.summary())
+PY
+}
 
 if [[ "${1:-}" == "kernels" ]]; then
     python -m pytest -q "${KERNEL_TESTS[@]}"
@@ -23,6 +46,12 @@ if [[ "${1:-}" == "serving" ]]; then
     exit 0
 fi
 
+if [[ "${1:-}" == "cluster" ]]; then
+    python -m pytest -q "${CLUSTER_TESTS[@]}"
+    cluster_smoke
+    exit 0
+fi
+
 echo "== tier-1 (kernel files deferred to the dedicated step below) =="
 IGNORES=()
 for t in "${KERNEL_TESTS[@]}"; do IGNORES+=("--ignore=$t"); done
@@ -30,5 +59,7 @@ python -m pytest -x -q "${IGNORES[@]}"
 
 echo "== kernel parity (pallas interpret + xla vs oracle) =="
 python -m pytest -q "${KERNEL_TESTS[@]}"
+
+cluster_smoke
 
 echo "ci.sh: all green"

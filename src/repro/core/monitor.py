@@ -34,10 +34,26 @@ class MonitorStats:
     prefix_hit_blocks: int = 0
     prefix_evicted_blocks: int = 0
     prefix_cow_forks: int = 0
+    # --- SLO accounting (one code path: engines, simulator, cluster) ---
+    slo_observed: int = 0          # finished (or shed) requests with a deadline
+    slo_violations: int = 0        # missed deadlines, shed requests included
+    shed_requests: int = 0         # router admission-shed (never served)
+    # --- cluster gauges (latest snapshot from the cluster layer) ---
+    cluster_replicas: int = 0
+    cluster_queue_depths: list = field(default_factory=list)
+    cluster_utilizations: list = field(default_factory=list)
+    scale_up_events: int = 0
+    scale_down_events: int = 0
 
     @property
     def bucket_accuracy(self) -> float:
         return self.bucket_hits / self.observed if self.observed else 0.0
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of deadline-carrying requests served within their SLO."""
+        return 1.0 - self.slo_violations / self.slo_observed \
+            if self.slo_observed else 1.0
 
     @property
     def kv_utilization(self) -> float:
@@ -71,6 +87,10 @@ class Monitor:
         true = req.true_output_len
         st = self.stats
         st.observed += 1
+        met = req.slo_met
+        if met is not None:
+            st.slo_observed += 1
+            st.slo_violations += not met
         true_bucket = int(self.profiler.predictor.length_to_bucket([true])[0])
         if req.predicted_bucket == true_bucket:
             st.bucket_hits += 1
@@ -119,6 +139,29 @@ class Monitor:
         st.prefix_evicted_blocks += prefix_stats.evicted_blocks
         st.prefix_cow_forks += cow_forks
 
+    def observe_shed(self, req: Request) -> None:
+        """A request the router refused (no replica could meet its SLO):
+        counted as an SLO violation — shedding is not a free pass."""
+        st = self.stats
+        st.shed_requests += 1
+        st.slo_observed += 1
+        st.slo_violations += 1
+
+    def observe_scale(self, direction: int, n: int = 1) -> None:
+        """Autoscaler event: ``direction`` > 0 adds replicas, < 0 drains."""
+        if direction > 0:
+            self.stats.scale_up_events += n
+        elif direction < 0:
+            self.stats.scale_down_events += n
+
+    def observe_replicas(self, queue_depths: list, utilizations: list) -> None:
+        """Latest cluster snapshot: one queue depth / busy-fraction gauge per
+        accepting replica."""
+        st = self.stats
+        st.cluster_replicas = len(queue_depths)
+        st.cluster_queue_depths = list(queue_depths)
+        st.cluster_utilizations = [round(u, 4) for u in utilizations]
+
     def metrics(self) -> dict:
         st = self.stats
         out = {
@@ -142,4 +185,15 @@ class Monitor:
             out["prefix_hit_tokens"] = st.prefix_hit_tokens
             out["prefix_evicted_blocks"] = st.prefix_evicted_blocks
             out["prefix_cow_forks"] = st.prefix_cow_forks
+        if st.slo_observed:
+            out["slo_observed"] = st.slo_observed
+            out["slo_violations"] = st.slo_violations
+            out["slo_attainment"] = round(st.slo_attainment, 4)
+            out["shed_requests"] = st.shed_requests
+        if st.cluster_replicas:
+            out["cluster_replicas"] = st.cluster_replicas
+            out["cluster_queue_depths"] = st.cluster_queue_depths
+            out["cluster_utilizations"] = st.cluster_utilizations
+            out["scale_up_events"] = st.scale_up_events
+            out["scale_down_events"] = st.scale_down_events
         return out

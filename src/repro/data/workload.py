@@ -30,11 +30,73 @@ class WorkloadConfig:
     length_noise: float = 0.1          # lognormal sigma on top of the signal
     marker_frac: float = 0.35          # max fraction of marker tokens
     seed: int = 0
+    # --- arrival process (cluster autoscaler studies) ---
+    arrival_pattern: str = "poisson"   # "poisson" | "bursty" | "diurnal"
+    burst_factor: float = 5.0          # burst-state rate multiplier (bursty)
+    burst_mean_s: float = 4.0          # mean burst duration (s)
+    quiet_mean_s: float = 12.0         # mean quiet duration (s)
+    quiet_factor: float = 0.25         # quiet-state rate multiplier (bursty)
+    diurnal_period: float = 60.0       # one "day" of the sinusoid (s)
+    diurnal_amplitude: float = 0.8     # 0..1 swing around arrival_rate
+
+
+def gen_arrivals(rng: np.random.Generator, n: int, rate: float,
+                 pattern: str = "poisson", *,
+                 burst_factor: float = 5.0, burst_mean_s: float = 4.0,
+                 quiet_mean_s: float = 12.0, quiet_factor: float = 0.25,
+                 diurnal_period: float = 60.0,
+                 diurnal_amplitude: float = 0.8) -> np.ndarray:
+    """Arrival timestamps for ``n`` requests under one of three processes:
+
+    * ``poisson``  — homogeneous (the paper's §5.1 load);
+    * ``bursty``   — Markov-modulated Poisson: exponential quiet/burst
+      sojourns at ``quiet_factor``/``burst_factor`` times the base rate —
+      the flash-crowd shape an autoscaler must absorb;
+    * ``diurnal``  — inhomogeneous Poisson via thinning, rate(t) =
+      rate·(1 + amplitude·sin(2πt/period)) — the day/night cycle
+      forecast-driven scaling (SageServe, PAPERS.md) exploits.
+    """
+    if pattern == "poisson":
+        return np.cumsum(rng.exponential(1.0 / rate, n))
+    if pattern == "bursty":
+        out: list[float] = []
+        t, burst = 0.0, False
+        while len(out) < n:
+            span = rng.exponential(burst_mean_s if burst else quiet_mean_s)
+            r = rate * (burst_factor if burst else quiet_factor)
+            tt = t + rng.exponential(1.0 / r)
+            while tt < t + span and len(out) < n:
+                out.append(tt)
+                tt += rng.exponential(1.0 / r)
+            t += span
+            burst = not burst
+        return np.asarray(out)
+    if pattern == "diurnal":
+        peak = rate * (1.0 + diurnal_amplitude)
+        out = []
+        t = 0.0
+        while len(out) < n:
+            t += rng.exponential(1.0 / peak)
+            lam = rate * (1.0 + diurnal_amplitude
+                          * np.sin(2.0 * np.pi * t / diurnal_period))
+            if rng.uniform() * peak < lam:
+                out.append(t)
+        return np.asarray(out)
+    raise ValueError(f"unknown arrival pattern: {pattern!r}")
+
+
+def _cfg_arrivals(rng: np.random.Generator, cfg) -> np.ndarray:
+    return gen_arrivals(
+        rng, cfg.n_requests, cfg.arrival_rate, cfg.arrival_pattern,
+        burst_factor=cfg.burst_factor, burst_mean_s=cfg.burst_mean_s,
+        quiet_mean_s=cfg.quiet_mean_s, quiet_factor=cfg.quiet_factor,
+        diurnal_period=cfg.diurnal_period,
+        diurnal_amplitude=cfg.diurnal_amplitude)
 
 
 def gen_requests(cfg: WorkloadConfig) -> list[Request]:
     rng = np.random.default_rng(cfg.seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / cfg.arrival_rate, cfg.n_requests))
+    arrivals = _cfg_arrivals(rng, cfg)
     reqs = []
     for i in range(cfg.n_requests):
         in_len = int(np.clip(rng.lognormal(cfg.input_mean, cfg.input_sigma), 8, 512))
@@ -82,14 +144,21 @@ class SharedPrefixConfig:
     output_base: float = 32.0
     output_max: int = 1024
     seed: int = 0
+    # --- arrival process (same knobs as WorkloadConfig) ---
+    arrival_pattern: str = "poisson"
+    burst_factor: float = 5.0
+    burst_mean_s: float = 4.0
+    quiet_mean_s: float = 12.0
+    quiet_factor: float = 0.25
+    diurnal_period: float = 60.0
+    diurnal_amplitude: float = 0.8
 
 
 def gen_shared_prefix_requests(cfg: SharedPrefixConfig) -> list[Request]:
     rng = np.random.default_rng(cfg.seed)
     templates = [rng.integers(0, cfg.vocab, cfg.prefix_len).tolist()
                  for _ in range(cfg.n_templates)]
-    arrivals = np.cumsum(rng.exponential(1.0 / cfg.arrival_rate,
-                                         cfg.n_requests))
+    arrivals = _cfg_arrivals(rng, cfg)
     # round-robin conversations over templates; each conversation's context
     # grows turn over turn
     n_convs = max(1, cfg.n_requests // cfg.turns)

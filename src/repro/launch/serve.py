@@ -10,6 +10,15 @@ sized from ``--kv-budget`` bytes — the same budget surface SLO-ODBS uses.
 prompts prefill only their uncached suffix; ``--workload shared-prefix``
 generates a template-heavy mix that exercises it), and ``--lookahead N``
 lets admission skip a too-big queue head when a later request fits.
+
+``--replicas N`` lifts serving to the cluster layer (serving/cluster):
+requests are routed by ``--router`` across N replicas.  With ``--paged``
+each replica owns a real PagedEngine (pool + prefix cache per replica) and
+the routed shares are served live; otherwise the replicas are
+LatencyModel-backed simulated engines on per-replica HELR deployments —
+the cluster-scale path, which ``--autoscale`` extends with the
+forecast-driven elastic replica set (``--workload bursty`` exercises it).
+
 On a TPU pod this runs under the production mesh with the HELR-mesh plan;
 on CPU (--reduced) it serves the reduced config end-to-end.
 """
@@ -29,8 +38,78 @@ from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
                                  gen_requests, gen_shared_prefix_requests,
                                  train_pairs)
 from repro.models import api
-from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
-                           PagedEngineConfig)
+from repro.serving import (AutoscalerConfig, EngineConfig, InferenceEngine,
+                           PagedEngine, PagedEngineConfig, Replica, Router,
+                           RouterConfig, paper_cluster, simulate_cluster)
+
+
+def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
+    """Route requests across N real PagedEngine-backed replicas, then serve
+    each replica's share live (per-replica pool + prefix cache)."""
+    max_prompt = max(len(r.tokens) for r in reqs)
+    max_seq = max(64, -(-(max_prompt + args.max_new) // 8) * 8)
+    router = Router(RouterConfig(policy=args.router))
+    replicas = []
+    for i in range(args.replicas):
+        nodes, lat = paper_cluster()
+        pcfg = PagedEngineConfig.from_memory_budget(
+            cfg, args.kv_budget, max_batch=4, block_size=8,
+            max_seq_len=max_seq, max_new_tokens=args.max_new,
+            prefix_cache=args.prefix_cache, admit_lookahead=args.lookahead)
+        replicas.append(Replica(
+            i, cfg, nodes, lat, max_batch=4, block_size=8,
+            n_blocks=pcfg.n_blocks, prefix_cache=args.prefix_cache,
+            engine=PagedEngine(cfg, params, pcfg, monitor=mon)))
+    for r in sorted(reqs, key=lambda q: q.arrival):
+        rep = router.dispatch(r, replicas, r.arrival)
+        if rep is None:
+            mon.observe_shed(r)
+            continue
+        rep.enqueue(r, r.arrival)
+    done: dict = {}
+    for rep in replicas:
+        if not rep.queue:
+            continue
+        res = rep.engine.run_continuous(
+            sorted(rep.queue, key=lambda q: q.arrival))
+        done.update(res.outputs)
+        print(f"replica {rep.rid}: {len(rep.queue)} requests, "
+              f"prefill_tokens={res.prefill_tokens}, "
+              f"prefix_hits={res.prefix_hits}/{res.prefix_lookups}, "
+              f"peak_blocks={res.peak_blocks}")
+    print(f"router: {router.stats.summary()}")
+    return done
+
+
+def _serve_cluster_sim(args, prof, mon) -> None:
+    """Cluster-scale path: LatencyModel-backed replicas on per-replica HELR
+    deployments, driven by the discrete-event simulator."""
+    full_cfg = get_config(args.arch)
+    n = max(args.requests, 128)
+    if args.workload == "shared-prefix":
+        reqs = gen_shared_prefix_requests(SharedPrefixConfig(
+            n_requests=n, n_templates=max(4, n // 12), prefix_len=96,
+            turns=4, arrival_rate=16.0, slo_lo=8.0, slo_hi=60.0, seed=0))
+    else:
+        pattern = args.workload if args.workload in ("bursty", "diurnal") \
+            else "poisson"
+        reqs = gen_requests(WorkloadConfig(
+            n_requests=n, arrival_rate=16.0, arrival_pattern=pattern,
+            slo_lo=8.0, slo_hi=60.0, seed=0))
+    auto = None
+    if args.autoscale:
+        auto = AutoscalerConfig(interval=1.0, min_replicas=args.replicas,
+                                max_replicas=max(6, 2 * args.replicas),
+                                spawn_delay=1.0)
+    res = simulate_cluster(
+        reqs, full_cfg, get_scheduler(args.scheduler), SchedulerConfig(),
+        n_replicas=args.replicas, router=args.router, autoscale=auto,
+        prefix_cache=args.prefix_cache, profiler=prof, monitor=mon)
+    print("cluster:", res.summary())
+    for s in res.replica_stats:
+        print(f"  replica {s['rid']}: served={s['served']} "
+              f"util={s['utilization']} queue_prefill={s['prefill_tokens']} "
+              f"saved={s['prefill_tokens_saved']}")
 
 
 def main():
@@ -51,15 +130,28 @@ def main():
                     help="queue entries scanned past a blocked head "
                          "(paged admission)")
     ap.add_argument("--workload", default="alpaca",
-                    choices=["alpaca", "shared-prefix"],
+                    choices=["alpaca", "shared-prefix", "bursty", "diurnal"],
                     help="alpaca: lognormal Poisson mix; shared-prefix: "
-                         "template-heavy prompts exercising the prefix cache")
+                         "template-heavy prompts exercising the prefix cache; "
+                         "bursty/diurnal: arrival patterns for --autoscale")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="cluster serving: replicas behind the router")
+    ap.add_argument("--router", default="round_robin",
+                    choices=["round_robin", "least_loaded", "prefix_affinity",
+                             "slo_aware"],
+                    help="dispatch policy of the cluster layer")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="forecast-driven elastic replica set (simulated "
+                         "cluster; --replicas becomes the minimum)")
     ap.add_argument("--kv-budget", type=float, default=2e6,
                     help="paged KV pool budget in bytes (shared with SLO-ODBS)")
     ap.add_argument("--max-new", type=int, default=16)
     args = ap.parse_args()
-    if args.prefix_cache:
-        args.paged = True
+    if args.autoscale and args.paged:
+        raise SystemExit("--autoscale needs the simulated cluster path: "
+                         "drop --paged (elasticity has no live-engine mode)")
+    if args.prefix_cache and not (args.replicas > 1 or args.autoscale):
+        args.paged = True          # cluster sim path honors the flag itself
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -67,6 +159,18 @@ def main():
     print(f"serving {cfg.name} "
           f"(plan for production mesh: "
           f"{helr_mesh(get_config(args.arch), SHAPES['decode_32k']).name})")
+
+    if (args.replicas > 1 or args.autoscale) and not args.paged:
+        # cluster-scale path: simulated replicas, no model weights needed
+        pred = LengthPredictor(PredictorConfig(), seed=0)
+        toks, lens = train_pairs(WorkloadConfig(), 256, seed=1)
+        pred.fit(toks, lens, epochs=8)
+        prof = ResourceProfiler(pred, get_config(args.arch))
+        mon = Monitor(prof)
+        _serve_cluster_sim(args, prof, mon)
+        print("monitor:", mon.metrics())
+        return
+
     params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     engine = InferenceEngine(cfg, params,
                              EngineConfig(max_batch=4, cache_len=64,
@@ -79,8 +183,11 @@ def main():
         for r in reqs:
             r.tokens = [t % cfg.vocab_size for t in r.tokens[:32]]
     else:
+        pattern = args.workload if args.workload in ("bursty", "diurnal") \
+            else "poisson"
         reqs = gen_requests(WorkloadConfig(n_requests=args.requests, seed=0,
-                                           vocab=cfg.vocab_size))
+                                           vocab=cfg.vocab_size,
+                                           arrival_pattern=pattern))
         for r in reqs:
             r.tokens = [t % cfg.vocab_size for t in r.tokens[:16]]
     for r in reqs:
@@ -95,7 +202,9 @@ def main():
     prof.profile(reqs)
 
     t0 = time.perf_counter()
-    if args.paged:
+    if args.replicas > 1 and args.paged:
+        done = _serve_cluster_live(args, cfg, params, mon, reqs)
+    elif args.paged:
         # size the block tables for the longest admitted prompt plus the
         # decode budget so any --max-new value is admissible
         max_prompt = max(len(r.tokens) for r in reqs)

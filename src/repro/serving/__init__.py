@@ -6,6 +6,10 @@ from repro.serving.paged_engine import (PagedBatchResult,  # noqa: F401
                                         PagedEngineConfig, kv_block_bytes)
 from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,  # noqa: F401
                                         RadixBlockTree)
-from repro.serving.simulator import (LatencyModel, SimResult,  # noqa: F401
+from repro.serving.cluster import (Autoscaler, AutoscalerConfig,  # noqa: F401
+                                   Replica, Router, RouterConfig)
+from repro.serving.simulator import (ClusterSimResult,  # noqa: F401
+                                     LatencyModel, SimResult,
                                      morphling_deploy_overhead, paper_cluster,
-                                     simulate)
+                                     replicated_cluster, simulate,
+                                     simulate_cluster)

@@ -1,0 +1,9 @@
+"""Multi-replica cluster serving: SLO-aware routing + forecast-driven
+autoscaling over replicated engines.  The discrete-event driver lives in
+``repro.serving.simulator.simulate_cluster``."""
+from repro.serving.cluster.autoscaler import (ArrivalForecaster,  # noqa: F401
+                                              Autoscaler, AutoscalerConfig,
+                                              ScaleEvent)
+from repro.serving.cluster.replica import Replica, ReplicaStats  # noqa: F401
+from repro.serving.cluster.router import (POLICIES, Router,  # noqa: F401
+                                          RouterConfig, RouterStats)

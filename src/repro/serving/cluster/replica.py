@@ -1,0 +1,286 @@
+"""One serving replica of the cluster layer.
+
+A ``Replica`` owns a deployed serving backend — a live ``PagedEngine`` or,
+for cluster-scale runs, a ``LatencyModel``-backed simulated engine over the
+DeviceMap HELR chose for its node partition — plus the state the cluster
+layer steers by: its request queue, a projection of its block pool, and a
+replica-local radix tree mirroring what its prefix cache holds.
+
+The load signals it exposes are exactly the UELLM components' outputs lifted
+one level up:
+
+* ``projected_backlog`` — profiler-predicted output lengths priced through
+  the replica's own LatencyModel (queue drain in seconds, batch-width
+  amortized), the signal ``least_loaded``/``slo_aware`` routing ranks by;
+* ``prefix_peek`` — longest radix-tree prompt match, the signal
+  ``prefix_affinity`` routing maximizes (a hit both skips prefill FLOPs and
+  discounts block demand);
+* ``free_blocks`` — pool capacity net of queued worst-case demand, the
+  backpressure admission control already applies inside one engine;
+* ``capacity_rps`` — sustainable request rate at full batch width, the
+  per-replica denominator the autoscaler divides forecast load by.
+
+Prefix accounting happens at **dispatch** time (match-then-insert into the
+routing tree): the router must decide before the engine prefills, so the
+hit it sees is a conservative lower bound on what the engine's radix cache
+will serve by prefill time (the cache can only have gained entries since).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.deployer import helr
+from repro.core.types import DeviceNode, Request
+from repro.serving.prefix_cache import RadixBlockTree
+from repro.serving.simulator import LatencyModel
+
+
+@dataclass
+class ReplicaStats:
+    served: int = 0
+    batches: int = 0
+    busy_time: float = 0.0           # seconds the backend was executing
+    true_tokens: int = 0             # generated tokens (throughput numerator)
+    prefill_tokens: int = 0          # prompt tokens actually prefilled
+    prefill_tokens_saved: int = 0    # prompt tokens served from the cache
+    prefix_hit_requests: int = 0
+    slo_met: int = 0
+    slo_missed: int = 0
+
+    def summary(self) -> dict:
+        return {
+            "served": self.served,
+            "batches": self.batches,
+            "busy_time_s": round(self.busy_time, 3),
+            "true_tokens": self.true_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "prefix_hit_requests": self.prefix_hit_requests,
+            "slo_met": self.slo_met,
+            "slo_missed": self.slo_missed,
+        }
+
+
+class Replica:
+    """A routable serving unit: engine + queue + pool/prefix projections."""
+
+    def __init__(self, rid: int, model_cfg: ModelConfig,
+                 nodes: Sequence[DeviceNode], latency, *,
+                 deploy: Callable = helr,
+                 model_mem: Optional[float] = None,
+                 max_batch: int = 8, block_size: int = 16,
+                 n_blocks: int = 4096, prefix_cache: bool = True,
+                 max_tree_nodes: int = 65536,
+                 spawned_at: float = 0.0, engine=None):
+        self.rid = rid
+        self.model_cfg = model_cfg
+        model_mem = model_mem or model_cfg.param_count() * 2.0
+        self.dmap = deploy(model_mem, model_cfg.n_layers, nodes, latency)
+        if not self.dmap.path:
+            raise RuntimeError(
+                f"replica {rid}: deployment infeasible on its partition")
+        self.lm = LatencyModel(model_cfg, nodes, latency, self.dmap)
+        self.max_batch = max_batch
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.tree: Optional[RadixBlockTree] = \
+            RadixBlockTree(block_size) if prefix_cache else None
+        self.max_tree_nodes = max_tree_nodes
+        self.engine = engine                  # live PagedEngine (optional)
+        self.queue: list[Request] = []
+        self.busy_until = 0.0
+        self.inflight_blocks = 0
+        self.draining = False                 # autoscaler: no new dispatches
+        self.partition: Optional[int] = None  # node-partition slot (cluster)
+        self.spawned_at = spawned_at
+        self.retired_at: Optional[float] = None
+        self.stats = ReplicaStats()
+        self._net_prefill: dict[int, int] = {}   # rid -> uncached prompt len
+
+    # ------------------------------------------------------------- liveness
+    @property
+    def accepting(self) -> bool:
+        return not self.draining and self.retired_at is None
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and self.inflight_blocks == 0
+
+    def alive_seconds(self, now: float) -> float:
+        end = self.retired_at if self.retired_at is not None else now
+        return max(0.0, end - self.spawned_at)
+
+    def utilization(self, now: float) -> float:
+        alive = self.alive_seconds(now)
+        return self.stats.busy_time / alive if alive > 0 else 0.0
+
+    # ---------------------------------------------------------- load signals
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def prefix_peek(self, tokens: list) -> int:
+        """Longest cached-prompt match in tokens — no LRU touch, no insert."""
+        if self.tree is None:
+            return 0
+        return self.tree.match(tokens, touch=False).hit_tokens
+
+    def _blocks_for(self, r: Request) -> int:
+        """Worst-case pool demand, net of full-block prefix hits — the same
+        discount ``PagedEngine.can_admit`` applies (shared blocks are
+        already resident)."""
+        out = r.predicted_output_len or r.sched_output_len
+        total = -(-(r.input_len + out) // self.block_size)
+        hit = r.input_len - self._net_prefill.get(r.rid, r.input_len)
+        return max(1, total - hit // self.block_size)
+
+    @property
+    def projected_blocks(self) -> int:
+        """Worst-case pool demand of queued + in-flight work."""
+        return self.inflight_blocks + sum(self._blocks_for(r)
+                                          for r in self.queue)
+
+    @property
+    def free_blocks(self) -> int:
+        return max(0, self.n_blocks - self.projected_blocks)
+
+    def _chunk_time(self, chunk: list[Request]) -> float:
+        """Service time of one batch-width chunk: prefill on the longest
+        *uncached* prompt + decode to the longest predicted output."""
+        w = len(chunk)
+        in_net = max(max(1, self._net_prefill.get(r.rid, r.input_len))
+                     for r in chunk)
+        out = max((r.predicted_output_len or r.sched_output_len)
+                  for r in chunk)
+        kv = max(r.input_len for r in chunk) + out / 2
+        return self.lm.prefill_time(w, in_net) + out * self.lm.token_time(w, kv)
+
+    def projected_drain(self) -> float:
+        """Seconds to clear the queue, batched at engine width."""
+        t = 0.0
+        for i in range(0, len(self.queue), self.max_batch):
+            t += self._chunk_time(self.queue[i:i + self.max_batch])
+        return t
+
+    def projected_backlog(self, now: float) -> float:
+        return max(0.0, self.busy_until - now) + self.projected_drain()
+
+    def projected_finish(self, r: Request, now: float) -> float:
+        """Earliest time this replica could complete ``r`` if enqueued now —
+        the slo_aware routing estimate.  Scheduler-aware: SLO-ODBS serves
+        SLO-ascending, so only queued requests with *tighter* SLOs drain
+        ahead of ``r``; ``r`` itself finishes with its batch cohort (it
+        pays the cohort's padded prefill, not a batch-of-one's)."""
+        cohort = [q for q in self.queue if q.slo <= r.slo] + [r]
+        t = max(0.0, self.busy_until - now)
+        for i in range(0, len(cohort), self.max_batch):
+            t += self._chunk_time(cohort[i:i + self.max_batch])
+        return now + t
+
+    def capacity_rps(self, mean_in: float = 64.0,
+                     mean_out: float = 64.0) -> float:
+        """Sustainable request rate at full batch width (autoscaler's
+        per-replica capacity denominator)."""
+        w = self.max_batch
+        t = self.lm.prefill_time(w, mean_in) \
+            + mean_out * self.lm.token_time(w, mean_in + mean_out / 2)
+        return w / t if t > 0 else float("inf")
+
+    # ------------------------------------------------------------- dispatch
+    def _prune_tree(self) -> None:
+        """LRU-evict routing-tree leaves once past ``max_tree_nodes`` (the
+        engine's real cache also evicts under pressure; an unbounded
+        router-side model would both leak and over-promise hits)."""
+        target = self.max_tree_nodes * 7 // 8
+        heap = [(n.tick, id(n), n) for n in self.tree.iter_nodes()
+                if n.is_leaf]
+        heapq.heapify(heap)
+        while self.tree.n_nodes > target and heap:
+            _, _, victim = heapq.heappop(heap)
+            parent = victim.parent
+            self.tree.remove(victim)
+            if parent is not None and parent is not self.tree.root \
+                    and parent.is_leaf:
+                heapq.heappush(heap, (parent.tick, id(parent), parent))
+
+    def enqueue(self, r: Request, now: float) -> None:
+        """Accept a routed request: record its prefix discount against the
+        routing tree, then register its prompt so subsequent same-template
+        dispatches (to this replica) hit."""
+        hit = 0
+        if self.tree is not None:
+            hit = self.tree.match(r.tokens).hit_tokens
+            self.tree.insert(r.tokens)
+            if self.tree.n_nodes > self.max_tree_nodes:
+                self._prune_tree()
+        self._net_prefill[r.rid] = r.input_len - hit
+        self.stats.prefill_tokens_saved += hit
+        self.stats.prefix_hit_requests += hit > 0
+        self.queue.append(r)
+
+    # ------------------------------------------------------------ execution
+    def start_batch(self, now: float, scheduler: Callable, sched_cfg,
+                    profiler=None, monitor=None) -> Optional[float]:
+        """Pop one scheduled batch off the queue and run it on the latency
+        model (same padded-batch semantics as ``serving.simulate``); returns
+        the completion time for the event loop, or None if idle/busy."""
+        if self.busy_until > now or not self.queue:
+            return None
+        fresh = [r for r in self.queue if r.predicted_output_len is None]
+        if profiler is not None:
+            if fresh:
+                profiler.profile(fresh)
+        else:
+            for r in fresh:
+                r.predicted_output_len = r.true_output_len       # oracle
+        batches = scheduler(self.queue, sched_cfg)
+        b = next((b_ for b_ in batches if b_.requests), None)
+        if b is None:
+            return None
+        chosen = {id(r) for r in b.requests}
+        self.queue = [r for b_ in batches for r in b_.requests
+                      if id(r) not in chosen]
+        in_len = b.padded_input
+        n = len(b)
+        pre_len = max(max(1, self._net_prefill.get(r.rid, r.input_len))
+                      for r in b.requests)
+        t_pre = self.lm.prefill_time(n, pre_len)
+        t_cursor = now + t_pre
+        remaining = sorted(b.requests, key=lambda r: r.true_output_len)
+        step_start = 0
+        for r in remaining:
+            steps = r.true_output_len - step_start
+            if steps > 0:
+                tt = self.lm.token_time(n, in_len + step_start + steps / 2)
+                t_cursor += steps * tt
+                step_start = r.true_output_len
+            r.start_time = now
+            r.finish_time = t_cursor
+            if monitor is not None:
+                monitor.observe(r)
+        st = self.stats
+        st.batches += 1
+        st.served += n
+        st.busy_time += t_cursor - now
+        st.true_tokens += sum(r.true_output_len for r in b.requests)
+        st.prefill_tokens += sum(
+            max(1, self._net_prefill.pop(r.rid, r.input_len))
+            for r in b.requests)
+        for r in b.requests:
+            if r.slo_met:
+                st.slo_met += 1
+            else:
+                st.slo_missed += 1
+        self.busy_until = t_cursor
+        self.inflight_blocks = sum(self._blocks_for(r) for r in b.requests)
+        return t_cursor
+
+    def finish_batch(self) -> None:
+        """The 'done' event: the in-flight batch's blocks return."""
+        self.inflight_blocks = 0
+
+    def retire(self, now: float) -> None:
+        self.retired_at = now

@@ -1,0 +1,132 @@
+"""SLO-aware request routing across replicas.
+
+Four pluggable dispatch policies (Aladdin/SageServe's cluster layer over
+UELLM's signals — PAPERS.md):
+
+* ``round_robin``     — the baseline every serving frontend ships with;
+* ``least_loaded``    — power-of-d-choices on *projected backlog seconds*
+  (profiler-predicted lengths priced through each replica's LatencyModel),
+  not queue length: a queue of 3 long-answer requests outweighs one of 5
+  short ones;
+* ``prefix_affinity`` — route to the replica whose radix tree holds the
+  longest prompt match (hits skip prefill and discount block demand);
+  cold prompts fall back to rendezvous (highest-random-weight) hashing of
+  the leading prompt block, so every template is sticky to one replica
+  *and* stays sticky when the autoscaler changes the replica set — HRW
+  only remaps keys owned by a removed replica;
+* ``slo_aware``       — earliest-projected-finish among replicas that can
+  still meet the request's deadline; when none can, the request is **shed**
+  at admission (counted as an SLO violation) instead of poisoning every
+  queue behind it.
+
+``Router.dispatch`` only *selects*; the caller enqueues, so live-engine and
+simulated paths share the policy code.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.types import Request
+from repro.serving.cluster.replica import Replica
+
+POLICIES = ("round_robin", "least_loaded", "prefix_affinity", "slo_aware")
+
+
+@dataclass
+class RouterConfig:
+    policy: str = "round_robin"
+    d_choices: int = 2             # replicas sampled by least_loaded
+    affinity_block: int = 16       # leading tokens keyed by the HRW fallback
+    min_affinity_hit: int = 1      # tokens a match must cover to count
+    shed_slack: float = 0.0        # extra seconds granted before shedding
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown router policy {self.policy!r}; "
+                             f"choose from {POLICIES}")
+
+
+@dataclass
+class RouterStats:
+    dispatched: int = 0
+    shed: int = 0
+    affinity_hits: int = 0         # routed by a radix-tree match
+    hash_fallbacks: int = 0        # routed by rendezvous hash (cold prompt)
+
+    def summary(self) -> dict:
+        return {"dispatched": self.dispatched, "shed": self.shed,
+                "affinity_hits": self.affinity_hits,
+                "hash_fallbacks": self.hash_fallbacks}
+
+
+def _hrw(key: tuple, rid: int) -> int:
+    """Rendezvous weight of (key, replica) — deterministic for int tokens
+    (CPython salts only str/bytes hashing)."""
+    return hash((key, rid))
+
+
+class Router:
+    def __init__(self, cfg: RouterConfig = RouterConfig()):
+        self.cfg = cfg
+        self.stats = RouterStats()
+        self._rr = 0
+        self._rng = np.random.default_rng(cfg.seed)
+
+    # -------------------------------------------------------------- policies
+    def _round_robin(self, r: Request, alive: list[Replica],
+                     now: float) -> Replica:
+        rep = alive[self._rr % len(alive)]
+        self._rr += 1
+        return rep
+
+    def _least_loaded(self, r: Request, alive: list[Replica],
+                      now: float) -> Replica:
+        d = min(self.cfg.d_choices, len(alive))
+        picks = self._rng.choice(len(alive), size=d, replace=False)
+        return min((alive[i] for i in picks),
+                   key=lambda rep: rep.projected_backlog(now))
+
+    def _prefix_affinity(self, r: Request, alive: list[Replica],
+                         now: float) -> Replica:
+        hits = [(rep.prefix_peek(r.tokens), rep) for rep in alive]
+        best_hit, best = max(hits, key=lambda h: (h[0], -h[1].rid))
+        if best_hit >= self.cfg.min_affinity_hit:
+            self.stats.affinity_hits += 1
+            return best
+        key = tuple(r.tokens[:self.cfg.affinity_block])
+        self.stats.hash_fallbacks += 1
+        return max(alive, key=lambda rep: _hrw(key, rep.rid))
+
+    def _slo_aware(self, r: Request, alive: list[Replica],
+                   now: float) -> Optional[Replica]:
+        deadline = r.arrival + r.slo + self.cfg.shed_slack
+        ranked = sorted(((rep.projected_finish(r, now), rep.rid, rep)
+                         for rep in alive))
+        finish, _, rep = ranked[0]
+        if finish > deadline:
+            return None                       # nobody can make it: shed
+        return rep
+
+    # -------------------------------------------------------------- dispatch
+    def dispatch(self, r: Request, replicas: list[Replica],
+                 now: float) -> Optional[Replica]:
+        """Select a replica for ``r`` (None = shed).  Draining / retired
+        replicas never receive new work."""
+        alive = [rep for rep in replicas if rep.accepting]
+        if not alive:
+            self.stats.shed += 1
+            return None
+        # pool backpressure: a replica whose projected block demand has
+        # exhausted its pool only receives work when every pool is full
+        roomy = [rep for rep in alive if rep.free_blocks > 0]
+        alive = roomy or alive
+        rep = getattr(self, f"_{self.cfg.policy}")(r, alive, now)
+        if rep is None:
+            self.stats.shed += 1
+            return None
+        self.stats.dispatched += 1
+        return rep

@@ -329,6 +329,311 @@ def simulate(
         prefix_hit_requests=hit_requests)
 
 
+# ------------------------------------------------- multi-replica simulation
+
+def replicated_cluster(n: int, *, scale: float = 1.0
+                       ) -> list[tuple[list[DeviceNode], list[list[float]]]]:
+    """n node partitions, each a paper_cluster island (one per replica);
+    ``scale`` multiplies per-device performance (capacity studies)."""
+    parts = []
+    for _ in range(n):
+        nodes, lat = paper_cluster()
+        if scale != 1.0:
+            nodes = [DeviceNode(d.node_id, d.memory, d.performance * scale,
+                                d.name) for d in nodes]
+        parts.append((nodes, lat))
+    return parts
+
+
+@dataclass
+class ClusterSimResult:
+    """Outcome of a multi-replica run: request fates plus the elasticity
+    accounting (replica-seconds) the autoscaler is judged on."""
+    requests: list[Request]            # everything offered (finished + shed)
+    shed: list[Request]
+    makespan: float
+    replica_seconds: float
+    peak_replicas: int
+    replica_stats: list[dict]
+    router_stats: dict = field(default_factory=dict)
+    scale_events: list = field(default_factory=list)
+
+    @property
+    def finished(self) -> list[Request]:
+        return [r for r in self.requests if r.finish_time is not None]
+
+    @property
+    def slo_attainment(self) -> float:
+        """Met deadlines over ALL offered requests — a shed request is a
+        violation, not a statistics opt-out."""
+        if not self.requests:
+            return 1.0
+        met = sum(bool(r.slo_met) for r in self.finished)
+        return met / len(self.requests)
+
+    @property
+    def avg_latency(self) -> float:
+        ls = [r.latency for r in self.finished]
+        return float(np.mean(ls)) if ls else float("nan")
+
+    @property
+    def p99_latency(self) -> float:
+        ls = [r.latency for r in self.finished]
+        return float(np.percentile(ls, 99)) if ls else float("nan")
+
+    @property
+    def true_tokens(self) -> int:
+        return sum(s["true_tokens"] for s in self.replica_stats)
+
+    @property
+    def throughput(self) -> float:
+        return self.true_tokens / self.makespan if self.makespan else 0.0
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(s["prefill_tokens"] for s in self.replica_stats)
+
+    @property
+    def prefill_tokens_saved(self) -> int:
+        return sum(s["prefill_tokens_saved"] for s in self.replica_stats)
+
+    @property
+    def prefix_hit_requests(self) -> int:
+        return sum(s["prefix_hit_requests"] for s in self.replica_stats)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        served = sum(s["served"] for s in self.replica_stats)
+        return self.prefix_hit_requests / served if served else 0.0
+
+    @property
+    def mean_utilization(self) -> float:
+        us = [s["utilization"] for s in self.replica_stats]
+        return float(np.mean(us)) if us else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "offered": len(self.requests),
+            "finished": len(self.finished),
+            "shed": len(self.shed),
+            "slo_attainment": round(self.slo_attainment, 4),
+            "avg_latency_s": round(self.avg_latency, 3),
+            "p99_latency_s": round(self.p99_latency, 3),
+            "throughput_tok_s": round(self.throughput, 2),
+            "makespan_s": round(self.makespan, 3),
+            "replica_seconds": round(self.replica_seconds, 2),
+            "peak_replicas": self.peak_replicas,
+            "mean_utilization": round(self.mean_utilization, 4),
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "prefix_hit_rate": round(self.prefix_hit_rate, 4),
+            "router": self.router_stats,
+            "scale_events": len(self.scale_events),
+        }
+
+
+def simulate_cluster(
+    requests: list[Request],
+    model_cfg: ModelConfig,
+    scheduler: Callable[[list[Request], SchedulerConfig], list[Batch]],
+    sched_cfg: SchedulerConfig,
+    *,
+    n_replicas: int = 2,
+    router="round_robin",
+    autoscale=None,
+    partitions=None,
+    profiler: Optional[ResourceProfiler] = None,
+    monitor: Optional[Monitor] = None,
+    deploy: Callable = helr,
+    model_mem: Optional[float] = None,
+    max_batch: Optional[int] = None,
+    block_size: int = 16,
+    n_blocks: int = 4096,
+    prefix_cache: bool = True,
+) -> ClusterSimResult:
+    """Discrete-event simulation of a replicated cluster: arrivals are
+    routed on landing (``router``: a policy name, RouterConfig, or Router),
+    each replica runs padded batches on its own HELR-deployed LatencyModel
+    (same per-batch semantics as ``simulate``), and an optional
+    ``autoscale`` (AutoscalerConfig) grows/drains the replica set against
+    forecast load — new replicas take the next node partition and pay
+    ``spawn_delay`` before accepting.
+
+    Requests never routable (shed) get no ``finish_time`` and are counted
+    as SLO violations by ``ClusterSimResult.slo_attainment`` and by the
+    monitor (``observe_shed``) — one accounting for sim and engines.
+    """
+    from repro.serving.cluster import (Autoscaler, Replica, Router,
+                                       RouterConfig)
+
+    if isinstance(router, str):
+        router = Router(RouterConfig(policy=router))
+    elif isinstance(router, RouterConfig):
+        router = Router(router)
+    if max_batch is None:
+        # the replicas' backlog projections must price queue drain at the
+        # width the scheduler actually packs, or slo_aware over-sheds
+        max_batch = sched_cfg.max_batch
+    max_replicas = autoscale.max_replicas if autoscale else n_replicas
+    if partitions is None:
+        partitions = replicated_cluster(max_replicas)
+    replicas: list = []
+    free_parts = list(range(len(partitions)))   # node partitions not in use
+
+    def spawn(now: float):
+        idx = len(replicas)
+        # take a *free* partition — a retired replica returns its nodes, so
+        # a respawn never double-books hardware a live replica still holds
+        pi = free_parts.pop(0) if free_parts else idx % len(partitions)
+        nodes, lat = partitions[pi]
+        rep = Replica(idx, model_cfg, nodes, lat, deploy=deploy,
+                      model_mem=model_mem, max_batch=max_batch,
+                      block_size=block_size, n_blocks=n_blocks,
+                      prefix_cache=prefix_cache, spawned_at=now)
+        rep.partition = pi
+        replicas.append(rep)
+        return rep
+
+    def retire(rep, now: float) -> None:
+        rep.retire(now)
+        free_parts.append(rep.partition)
+
+    for _ in range(max(1, n_replicas)):
+        spawn(0.0)
+
+    autoscaler = None
+    if autoscale is not None:
+        reqs_in = [r.input_len for r in requests] or [64]
+        reqs_out = [r.predicted_output_len or r.true_output_len
+                    for r in requests] or [64]
+        autoscaler = Autoscaler(
+            autoscale, replicas[0].capacity_rps(float(np.mean(reqs_in)),
+                                                float(np.mean(reqs_out))))
+
+    heap: list = []
+    seq = 0
+
+    def push(t: float, kind: str, obj=None):
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, obj))
+        seq += 1
+
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    for r in reqs:
+        push(r.arrival, "arrive", r)
+    if autoscaler is not None:
+        push(autoscale.interval, "tick")
+
+    shed: list[Request] = []
+    arrivals_since_tick = 0
+    n_arrived = 0
+    pending_spawns = 0
+    peak = sum(rep.accepting for rep in replicas)
+    t_end = 0.0
+
+    def maybe_start(rep, now: float) -> None:
+        done = rep.start_batch(now, scheduler, sched_cfg, profiler, monitor)
+        if done is not None:
+            push(done, "done", rep)
+
+    def work_remains() -> bool:
+        return n_arrived < len(reqs) or pending_spawns > 0 or any(
+            rep.queue or rep.inflight_blocks for rep in replicas)
+
+    while heap:
+        t, _, kind, obj = heapq.heappop(heap)
+        if kind in ("arrive", "done"):
+            # ticks/spawns trailing the last completion must not stretch
+            # the makespan (it feeds replica-seconds and throughput)
+            t_end = max(t_end, t)
+        if kind == "arrive":
+            n_arrived += 1
+            arrivals_since_tick += 1
+            rep = router.dispatch(obj, replicas, t)
+            if rep is None:
+                shed.append(obj)
+                if monitor is not None:
+                    monitor.observe_shed(obj)
+            else:
+                rep.enqueue(obj, t)
+                maybe_start(rep, t)
+        elif kind == "done":
+            obj.finish_batch()
+            if obj.queue:
+                maybe_start(obj, t)
+            elif obj.draining:
+                retire(obj, t)
+        elif kind == "spawn":
+            pending_spawns -= 1
+            if work_remains() or n_arrived < len(reqs):
+                spawn(t)
+        elif kind == "tick":
+            want = autoscaler.tick(t, arrivals_since_tick, replicas,
+                                   pending_spawns)
+            arrivals_since_tick = 0
+            accepting = [rep for rep in replicas if rep.accepting]
+            effective = len(accepting) + pending_spawns
+            if want > effective:
+                order = want - effective
+                # cheapest capacity first: un-drain replicas still alive
+                for rep in replicas:
+                    if order <= 0:
+                        break
+                    if rep.draining and rep.retired_at is None:
+                        rep.draining = False
+                        order -= 1
+                for _ in range(order):
+                    pending_spawns += 1
+                    push(t + autoscale.spawn_delay, "spawn")
+                if monitor is not None:
+                    monitor.observe_scale(+1, want - effective)
+            elif want < len(accepting):
+                victims = sorted(accepting,
+                                 key=lambda rep: rep.projected_backlog(t))
+                for rep in victims[:len(accepting) - want]:
+                    rep.draining = True
+                    if rep.idle and rep.busy_until <= t:
+                        retire(rep, t)
+                if monitor is not None:
+                    monitor.observe_scale(-1, len(accepting) - want)
+            if monitor is not None:
+                alive = [rep for rep in replicas if rep.accepting]
+                monitor.observe_replicas(
+                    [rep.queue_depth for rep in alive],
+                    [rep.utilization(t) for rep in alive])
+            peak = max(peak, sum(rep.accepting for rep in replicas))
+            if work_remains():
+                push(t + autoscale.interval, "tick")
+        peak = max(peak, sum(rep.accepting for rep in replicas))
+
+    makespan = max([t_end] + [r.finish_time for r in reqs
+                              if r.finish_time is not None])
+    for rep in replicas:
+        if rep.retired_at is None and rep.draining:
+            rep.retire(makespan)
+    if monitor is not None:
+        # final snapshot so fixed-size runs (no ticks) report gauges too
+        alive = [rep for rep in replicas if rep.accepting]
+        monitor.observe_replicas([rep.queue_depth for rep in alive],
+                                 [rep.utilization(makespan)
+                                  for rep in alive])
+    replica_seconds = sum(rep.alive_seconds(makespan) for rep in replicas)
+    rep_stats = []
+    for rep in replicas:
+        s = rep.stats.summary()
+        s["rid"] = rep.rid
+        s["utilization"] = round(rep.utilization(makespan), 4)
+        s["alive_seconds"] = round(rep.alive_seconds(makespan), 2)
+        s["dmap_path"] = rep.dmap.path
+        rep_stats.append(s)
+    events = autoscaler.events if autoscaler is not None else []
+    return ClusterSimResult(
+        requests=reqs, shed=shed, makespan=makespan,
+        replica_seconds=replica_seconds, peak_replicas=peak,
+        replica_stats=rep_stats, router_stats=router.stats.summary(),
+        scale_events=events)
+
+
 # --------------------------------------------------- baseline deploy systems
 
 def morphling_deploy_overhead(model_cfg: ModelConfig, nodes, latency,

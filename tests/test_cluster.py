@@ -1,0 +1,305 @@
+"""Cluster serving layer: router policies, autoscaler control law, replica
+load accounting, the multi-replica discrete-event simulation, and the
+monitor's unified SLO counters."""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import LengthPredictor, Monitor, ResourceProfiler, get_scheduler
+from repro.core.profiler import PredictorConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.core.types import Request
+from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
+                                 gen_requests, gen_shared_prefix_requests)
+from repro.serving import simulate, simulate_cluster
+from repro.serving.cluster import (Autoscaler, AutoscalerConfig, Replica,
+                                   Router, RouterConfig)
+from repro.serving.simulator import paper_cluster
+
+
+CFG = get_config("chatglm2-6b")
+
+
+def _replica(rid=0, **kw):
+    nodes, lat = paper_cluster()
+    return Replica(rid, CFG, nodes, lat, **kw)
+
+
+def _req(rid, *, in_len=64, out_len=32, slo=30.0, arrival=0.0, tokens=None):
+    toks = tokens if tokens is not None else list(range(100, 100 + in_len))
+    r = Request(rid=rid, tokens=toks, input_len=len(toks), slo=slo,
+                arrival=arrival, true_output_len=out_len)
+    r.predicted_output_len = out_len
+    return r
+
+
+# ------------------------------------------------------------------ replica
+
+class TestReplicaLoad:
+    def test_enqueue_updates_signals(self):
+        rep = _replica()
+        assert rep.queue_depth == 0
+        assert rep.projected_backlog(0.0) == 0.0
+        free0 = rep.free_blocks
+        rep.enqueue(_req(0), 0.0)
+        rep.enqueue(_req(1), 0.0)
+        assert rep.queue_depth == 2
+        assert rep.projected_backlog(0.0) > 0.0
+        assert rep.free_blocks < free0
+
+    def test_prefix_peek_after_dispatch(self):
+        rep = _replica(block_size=16)
+        toks = list(range(200, 264))
+        rep.enqueue(_req(0, tokens=toks), 0.0)
+        # same prompt now matches (dispatch-time insert), foreign doesn't
+        assert rep.prefix_peek(toks) >= 16
+        assert rep.prefix_peek(list(range(500, 540))) == 0
+
+    def test_start_batch_serves_and_accounts(self):
+        rep = _replica()
+        for i in range(4):
+            rep.enqueue(_req(i, arrival=0.0), 0.0)
+        done = rep.start_batch(0.0, get_scheduler("slo-odbs"),
+                               SchedulerConfig())
+        assert done is not None and done > 0.0
+        assert rep.busy_until == done
+        assert rep.inflight_blocks > 0
+        assert rep.stats.served > 0
+        rep.finish_batch()
+        assert rep.inflight_blocks == 0
+
+    def test_projected_finish_monotone_in_backlog(self):
+        rep = _replica()
+        probe = _req(99, slo=5.0)
+        empty = rep.projected_finish(probe, 0.0)
+        for i in range(12):
+            rep.enqueue(_req(i, slo=1.0), 0.0)   # tighter SLOs drain ahead
+        assert rep.projected_finish(probe, 0.0) > empty
+
+    def test_capacity_positive(self):
+        assert _replica().capacity_rps(64.0, 64.0) > 0.0
+
+
+# ------------------------------------------------------------------- router
+
+class TestRouter:
+    def test_round_robin_cycles(self):
+        reps = [_replica(i) for i in range(3)]
+        router = Router(RouterConfig(policy="round_robin"))
+        picks = [router.dispatch(_req(i), reps, 0.0).rid for i in range(6)]
+        assert picks == [0, 1, 2, 0, 1, 2]
+
+    def test_least_loaded_prefers_idle(self):
+        reps = [_replica(0), _replica(1)]
+        for i in range(10):
+            reps[0].enqueue(_req(i), 0.0)
+        router = Router(RouterConfig(policy="least_loaded", d_choices=2))
+        # with d == n both replicas are always sampled -> deterministic
+        for i in range(4):
+            assert router.dispatch(_req(100 + i), reps, 0.0).rid == 1
+
+    def test_prefix_affinity_sticky(self):
+        reps = [_replica(i) for i in range(3)]
+        router = Router(RouterConfig(policy="prefix_affinity",
+                                     affinity_block=16))
+        template = list(range(300, 348))
+        first = router.dispatch(_req(0, tokens=template + [1, 2]), reps, 0.0)
+        first.enqueue(_req(0, tokens=template + [1, 2]), 0.0)
+        assert router.stats.hash_fallbacks == 1
+        # same template routes to the same replica, now via the radix match
+        nxt = router.dispatch(_req(1, tokens=template + [7, 8]), reps, 0.0)
+        assert nxt.rid == first.rid
+        assert router.stats.affinity_hits == 1
+
+    def test_prefix_affinity_survives_scale_up(self):
+        reps = [_replica(i) for i in range(2)]
+        router = Router(RouterConfig(policy="prefix_affinity"))
+        template = list(range(400, 448))
+        home = router.dispatch(_req(0, tokens=template + [1]), reps, 0.0)
+        home.enqueue(_req(0, tokens=template + [1]), 0.0)
+        nodes, lat = paper_cluster()
+        reps.append(Replica(2, CFG, nodes, lat))   # autoscaler adds one
+        again = router.dispatch(_req(1, tokens=template + [2]), reps, 0.0)
+        assert again.rid == home.rid               # template stays sticky
+
+    def test_slo_aware_sheds_hopeless(self):
+        reps = [_replica(0), _replica(1)]
+        for rep in reps:
+            for i in range(20):
+                rep.enqueue(_req(1000 + i, slo=0.1), 0.0)
+        router = Router(RouterConfig(policy="slo_aware"))
+        assert router.dispatch(_req(0, slo=0.01), reps, 0.0) is None
+        assert router.stats.shed == 1
+        # a slack deadline is still routable
+        assert router.dispatch(_req(1, slo=1e4), reps, 0.0) is not None
+
+    def test_slo_aware_picks_earliest_finish(self):
+        reps = [_replica(0), _replica(1)]
+        for i in range(10):
+            reps[0].enqueue(_req(i, slo=1.0), 0.0)
+        router = Router(RouterConfig(policy="slo_aware"))
+        assert router.dispatch(_req(100, slo=500.0), reps, 0.0).rid == 1
+
+    def test_pool_backpressure_steers_dispatch(self):
+        # replica 0's pool is exhausted by its queued demand -> the router
+        # routes around it under every policy until pressure clears
+        reps = [_replica(0, n_blocks=4), _replica(1)]
+        reps[0].enqueue(_req(0), 0.0)              # > 4 projected blocks
+        assert reps[0].free_blocks == 0
+        router = Router(RouterConfig(policy="round_robin"))
+        assert all(router.dispatch(_req(10 + i), reps, 0.0).rid == 1
+                   for i in range(4))
+
+    def test_draining_replica_excluded(self):
+        reps = [_replica(0), _replica(1)]
+        reps[0].draining = True
+        router = Router(RouterConfig(policy="round_robin"))
+        assert all(router.dispatch(_req(i), reps, 0.0).rid == 1
+                   for i in range(3))
+
+    def test_unknown_policy_rejected(self):
+        with pytest.raises(ValueError):
+            RouterConfig(policy="wat")
+
+
+# --------------------------------------------------------------- autoscaler
+
+class TestAutoscaler:
+    def test_scale_up_on_surge(self):
+        auto = Autoscaler(AutoscalerConfig(interval=1.0, min_replicas=1,
+                                           max_replicas=8), capacity_rps=4.0)
+        reps = [_replica(0)]
+        want = 1
+        for t in range(4):
+            want = auto.tick(float(t), arrivals=40, replicas=reps)
+        assert want > 1
+        assert any(e.direction > 0 for e in auto.events)
+
+    def test_scale_down_needs_patience(self):
+        cfg = AutoscalerConfig(interval=1.0, min_replicas=1, max_replicas=8,
+                               down_patience=3)
+        auto = Autoscaler(cfg, capacity_rps=4.0)
+        reps = [_replica(i) for i in range(4)]
+        auto.forecaster.observe(16.0)              # warm level: 4 replicas
+        results = [auto.tick(float(t), arrivals=0, replicas=reps)
+                   for t in range(6)]
+        first_down = next(i for i, n in enumerate(results) if n < len(reps))
+        # hysteresis: the drop needs down_patience consecutive low ticks
+        assert first_down >= cfg.down_patience - 1
+        assert any(e.direction < 0 for e in auto.events)
+
+    def test_clamped_to_bounds(self):
+        cfg = AutoscalerConfig(min_replicas=2, max_replicas=3)
+        auto = Autoscaler(cfg, capacity_rps=1.0)
+        assert auto.desired_replicas(0.0) == 2
+        assert auto.desired_replicas(1e9) == 3
+
+    def test_forecaster_tracks_trend(self):
+        from repro.serving.cluster import ArrivalForecaster
+        f = ArrivalForecaster()
+        for rate in (10.0, 12.0, 14.0, 16.0, 18.0):
+            f.observe(rate)
+        assert f.forecast(2.0) > f.forecast(0.0)   # rising trend extrapolates
+        assert f.forecast(0.0) > 10.0
+
+
+# -------------------------------------------------------- cluster simulation
+
+class TestSimulateCluster:
+    def _workload(self, n=60, **kw):
+        base = dict(n_requests=n, arrival_rate=16.0, slo_lo=5.0,
+                    slo_hi=50.0, seed=2)
+        base.update(kw)
+        return gen_requests(WorkloadConfig(**base))
+
+    def test_smoke_all_served(self):
+        mon_pred = LengthPredictor(PredictorConfig(), seed=0)
+        prof = ResourceProfiler(mon_pred, CFG)
+        mon = Monitor(prof, update_on_miss=False)
+        reqs = self._workload()
+        res = simulate_cluster(reqs, CFG, get_scheduler("slo-odbs"),
+                               SchedulerConfig(), n_replicas=2,
+                               router="slo_aware", monitor=mon)
+        assert len(res.finished) + len(res.shed) == len(reqs)
+        assert 0.0 <= res.slo_attainment <= 1.0
+        assert res.replica_seconds > 0.0
+        assert res.peak_replicas == 2
+        # the monitor saw every fate through the unified SLO path
+        assert mon.stats.slo_observed == len(reqs)
+        assert mon.stats.shed_requests == len(res.shed)
+
+    def test_more_replicas_not_slower(self):
+        reqs = self._workload(n=80, arrival_rate=30.0)
+        one = simulate_cluster([copy.deepcopy(r) for r in reqs], CFG,
+                               get_scheduler("slo-odbs"), SchedulerConfig(),
+                               n_replicas=1, router="round_robin")
+        three = simulate_cluster([copy.deepcopy(r) for r in reqs], CFG,
+                                 get_scheduler("slo-odbs"), SchedulerConfig(),
+                                 n_replicas=3, router="round_robin")
+        assert three.makespan <= one.makespan
+        assert three.slo_attainment >= one.slo_attainment
+
+    def test_affinity_saves_prefill(self):
+        reqs = gen_shared_prefix_requests(SharedPrefixConfig(
+            n_requests=92, n_templates=8, prefix_len=64, turns=4,
+            arrival_rate=16.0, slo_lo=5.0, slo_hi=50.0, seed=4))
+        rr = simulate_cluster([copy.deepcopy(r) for r in reqs], CFG,
+                              get_scheduler("slo-odbs"), SchedulerConfig(),
+                              n_replicas=3, router="round_robin")
+        aff = simulate_cluster([copy.deepcopy(r) for r in reqs], CFG,
+                               get_scheduler("slo-odbs"), SchedulerConfig(),
+                               n_replicas=3, router="prefix_affinity")
+        assert aff.prefill_tokens < rr.prefill_tokens
+        assert aff.prefix_hit_rate > rr.prefix_hit_rate
+
+    def test_autoscaler_scales_and_drains(self):
+        reqs = self._workload(n=150, arrival_rate=10.0,
+                              arrival_pattern="bursty", seed=9)
+        res = simulate_cluster(reqs, CFG, get_scheduler("slo-odbs"),
+                               SchedulerConfig(), n_replicas=1,
+                               router="least_loaded",
+                               autoscale=AutoscalerConfig(
+                                   interval=1.0, min_replicas=1,
+                                   max_replicas=5, spawn_delay=0.5,
+                                   down_patience=2))
+        assert res.peak_replicas > 1          # scaled up inside bursts
+        assert res.scale_events
+        # elasticity: strictly cheaper than peak-static provisioning
+        assert res.replica_seconds < res.peak_replicas * res.makespan
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+
+    def test_replica_stats_consistent(self):
+        reqs = self._workload(n=40)
+        res = simulate_cluster(reqs, CFG, get_scheduler("slo-odbs"),
+                               SchedulerConfig(), n_replicas=2,
+                               router="round_robin")
+        assert sum(s["served"] for s in res.replica_stats) == len(reqs)
+        for s in res.replica_stats:
+            assert 0.0 <= s["utilization"] <= 1.0 + 1e-9
+            assert s["dmap_path"], "replica deployed via HELR"
+
+
+# ------------------------------------------------- unified SLO accounting
+
+class TestUnifiedSLO:
+    def test_single_replica_sim_feeds_monitor(self):
+        pred = LengthPredictor(PredictorConfig(), seed=0)
+        prof = ResourceProfiler(pred, CFG)
+        mon = Monitor(prof, update_on_miss=False)
+        reqs = gen_requests(WorkloadConfig(n_requests=32, seed=6))
+        res = simulate(reqs, CFG, get_scheduler("slo-odbs"),
+                       SchedulerConfig(), monitor=mon)
+        assert mon.stats.slo_observed == 32
+        viol_sim = res.slo_violation_rate
+        assert abs((1.0 - mon.stats.slo_attainment) - viol_sim) < 1e-9
+        assert "slo_attainment" in mon.metrics()
+
+    def test_shed_counts_as_violation(self):
+        pred = LengthPredictor(PredictorConfig(), seed=0)
+        mon = Monitor(ResourceProfiler(pred, CFG))
+        mon.observe_shed(_req(0))
+        assert mon.stats.slo_observed == 1
+        assert mon.stats.slo_violations == 1
+        assert mon.stats.slo_attainment == 0.0
