@@ -15,6 +15,41 @@ KERNEL_TESTS=(tests/test_kernels_flash.py tests/test_kernels_decode.py
 SERVING_TESTS=(tests/test_paged_engine.py tests/test_prefix_cache.py)
 CLUSTER_TESTS=(tests/test_cluster.py tests/test_workload.py)
 
+interleave_smoke() {
+    echo "== interleave smoke (chunked prefill + forced preemption) =="
+    python - <<'PY'
+import copy, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.core.types import Batch, Request
+from repro.models import api
+from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
+                           PagedEngineConfig)
+
+cfg = get_config("smollm-135m").reduced()
+params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+# r0: 16-token prompt -> 2 chunks at chunk_tokens=8; slack SLO (evictable).
+# r1: tight arrival that only fits once r0's blocks are reclaimed.
+reqs = [Request(rid=0, tokens=[3] * 16, input_len=16, slo=1000.0,
+                arrival=0.0, true_output_len=6),
+        Request(rid=1, tokens=[5] * 8, input_len=8, slo=0.001,
+                arrival=0.0, true_output_len=4)]
+ref = InferenceEngine(cfg, params,
+                      EngineConfig(max_batch=2, cache_len=32,
+                                   max_new_tokens=8)).run_batch(
+    Batch(requests=[copy.copy(r) for r in reqs]),
+    true_lens={r.rid: r.true_output_len for r in reqs})
+eng = PagedEngine(cfg, params, PagedEngineConfig(
+    max_batch=2, block_size=8, n_blocks=5, max_seq_len=32,
+    max_new_tokens=8, chunk_tokens=8, preempt=True))
+res = eng.run_continuous([copy.copy(r) for r in reqs])
+assert res.preemptions >= 1, res.preemptions
+assert res.prefill_chunks >= 4, res.prefill_chunks   # 2 chunks + recompute
+assert all(res.outputs[r.rid] == ref.outputs[r.rid] for r in reqs)
+print(f"interleave smoke: chunks={res.prefill_chunks} "
+      f"preemptions={res.preemptions} (token-identical)")
+PY
+}
+
 cluster_smoke() {
     echo "== cluster smoke (2 simulated replicas, slo_aware router) =="
     python - <<'PY'
@@ -43,6 +78,7 @@ fi
 
 if [[ "${1:-}" == "serving" ]]; then
     python -m pytest -q "${SERVING_TESTS[@]}"
+    interleave_smoke
     exit 0
 fi
 
@@ -60,6 +96,7 @@ python -m pytest -x -q "${IGNORES[@]}"
 echo "== kernel parity (pallas interpret + xla vs oracle) =="
 python -m pytest -q "${KERNEL_TESTS[@]}"
 
+interleave_smoke
 cluster_smoke
 
 echo "ci.sh: all green"

@@ -4,8 +4,8 @@ from repro.core.types import Batch, DeviceMap, DeviceNode, Request  # noqa: F401
 from repro.core.profiler import (LengthPredictor, PredictorConfig,  # noqa: F401
                                  ResourceProfiler, make_buckets)
 from repro.core.scheduler import (SchedulerConfig, SCHEDULERS,  # noqa: F401
-                                  fifo, get_scheduler, odbs,
-                                  prefix_affinity_key, s3_binpack,
+                                  derive_chunk_tokens, fifo, get_scheduler,
+                                  odbs, prefix_affinity_key, s3_binpack,
                                   slo_dbs, slo_odbs)
 from repro.core.deployer import (DEPLOYERS, HELRConfig, MeshPlan, bgs,  # noqa: F401
                                  candidate_plans, he, helr, helr_mesh, lr)

@@ -34,6 +34,12 @@ class MonitorStats:
     prefix_hit_blocks: int = 0
     prefix_evicted_blocks: int = 0
     prefix_cow_forks: int = 0
+    # --- iteration-level scheduling gauges (chunked prefill + preemption,
+    # fed by PagedEngine.run_continuous / simulate_continuous) ---
+    prefill_stall_s: float = 0.0   # prefill time run while >=1 slot decoded
+    prefill_chunks: int = 0        # prefill calls issued (1/prompt unchunked)
+    preemptions: int = 0           # residents evicted for tighter arrivals
+    preempted_tokens: int = 0      # generated tokens recomputed after evict
     # --- SLO accounting (one code path: engines, simulator, cluster) ---
     slo_observed: int = 0          # finished (or shed) requests with a deadline
     slo_violations: int = 0        # missed deadlines, shed requests included
@@ -139,6 +145,18 @@ class Monitor:
         st.prefix_evicted_blocks += prefix_stats.evicted_blocks
         st.prefix_cow_forks += cow_forks
 
+    def observe_interleave(self, *, stall_s: float = 0.0, chunks: int = 0,
+                           preemptions: int = 0,
+                           preempted_tokens: int = 0) -> None:
+        """Iteration-level scheduling gauges from a serving run: decode
+        stall time imposed by prefill work, chunk count, and SLO-slack
+        preemption activity (evictions + recomputed tokens)."""
+        st = self.stats
+        st.prefill_stall_s += stall_s
+        st.prefill_chunks += chunks
+        st.preemptions += preemptions
+        st.preempted_tokens += preempted_tokens
+
     def observe_shed(self, req: Request) -> None:
         """A request the router refused (no replica could meet its SLO):
         counted as an SLO violation — shedding is not a free pass."""
@@ -185,6 +203,12 @@ class Monitor:
             out["prefix_hit_tokens"] = st.prefix_hit_tokens
             out["prefix_evicted_blocks"] = st.prefix_evicted_blocks
             out["prefix_cow_forks"] = st.prefix_cow_forks
+        if st.prefill_chunks:
+            out["prefill_chunks"] = st.prefill_chunks
+            out["prefill_stall_s"] = round(st.prefill_stall_s, 4)
+        if st.preemptions:
+            out["preemptions"] = st.preemptions
+            out["preempted_tokens"] = st.preempted_tokens
         if st.slo_observed:
             out["slo_observed"] = st.slo_observed
             out["slo_violations"] = st.slo_violations

@@ -68,6 +68,26 @@ def _dynamic_cap(cm: float, cfg: SchedulerConfig) -> int:
     return max(1, min(cfg.max_batch, int(cfg.base_cap / scale) + 1))
 
 
+def derive_chunk_tokens(cfg: SchedulerConfig, *, block_size: int = 16,
+                        max_chunk_blocks: int = 16) -> int:
+    """Per-iteration prefill token budget for the paged engine's chunked
+    prefill, derived from the batch-close composite threshold.
+
+    Interpretation (the paper stops at batch shaping; iteration-level
+    scheduling is our extension): the threshold is the per-batch composite
+    latency budget, so a scheduler configured with a *larger* threshold
+    tolerates longer uninterrupted work — larger prefill chunks, fewer
+    interleave breaks — while heavier composite weights tighten the
+    per-iteration budget.  The rule is the same monotone-shape choice as
+    ``_dynamic_cap``: chunk blocks scale with ``threshold / (w1 + w2)``
+    (1e3 composite units ~ one KV block of prefill), clamped to
+    [1, max_chunk_blocks] blocks so a chunk is never smaller than the
+    scatter granularity nor larger than a whole scheduling window."""
+    w = max(cfg.w1 + cfg.w2, 1e-9)
+    blocks = int(cfg.threshold / w / 1e3)
+    return block_size * max(1, min(max_chunk_blocks, blocks))
+
+
 def slo_odbs(requests: Iterable[Request], cfg: SchedulerConfig,
              *, sort_key: Optional[Callable[[Request], float]] = None
              ) -> list[Batch]:
@@ -93,12 +113,16 @@ def slo_odbs(requests: Iterable[Request], cfg: SchedulerConfig,
             cur.requests.append(q)
             l_cm = max(l_cm, q.slo)
             o_cm = max(o_cm, q.sched_output_len)
-            cm = max(cm, cfg.w1 * q.sched_output_len + cfg.w2 * q.slo)
+            # CM mirrors the batch-close composite: w1 weighs the SLO term,
+            # w2 the output term (a historical swap here capped SLO-DBS on
+            # output length and ODBS on deadlines — each projection's cap
+            # must respond to its own term only)
+            cm = max(cm, cfg.w1 * q.slo + cfg.w2 * q.sched_output_len)
         else:
             batches.append(cur)
             cur = Batch(requests=[q])
             l_cm, o_cm = q.slo, q.sched_output_len
-            cm = cfg.w1 * q.sched_output_len + cfg.w2 * q.slo
+            cm = cfg.w1 * q.slo + cfg.w2 * q.sched_output_len
     if len(cur):
         batches.append(cur)
     return batches

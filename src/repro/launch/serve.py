@@ -10,6 +10,12 @@ sized from ``--kv-budget`` bytes — the same budget surface SLO-ODBS uses.
 prompts prefill only their uncached suffix; ``--workload shared-prefix``
 generates a template-heavy mix that exercises it), and ``--lookahead N``
 lets admission skip a too-big queue head when a later request fits.
+``--chunk-tokens N`` chunks prompt prefill to N tokens per engine iteration
+(interleaved with decode, so residents never stall for a whole prompt;
+``-1`` derives N from the scheduler's composite threshold) and ``--preempt``
+lets block pressure evict the slack-most resident for recompute instead of
+blocking a tight arrival — both also feed the cluster paths (replica load
+projections price them).
 
 ``--replicas N`` lifts serving to the cluster layer (serving/cluster):
 requests are routed by ``--router`` across N replicas.  With ``--paged``
@@ -32,7 +38,8 @@ import jax.numpy as jnp
 
 from repro.configs import SHAPES, get_config
 from repro.core import (LengthPredictor, Monitor, ResourceProfiler,
-                        SchedulerConfig, get_scheduler, helr_mesh)
+                        SchedulerConfig, derive_chunk_tokens, get_scheduler,
+                        helr_mesh)
 from repro.core.profiler import PredictorConfig
 from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
                                  gen_requests, gen_shared_prefix_requests,
@@ -55,10 +62,12 @@ def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
         pcfg = PagedEngineConfig.from_memory_budget(
             cfg, args.kv_budget, max_batch=4, block_size=8,
             max_seq_len=max_seq, max_new_tokens=args.max_new,
-            prefix_cache=args.prefix_cache, admit_lookahead=args.lookahead)
+            prefix_cache=args.prefix_cache, admit_lookahead=args.lookahead,
+            chunk_tokens=args.chunk_tokens, preempt=args.preempt)
         replicas.append(Replica(
             i, cfg, nodes, lat, max_batch=4, block_size=8,
-            n_blocks=pcfg.n_blocks, prefix_cache=args.prefix_cache,
+            n_blocks=pcfg.usable_blocks, prefix_cache=args.prefix_cache,
+            chunk_tokens=args.chunk_tokens, preempt=args.preempt,
             engine=PagedEngine(cfg, params, pcfg, monitor=mon)))
     for r in sorted(reqs, key=lambda q: q.arrival):
         rep = router.dispatch(r, replicas, r.arrival)
@@ -104,7 +113,8 @@ def _serve_cluster_sim(args, prof, mon) -> None:
     res = simulate_cluster(
         reqs, full_cfg, get_scheduler(args.scheduler), SchedulerConfig(),
         n_replicas=args.replicas, router=args.router, autoscale=auto,
-        prefix_cache=args.prefix_cache, profiler=prof, monitor=mon)
+        prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens,
+        preempt=args.preempt, profiler=prof, monitor=mon)
     print("cluster:", res.summary())
     for s in res.replica_stats:
         print(f"  replica {s['rid']}: served={s['served']} "
@@ -129,6 +139,15 @@ def main():
     ap.add_argument("--lookahead", type=int, default=0,
                     help="queue entries scanned past a blocked head "
                          "(paged admission)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="per-iteration prefill chunk budget for the paged "
+                         "engine (0: whole-prompt prefill at admission; "
+                         "-1: derive from the scheduler's composite "
+                         "threshold)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="under block pressure evict the resident with the "
+                         "most SLO slack and requeue it for recompute "
+                         "instead of blocking a tighter arrival")
     ap.add_argument("--workload", default="alpaca",
                     choices=["alpaca", "shared-prefix", "bursty", "diurnal"],
                     help="alpaca: lognormal Poisson mix; shared-prefix: "
@@ -152,6 +171,12 @@ def main():
                          "drop --paged (elasticity has no live-engine mode)")
     if args.prefix_cache and not (args.replicas > 1 or args.autoscale):
         args.paged = True          # cluster sim path honors the flag itself
+
+    if args.chunk_tokens < 0:
+        args.chunk_tokens = derive_chunk_tokens(SchedulerConfig(),
+                                                block_size=8)
+        print(f"chunk budget from scheduler threshold: "
+              f"{args.chunk_tokens} tokens/iteration")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -213,10 +238,13 @@ def main():
             cfg, args.kv_budget, max_batch=4, block_size=8,
             max_seq_len=max_seq, max_new_tokens=args.max_new,
             prefix_cache=args.prefix_cache,
-            admit_lookahead=args.lookahead)
-        print(f"paged pool: {pcfg.n_blocks} blocks x {pcfg.block_size} slots "
-              f"({args.kv_budget:.0f} B budget, "
-              f"prefix_cache={'on' if pcfg.prefix_cache else 'off'})")
+            admit_lookahead=args.lookahead,
+            chunk_tokens=args.chunk_tokens, preempt=args.preempt)
+        print(f"paged pool: {pcfg.usable_blocks} usable blocks (+null) x "
+              f"{pcfg.block_size} slots ({args.kv_budget:.0f} B budget, "
+              f"prefix_cache={'on' if pcfg.prefix_cache else 'off'}, "
+              f"chunk_tokens={pcfg.chunk_tokens}, "
+              f"preempt={'on' if pcfg.preempt else 'off'})")
         paged = PagedEngine(cfg, params, pcfg, monitor=mon)
         res = paged.run_continuous(sorted(reqs, key=lambda r: r.arrival))
         done = res.outputs
@@ -225,6 +253,12 @@ def main():
               f"peak_blocks={res.peak_blocks}, "
               f"kv_util={res.kv_utilization:.3f}, "
               f"waste_vs_padded={res.waste_vs_padded:.3f}")
+        if pcfg.chunk_tokens or pcfg.preempt:
+            print(f"interleave: {res.prefill_chunks} chunks, "
+                  f"stall={res.prefill_stall_s*1e3:.1f}ms, "
+                  f"p99_itl={res.p99_inter_token_s*1e3:.2f}ms, "
+                  f"preemptions={res.preemptions} "
+                  f"({res.preempted_tokens} tokens recomputed)")
         if pcfg.prefix_cache:
             print(f"prefix: {res.prefix_hits}/{res.prefix_lookups} hits, "
                   f"hit_tokens={res.prefix_hit_tokens}, "

@@ -9,7 +9,8 @@ from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,  # noqa: F401
 from repro.serving.cluster import (Autoscaler, AutoscalerConfig,  # noqa: F401
                                    Replica, Router, RouterConfig)
 from repro.serving.simulator import (ClusterSimResult,  # noqa: F401
-                                     LatencyModel, SimResult,
-                                     morphling_deploy_overhead, paper_cluster,
-                                     replicated_cluster, simulate,
-                                     simulate_cluster)
+                                     ContinuousSimResult, LatencyModel,
+                                     SimResult, morphling_deploy_overhead,
+                                     paper_cluster, replicated_cluster,
+                                     simulate, simulate_cluster,
+                                     simulate_continuous)

@@ -74,6 +74,7 @@ class Replica:
                  max_batch: int = 8, block_size: int = 16,
                  n_blocks: int = 4096, prefix_cache: bool = True,
                  max_tree_nodes: int = 65536,
+                 chunk_tokens: int = 0, preempt: bool = False,
                  spawned_at: float = 0.0, engine=None):
         self.rid = rid
         self.model_cfg = model_cfg
@@ -90,9 +91,12 @@ class Replica:
             RadixBlockTree(block_size) if prefix_cache else None
         self.max_tree_nodes = max_tree_nodes
         self.engine = engine                  # live PagedEngine (optional)
+        self.chunk_tokens = chunk_tokens      # engine-side chunked prefill
+        self.preempt = preempt                # engine-side SLO preemption
         self.queue: list[Request] = []
         self.busy_until = 0.0
         self.inflight_blocks = 0
+        self.inflight_slos: list[float] = []  # SLOs of the running batch
         self.draining = False                 # autoscaler: no new dispatches
         self.partition: Optional[int] = None  # node-partition slot (cluster)
         self.spawned_at = spawned_at
@@ -149,14 +153,24 @@ class Replica:
 
     def _chunk_time(self, chunk: list[Request]) -> float:
         """Service time of one batch-width chunk: prefill on the longest
-        *uncached* prompt + decode to the longest predicted output."""
+        *uncached* prompt + decode to the longest predicted output.  With
+        engine-side chunked prefill (``chunk_tokens``) every extra prefill
+        chunk re-reads the already-written prefix K/V through the block
+        table, so the projection prices roughly one decode-iteration of
+        cache traffic per additional chunk — interleaving trades a little
+        throughput for bounded inter-token stalls, and load signals must
+        not pretend it is free."""
         w = len(chunk)
         in_net = max(max(1, self._net_prefill.get(r.rid, r.input_len))
                      for r in chunk)
         out = max((r.predicted_output_len or r.sched_output_len)
                   for r in chunk)
         kv = max(r.input_len for r in chunk) + out / 2
-        return self.lm.prefill_time(w, in_net) + out * self.lm.token_time(w, kv)
+        t_pre = self.lm.prefill_time(w, in_net)
+        if self.chunk_tokens > 0:
+            n_chunks = -(-in_net // self.chunk_tokens)
+            t_pre += (n_chunks - 1) * self.lm.token_time(w, in_net / 2)
+        return t_pre + out * self.lm.token_time(w, kv)
 
     def projected_drain(self) -> float:
         """Seconds to clear the queue, batched at engine width."""
@@ -173,9 +187,19 @@ class Replica:
         the slo_aware routing estimate.  Scheduler-aware: SLO-ODBS serves
         SLO-ascending, so only queued requests with *tighter* SLOs drain
         ahead of ``r``; ``r`` itself finishes with its batch cohort (it
-        pays the cohort's padded prefill, not a batch-of-one's)."""
+        pays the cohort's padded prefill, not a batch-of-one's).
+
+        With engine-side preemption the in-flight barrier shrinks: the
+        engine can evict residents with more slack than ``r`` and give it
+        their capacity, so only the busy tail attributable to the
+        tighter-or-equal share of the running batch still blocks ``r`` —
+        without this the router sheds tight requests the engine could in
+        fact serve by preempting."""
         cohort = [q for q in self.queue if q.slo <= r.slo] + [r]
         t = max(0.0, self.busy_until - now)
+        if self.preempt and t > 0 and self.inflight_slos:
+            tighter = sum(1 for s in self.inflight_slos if s <= r.slo)
+            t *= tighter / len(self.inflight_slos)
         for i in range(0, len(cohort), self.max_batch):
             t += self._chunk_time(cohort[i:i + self.max_batch])
         return now + t
@@ -276,11 +300,13 @@ class Replica:
                 st.slo_missed += 1
         self.busy_until = t_cursor
         self.inflight_blocks = sum(self._blocks_for(r) for r in b.requests)
+        self.inflight_slos = [r.slo for r in b.requests]
         return t_cursor
 
     def finish_batch(self) -> None:
         """The 'done' event: the in-flight batch's blocks return."""
         self.inflight_blocks = 0
+        self.inflight_slos = []
 
     def retire(self, now: float) -> None:
         self.retired_at = now

@@ -11,22 +11,35 @@ is the production-shaped alternative the paper's batch shaping composes with:
   padded only to the block boundary) and their prompt K/V scattered into
   their blocks while resident slots keep decoding — prefill FLOPs are
   proportional to admitted prompts only;
+* with ``chunk_tokens > 0`` prefill is **chunked** (Sarathi-style): an
+  admitted prompt is processed ``chunk_tokens`` tokens per engine iteration
+  through the continuation-prefill path (``prefix_kv`` gathered from the
+  sequence's own blocks), interleaved with one decode step for the resident
+  slots — so residents emit a token every iteration and the inter-token
+  stall is bounded by one chunk, not one prompt;
 * admission is gated on ``BlockAllocator.can_alloc`` over the *worst-case*
-  block demand of the candidate (prompt + decode budget), net of blocks
-  already promised to residents — decode can therefore never run out of
-  blocks mid-flight, and backpressure lands where the paper's SLO-ODBS
+  block demand of the candidate — the profiler-predicted output length
+  clamped to the decode budget, never the ground-truth ``true_output_len``
+  the serving path cannot know — net of blocks already promised to
+  residents.  Backpressure lands where the paper's SLO-ODBS
   ``memory_budget`` already operates (``PagedEngineConfig.from_memory_budget``
-  sizes the pool from that same budget, so scheduler and allocator agree).
+  sizes the pool from that same budget, so scheduler and allocator agree);
+* with ``preempt=True`` block pressure evicts instead of blocking: the
+  resident with the most SLO slack is preempted — its blocks freed, the
+  request requeued with its generated-so-far tokens as a *recompute prefix*
+  (vLLM-style preempt-and-recompute) — so a tight-deadline arrival gets
+  capacity without waiting for a slack resident to drain.  Recompute replays
+  exactly the tokens already emitted, so outputs stay token-identical.
 
-Physical block 0 is reserved as the *null block*: free slots' block-table
-rows point at it, so the fixed-batch decode step stays shape-stable without
-ever writing into live blocks.
+Physical block 0 is reserved as the *null block*: free slots' (and
+mid-prefill slots') block-table rows point at it, so the fixed-batch decode
+step stays shape-stable without ever writing into live blocks.
 """
 from __future__ import annotations
 
 import functools
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Optional
 
 import jax
@@ -66,17 +79,31 @@ class PagedEngineConfig:
     # per distinct hit length vs per hit *block count*); turn off where
     # compile latency matters more than the tail FLOPs
     share_partial_tails: bool = True
+    # iteration-level scheduling: per-iteration prefill token budget
+    # (rounded up to a block multiple; 0 = whole-prompt prefill at admission)
+    chunk_tokens: int = 0
+    # SLO-slack preemption under block pressure (preempt-and-recompute)
+    preempt: bool = False
 
     @classmethod
     def from_memory_budget(cls, cfg: ModelConfig, memory_budget: float,
                            *, dtype_bytes: int = 4, **kw) -> "PagedEngineConfig":
         """Size the physical pool from the scheduler's KV ``memory_budget``
         (SchedulerConfig.memory_budget) so admission control and SLO-ODBS
-        batch shaping enforce the same byte ceiling."""
+        batch shaping enforce the same byte ceiling.  The budget buys
+        *usable* blocks: the reserved null block is allocator overhead on
+        top, so the KV capacity the scheduler packs against equals the
+        capacity admission control actually hands out (a budget below one
+        block still yields one usable block)."""
         self = cls(**kw)
         bb = kv_block_bytes(cfg, self.block_size, dtype_bytes)
-        self.n_blocks = max(2, int(memory_budget // bb))
+        self.n_blocks = max(1, int(memory_budget // bb)) + 1
         return self
+
+    @property
+    def usable_blocks(self) -> int:
+        """Blocks available to sequences (total minus the null block)."""
+        return self.n_blocks - 1
 
     @property
     def max_blocks(self) -> int:
@@ -100,6 +127,31 @@ class PagedBatchResult(BatchResult):
     prefix_hit_tokens: int = 0     # prompt tokens served from cached blocks
     prefix_evictions: int = 0      # cached blocks reclaimed under pressure
     cow_forks: int = 0             # partial tail blocks forked before writing
+    # --- iteration-level scheduling (chunked prefill + preemption) ---
+    prefill_chunks: int = 0        # prefill calls issued (1/prompt unchunked)
+    prefill_stall_s: float = 0.0   # prefill time spent while >=1 slot decoded
+    preemptions: int = 0           # residents evicted for a tighter arrival
+    preempted_tokens: int = 0      # generated tokens whose K/V was recomputed
+    inter_token_s: list = field(default_factory=list)
+    #   wall-clock gaps between consecutive decode emissions per slot — the
+    #   decode-stall distribution interleave_bench takes its p99 over
+
+    @property
+    def p99_inter_token_s(self) -> float:
+        if not self.inter_token_s:
+            return float("nan")
+        return float(np.percentile(self.inter_token_s, 99))
+
+
+@dataclass
+class PrefillProgress:
+    """Host-side cursor of one slot's (possibly chunked) prefill."""
+    prompt: list                  # tokens to prefill (prompt [+ recompute])
+    done: int                     # tokens whose K/V already sits in the pool
+    resume_tok: Optional[int] = None
+    #   preempt-and-recompute: the next input token is already known (the
+    #   last token emitted before eviction) — completion restores it instead
+    #   of sampling, and no output token is appended
 
 
 @dataclass
@@ -115,6 +167,7 @@ class PagedDecodeState:
     null_block: int
     active: list                                 # [B] Optional[Request]
     prefix: Optional[PrefixCache] = None         # radix prefix-sharing tree
+    prefilling: dict = field(default_factory=dict)   # slot -> PrefillProgress
 
     @classmethod
     def create(cls, cfg: ModelConfig, pcfg: PagedEngineConfig,
@@ -148,17 +201,24 @@ class PagedDecodeState:
         self.kv_len[slot] = 0
         self.cur_tok[slot] = 0
         self.active[slot] = None
+        self.prefilling.pop(slot, None)
 
     @property
     def live_blocks(self) -> int:
         """Blocks held by sequences (excludes the reserved null block)."""
         return self.alloc.used_blocks - 1
 
+    def decoding_slots(self) -> list:
+        """Slots past prefill (their next step is a decode token)."""
+        return [s for s, r in enumerate(self.active)
+                if r is not None and s not in self.prefilling]
+
 
 class PagedEngine:
     """Continuous batching over paged KV blocks.  Greedy decoding, token-
     identical to ``InferenceEngine.run_batch`` for the same requests (the
-    decode math only differs in cache addressing)."""
+    decode math only differs in cache addressing; chunked prefill and
+    preempt-and-recompute replay the same math, so they preserve it too)."""
 
     def __init__(self, cfg: ModelConfig, params, pcfg: PagedEngineConfig,
                  plan: Optional[ShardingPlan] = None,
@@ -173,6 +233,12 @@ class PagedEngine:
         self.plan = plan
         self.monitor = monitor
         self.dtype = dtype
+        # per-iteration prefill budget, block-aligned so full chunks scatter
+        # without padding holes mid-prompt (a hole would be read back as
+        # garbage by the next chunk's prefix gather)
+        bs = pcfg.block_size
+        self._chunk = 0 if pcfg.chunk_tokens <= 0 \
+            else -(-pcfg.chunk_tokens // bs) * bs
         # donate the pools (argnum 2 of (params, tokens, pools, bt, kv_len))
         # so the per-step K/V scatter aliases in place instead of copying the
         # whole pool every token
@@ -185,7 +251,9 @@ class PagedEngine:
                 cache_len=cache_len, kv_len=kv_len),
             static_argnames=("cache_len",))
         # continuation prefill: only the uncached suffix runs through the
-        # model, attending through the gathered prefix K/V (prefix_cache.py)
+        # model, attending through the gathered prefix K/V (prefix_cache.py);
+        # chunked prefill reuses it with the prefix gathered from the
+        # sequence's *own* already-prefilled blocks
         self._prefill_suffix = jax.jit(
             lambda params, toks, kv_len, cache_len, prefix: api.prefill(
                 cfg, params, {"tokens": toks}, plan=plan,
@@ -208,18 +276,30 @@ class PagedEngine:
         return jax.tree.map(write, pools, cache)
 
     # --------------------------------------------------------------- admission
-    def _worst_blocks(self, r: Request, budget: int) -> int:
-        horizon = len(r.tokens) + min(r.true_output_len, budget)
+    def _worst_blocks(self, r: Request, budget: int, gen: int = 0) -> int:
+        """Worst-case block demand the serving path can actually *know*: the
+        profiler-predicted ``sched_output_len`` clamped to the decode budget
+        (never ``true_output_len`` — admission must not read ground truth),
+        floored at ``gen + 1`` so a preempted request's recompute prefix plus
+        its next token is always covered."""
+        plan_len = min(budget, max(min(r.sched_output_len, budget), gen + 1))
+        horizon = len(r.tokens) + plan_len
         return -(-horizon // self.pcfg.block_size)
 
-    def _reserved_remaining(self, st: PagedDecodeState, budget: int) -> int:
+    @staticmethod
+    def _gen_count(outs: Optional[dict], r: Request) -> int:
+        return len(outs.get(r.rid, ())) if outs is not None else 0
+
+    def _reserved_remaining(self, st: PagedDecodeState, budget: int,
+                            outs: Optional[dict] = None) -> int:
         """Blocks still promised to resident slots beyond what they hold."""
         total = 0
         for slot, r in enumerate(st.active):
             if r is None:
                 continue
             held = len(st.alloc.tables.get(slot, []))
-            total += max(0, self._worst_blocks(r, budget) - held)
+            worst = self._worst_blocks(r, budget, self._gen_count(outs, r))
+            total += max(0, worst - held)
         return total
 
     def _prefix_discount(self, st: PagedDecodeState, r: Request
@@ -235,40 +315,131 @@ class PagedEngine:
         cached = sum(b in st.alloc.cached for b in m.blocks())
         return len(m.full), cached
 
-    def can_admit(self, st: PagedDecodeState, r: Request, budget: int) -> bool:
+    def can_admit(self, st: PagedDecodeState, r: Request, budget: int,
+                  outs: Optional[dict] = None) -> bool:
         """Worst-case block demand, net of prefix hits: shared full blocks
         are already resident, so cache hits directly buy admission capacity.
         Matched blocks sitting in the evictable cache are excluded from the
         supply — sharing them revives them, they cannot also be evicted."""
         full, cached = self._prefix_discount(st, r)
-        need = max(0, self._worst_blocks(r, budget) - full) \
-            + self._reserved_remaining(st, budget)
+        worst = self._worst_blocks(r, budget, self._gen_count(outs, r))
+        need = max(0, worst - full) \
+            + self._reserved_remaining(st, budget, outs)
         return st.alloc.available - cached >= need
+
+    # -------------------------------------------------------------- preemption
+    def _slack(self, r: Request, now: float) -> float:
+        """Seconds until r's deadline on the trace-replay clock."""
+        return r.arrival + r.slo - now
+
+    def _pick_victim(self, st: PagedDecodeState, outs: dict, *,
+                     min_slack: float, now: float) -> Optional[int]:
+        """Decoding resident with the most SLO slack, if it beats
+        ``min_slack`` (the candidate's own slack: preempting someone
+        *tighter* than the arrival would trade a violation for a
+        violation).  Mid-prefill slots are never victims — their chunks
+        would be pure wasted work."""
+        best, best_slack = None, min_slack
+        for slot in st.decoding_slots():
+            s = self._slack(st.active[slot], now)
+            if s > best_slack:
+                best, best_slack = slot, s
+        return best
+
+    def _preempt_gain(self, st: PagedDecodeState, slot: int, budget: int,
+                      outs: dict) -> tuple[int, int]:
+        """(supply gained, reservations released) if ``slot`` were evicted —
+        the dry-run arithmetic behind the admission feasibility precheck.
+        Blocks the victim shares with other sequences stay referenced (no
+        gain); its exclusive blocks return to the free list, or to the
+        evictable cache when the prefix tree retains them (supply only
+        while a reclaimer is registered, mirroring
+        ``BlockAllocator.available``)."""
+        a = st.alloc
+        gain = 0
+        for b in a.tables.get(slot, []):
+            if a.refcnt.get(b, 0) == 1 and (
+                    b not in a.retained or a.reclaimer is not None):
+                gain += 1
+        r = st.active[slot]
+        held = len(a.tables.get(slot, []))
+        worst = self._worst_blocks(r, budget, self._gen_count(outs, r))
+        return gain, max(0, worst - held)
+
+    def _preempt(self, st: PagedDecodeState, slot: int, outs: dict,
+                 res: PagedBatchResult, queue: list) -> None:
+        """Evict a resident: free its blocks and requeue it right behind the
+        queue head with its generated tokens as a recompute prefix (the
+        tokens stay in ``outs``; re-admission replays their K/V and resumes
+        decoding from the last emitted token)."""
+        r = st.active[slot]
+        res.preemptions += 1
+        res.preempted_tokens += len(outs[r.rid])
+        st.free_slot(slot)
+        queue.insert(min(1, len(queue)), r)
 
     def _admit(self, st: PagedDecodeState, queue: list, outs: dict,
                res: PagedBatchResult, budget: int) -> int:
         """Fill free slots from the queue (FIFO).  A too-big queue head only
         blocks admission for ``admit_lookahead == 0``; otherwise up to that
         many later requests are scanned and the first that fits is admitted
-        — bounded, so the head cannot starve.  Each admitted prompt is
-        prefilled individually — resident slots are untouched."""
+        — bounded, so the head cannot starve.  With ``preempt`` a blocked
+        head may instead evict resident(s) with more SLO slack than its own.
+        Unchunked, each admitted prompt is prefilled to completion here;
+        chunked, prefill begins and the main loop interleaves the chunks."""
         admitted = 0
         t0 = time.perf_counter()
-        for slot in range(self.pcfg.max_batch):
-            if st.active[slot] is not None or not queue:
-                continue
+        while queue:
+            free = [s for s in range(self.pcfg.max_batch)
+                    if st.active[s] is None]
+            if not free:
+                break
             pick = None
             for qi in range(min(len(queue), self.pcfg.admit_lookahead + 1)):
-                if self.can_admit(st, queue[qi], budget):
+                if self.can_admit(st, queue[qi], budget, outs):
                     pick = qi
                     break
+            if pick is None and self.pcfg.preempt:
+                head = queue[0]
+                now = time.perf_counter() - self._serve_t0
+                slack_h = self._slack(head, now)
+                eligible = sorted(
+                    (s for s in st.decoding_slots()
+                     if self._slack(st.active[s], now) > slack_h),
+                    key=lambda s: self._slack(st.active[s], now),
+                    reverse=True)
+                # feasibility precheck: evict only the slack-descending
+                # victim prefix that actually buys the head admission —
+                # never throw away residents' generated work for zero gain
+                full, cached = self._prefix_discount(st, head)
+                worst = self._worst_blocks(head, budget,
+                                           self._gen_count(outs, head))
+                avail = st.alloc.available
+                reserved = self._reserved_remaining(st, budget, outs)
+                n_evict = 0
+                for k, s in enumerate(eligible, start=1):
+                    a_gain, r_gain = self._preempt_gain(st, s, budget, outs)
+                    avail += a_gain
+                    reserved -= r_gain
+                    if avail - cached >= max(0, worst - full) + reserved:
+                        n_evict = k
+                        break
+                for s in eligible[:n_evict]:
+                    self._preempt(st, s, outs, res, queue)
+                if n_evict and self.can_admit(st, head, budget, outs):
+                    pick = 0
             if pick is None:
                 break
             if pick:
                 res.hol_skips += 1
             r = queue.pop(pick)
+            slot = min(s for s in range(self.pcfg.max_batch)
+                       if st.active[s] is None)
             st.active[slot] = r
-            self._prefill_into(st, slot, r, outs, res)
+            self._begin_prefill(st, slot, r, outs, res)
+            if not self._chunk:
+                while slot in st.prefilling:
+                    self._run_chunk(st, slot, outs, res)
             admitted += 1
             res.peak_residents = max(
                 res.peak_residents, sum(a is not None for a in st.active))
@@ -281,7 +452,7 @@ class PagedEngine:
         bs = self.pcfg.block_size
         return -(-n // bs) * bs
 
-    def _gather_prefix(self, pools, blocks: list[int], p_len: int):
+    def _gather_prefix(self, pools, blocks: list, p_len: int):
         """Materialize the cached prefix K/V ([n_groups, 1, P, KV, hd] per
         leaf) from the physical pool for the continuation prefill."""
         idx = jnp.asarray(blocks, jnp.int32)
@@ -292,20 +463,30 @@ class PagedEngine:
             return flat[:, None, :p_len]
         return jax.tree.map(g, pools)
 
-    def _prefill_into(self, st: PagedDecodeState, slot: int, r: Request,
+    # ---------------------------------------------------------------- prefill
+    def _begin_prefill(self, st: PagedDecodeState, slot: int, r: Request,
                       outs: dict, res: PagedBatchResult) -> None:
-        prompt = list(r.tokens)
+        """Open the slot: prefix-cache share/COW, allocate the prompt's
+        blocks, and record the chunk cursor.  A preempted request's prompt
+        is its original prompt plus all-but-the-last generated token (the
+        last one is the resume input, its K/V not yet written)."""
+        gen = outs.get(r.rid)
+        if gen:
+            prompt = list(r.tokens) + gen[:-1]
+            resume: Optional[int] = gen[-1]
+        else:
+            prompt = list(r.tokens)
+            resume = None
         ln = len(prompt)
         bs = self.pcfg.block_size
         st.alloc.start_seq(slot)
-        p_len = n_shared = 0
+        p_len = 0
         if st.prefix is not None:
             m = st.prefix.lookup(prompt,
                                  partial=self.pcfg.share_partial_tails)
             if m.hit_tokens:
                 st.prefix.share(slot, m)
                 p_len = m.hit_tokens
-                n_shared = len(m.full) + (1 if m.tail is not None else 0)
                 if m.tail is not None:
                     # the suffix scatter writes into the tail block at
                     # offset tail_len — fork it first if anyone else
@@ -318,33 +499,63 @@ class PagedEngine:
         st.ensure_blocks(slot, ln, bs)
         table = st.alloc.tables[slot]
         st.block_tables[slot, :len(table)] = table
-        sn = ln - p_len                          # uncached suffix
-        cl = self._padded_len(sn)                # pad to the block boundary
+        st.prefilling[slot] = PrefillProgress(prompt=prompt, done=p_len,
+                                              resume_tok=resume)
+
+    def _run_chunk(self, st: PagedDecodeState, slot: int, outs: dict,
+                   res: PagedBatchResult) -> bool:
+        """Prefill the slot's next chunk (whole remaining suffix when
+        unchunked).  Returns True when the prompt completes — kv_len is set,
+        the prompt chain published, and the first output token emitted
+        (or the preempted resume token restored)."""
+        pg: PrefillProgress = st.prefilling[slot]
+        r = st.active[slot]
+        prompt, ln = pg.prompt, len(pg.prompt)
+        bs = self.pcfg.block_size
+        table = st.alloc.tables[slot]
+        remaining = ln - pg.done
+        sn = remaining if not self._chunk else min(remaining, self._chunk)
+        cl = self._padded_len(sn)
         toks = np.zeros((1, cl), np.int32)
-        toks[0, :sn] = prompt[p_len:]
-        if p_len:
-            pref = self._gather_prefix(st.pools, table[:n_shared], p_len)
+        toks[0, :sn] = prompt[pg.done:pg.done + sn]
+        if pg.done:
+            n_blk = -(-pg.done // bs)
+            pref = self._gather_prefix(st.pools, table[:n_blk], pg.done)
             logits, cache = self._prefill_suffix(
                 self.params, jnp.asarray(toks),
                 jnp.asarray([sn], jnp.int32), cl, pref)
         else:
             logits, cache = self._prefill(self.params, jnp.asarray(toks),
                                           jnp.asarray([sn], jnp.int32), cl)
-        pos = p_len + np.arange(cl)
+        pos = pg.done + np.arange(cl)
         blk = np.asarray([table[p // bs] if p < ln
                           else st.null_block for p in pos], np.int32)
         off = (pos % bs).astype(np.int32)
         st.pools = self._scatter(st.pools, cache, jnp.asarray(blk),
                                  jnp.asarray(off))
-        st.kv_len[slot] = ln
+        pg.done += sn
         res.prefill_tokens += cl
+        res.prefill_chunks += 1
+        if pg.done < ln:
+            return False
+        del st.prefilling[slot]
+        st.kv_len[slot] = ln
         if st.prefix is not None:
             # publish the prompt's full blocks so same-prefix requests
             # admitted while this one decodes already hit them
             st.prefix.insert(prompt, table, (ln // bs) * bs)
-        first = int(np.asarray(greedy(logits, self.cfg.vocab_size))[0])
-        st.cur_tok[slot] = first
-        outs[r.rid] = [first]
+        if pg.resume_tok is not None:
+            st.cur_tok[slot] = pg.resume_tok
+        else:
+            first = int(np.asarray(greedy(logits, self.cfg.vocab_size))[0])
+            st.cur_tok[slot] = first
+            outs[r.rid] = [first]
+        # reset the slot's inter-token stamp: None marks a fresh sequence,
+        # so neither a previous occupant's stale stamp nor the wave-start
+        # first-token gap (TTFT, with its one-time sync costs) pollutes the
+        # decode-gap series — gaps count between consecutive decode steps
+        self._last_emit[slot] = None
+        return True
 
     # ------------------------------------------------------------------ serve
     def run_continuous(self, requests: list, *,
@@ -356,16 +567,19 @@ class PagedEngine:
         res = PagedBatchResult()
         budget = max_new or self.pcfg.max_new_tokens
         for r in requests:
-            horizon = len(r.tokens) + min(r.true_output_len, budget)
+            # capacity guards use the decode *budget*, not the ground-truth
+            # output length: a request must be able to run alone to its
+            # budgeted horizon whatever its true length turns out to be
+            horizon = len(r.tokens) + budget
             if horizon > self.pcfg.max_seq_len:
                 raise ValueError(
-                    f"request {r.rid}: prompt {len(r.tokens)} + output "
+                    f"request {r.rid}: prompt {len(r.tokens)} + decode "
                     f"budget exceeds max_seq_len {self.pcfg.max_seq_len}")
-            wb = self._worst_blocks(r, budget)
-            if wb > self.pcfg.n_blocks - 1:        # -1: reserved null block
+            wb = -(-horizon // self.pcfg.block_size)
+            if wb > self.pcfg.usable_blocks:
                 raise ValueError(
                     f"request {r.rid}: needs {wb} blocks, pool has "
-                    f"{self.pcfg.n_blocks - 1} usable")
+                    f"{self.pcfg.usable_blocks} usable")
         st = PagedDecodeState.create(self.cfg, self.pcfg, self.dtype)
         queue = list(requests)
         outs: dict[int, list[int]] = {}
@@ -373,6 +587,8 @@ class PagedEngine:
         util_n = 0
         peak_live = -1
         peak_pool_stats: Optional[dict] = None
+        self._last_emit = {}                  # slot -> last emission stamp
+        rr = 0                                # chunk round-robin cursor
         # _admit accrues res.prefill_s itself (mid-run waves included);
         # decode_s is the remainder of the serving wall clock
         t_total = time.perf_counter()
@@ -389,20 +605,76 @@ class PagedEngine:
             while progress:
                 progress = False
                 for slot, r in enumerate(st.active):
-                    if r is not None and len(outs[r.rid]) >= min(
-                            r.true_output_len, budget):
+                    if r is not None and slot not in st.prefilling \
+                            and len(outs[r.rid]) >= min(
+                                r.true_output_len, budget):
                         self._finish(st, slot, r, outs)
                         progress = True
                 if progress and queue:
                     self._admit(st, queue, outs, res, budget)
+            # iteration-level admission: with chunking or preemption the
+            # queue is reconsidered every iteration, not only on finishes —
+            # chunked admissions just open a cursor (cheap), and preemption
+            # must see tight arrivals while slack residents still decode
+            if queue and (self._chunk or self.pcfg.preempt) \
+                    and any(a is None for a in st.active):
+                self._admit(st, queue, outs, res, budget)
             if not any(a is not None for a in st.active):
                 break
-            # b) grow block lists to cover the token about to be written
-            for slot, r in enumerate(st.active):
-                if r is not None:
-                    st.ensure_blocks(slot, int(st.kv_len[slot]) + 1,
-                                     self.pcfg.block_size)
-            # c) KV gauges at the allocation high-water mark (post-growth)
+            # b) one prefill chunk (chunked mode; unchunked prompts complete
+            #    inside _admit).  Multiple mid-prefill slots take turns, so
+            #    per-iteration prefill work stays <= one chunk
+            if st.prefilling:
+                pre_slots = sorted(st.prefilling)
+                slot = pre_slots[rr % len(pre_slots)]
+                rr += 1
+                had_decoders = bool(st.decoding_slots())
+                t0 = time.perf_counter()
+                self._run_chunk(st, slot, outs, res)
+                dt = time.perf_counter() - t0
+                res.prefill_s += dt
+                if had_decoders:
+                    res.prefill_stall_s += dt
+            decoding = st.decoding_slots()
+            # just-admitted (or just-completed-prefill) sequences may already
+            # be at their stop count — let the fixpoint retire them before
+            # they join a decode step
+            decoding = [s for s in decoding
+                        if len(outs[st.active[s].rid]) < min(
+                            st.active[s].true_output_len, budget)]
+            if not decoding:
+                continue
+            # c) grow block lists to cover the token about to be written;
+            #    exhaustion under misprediction preempts the slack-most
+            #    resident (possibly the grower itself) instead of dying
+            for slot in list(decoding):
+                if st.active[slot] is None:
+                    continue
+                while True:
+                    try:
+                        st.ensure_blocks(slot, int(st.kv_len[slot]) + 1,
+                                         self.pcfg.block_size)
+                        break
+                    except MemoryError:
+                        if not self.pcfg.preempt:
+                            raise MemoryError(
+                                "KV pool exhausted mid-decode (output "
+                                "longer than predicted); enable preempt "
+                                "to evict-and-recompute instead") from None
+                        now = time.perf_counter() - self._serve_t0
+                        victim = self._pick_victim(
+                            st, outs, min_slack=float("-inf"), now=now)
+                        if victim is None or (
+                                victim == slot and
+                                sum(a is not None for a in st.active) == 1):
+                            raise
+                        self._preempt(st, victim, outs, res, queue)
+                        if victim == slot:
+                            break
+            decoding = [s for s in decoding if st.active[s] is not None]
+            if not decoding:
+                continue
+            # d) KV gauges at the allocation high-water mark (post-growth)
             live = st.live_blocks
             res.peak_blocks = max(res.peak_blocks, live)
             if live >= peak_live:
@@ -417,18 +689,31 @@ class PagedEngine:
                 waste_sum += 1.0 - alloc_slots / (n_active *
                                                   self.pcfg.max_seq_len)
                 util_n += 1
-            # d) one fixed-shape decode step over all slots
+            # e) one fixed-shape decode step over all slots; mid-prefill
+            #    slots are masked to the null block (like free slots) so
+            #    their half-written KV is neither read nor clobbered
+            bt, kv, ct = st.block_tables, st.kv_len, st.cur_tok
+            if st.prefilling:
+                bt, kv, ct = bt.copy(), kv.copy(), ct.copy()
+                for s in st.prefilling:
+                    bt[s, :] = st.null_block
+                    kv[s] = 0
+                    ct[s] = 0
             logits, st.pools = self._decode(
-                self.params, jnp.asarray(st.cur_tok)[:, None], st.pools,
-                jnp.asarray(st.block_tables), jnp.asarray(st.kv_len))
+                self.params, jnp.asarray(ct)[:, None], st.pools,
+                jnp.asarray(bt), jnp.asarray(kv))
             nxt = np.asarray(greedy(logits, self.cfg.vocab_size))
             steps += 1
-            for slot, r in enumerate(st.active):
-                if r is None:
-                    continue
+            now = time.perf_counter()
+            for slot in decoding:
+                r = st.active[slot]
                 outs[r.rid].append(int(nxt[slot]))
                 st.cur_tok[slot] = int(nxt[slot])
                 st.kv_len[slot] += 1
+                prev = self._last_emit.get(slot)
+                if prev is not None:
+                    res.inter_token_s.append(now - prev)
+                self._last_emit[slot] = now
         jax.block_until_ready(st.pools)
         res.decode_s = time.perf_counter() - t_total - res.prefill_s
         res.steps = steps
@@ -455,6 +740,10 @@ class PagedEngine:
             if st.prefix is not None:
                 self.monitor.observe_prefix(st.prefix.stats,
                                             cow_forks=res.cow_forks)
+            self.monitor.observe_interleave(
+                stall_s=res.prefill_stall_s, chunks=res.prefill_chunks,
+                preemptions=res.preemptions,
+                preempted_tokens=res.preempted_tokens)
         return res
 
     def _finish(self, st: PagedDecodeState, slot: int, r: Request,

@@ -329,6 +329,227 @@ def simulate(
         prefix_hit_requests=hit_requests)
 
 
+# ------------------------------------- iteration-level (continuous) serving
+
+@dataclass
+class ContinuousSimResult:
+    """Outcome of an iteration-level continuous-batching simulation — the
+    model of ``PagedEngine.run_continuous``'s interleaved loop, where the
+    decode-stall/chunking/preemption trade-offs live (a padded-batch run is
+    ``simulate``'s job)."""
+    requests: list[Request]
+    makespan: float
+    steps: int = 0
+    prefill_chunks: int = 0
+    inter_token_s: list = field(default_factory=list)
+    prefill_stall_s: float = 0.0   # prefill time co-resident decoders sat out
+    preemptions: int = 0
+    preempted_tokens: int = 0      # generated tokens recomputed after evict
+
+    @property
+    def p99_inter_token_s(self) -> float:
+        if not self.inter_token_s:
+            return float("nan")
+        return float(np.percentile(self.inter_token_s, 99))
+
+    @property
+    def max_inter_token_s(self) -> float:
+        return max(self.inter_token_s) if self.inter_token_s else float("nan")
+
+    @property
+    def avg_latency(self) -> float:
+        ls = [r.latency for r in self.requests if r.latency is not None]
+        return float(np.mean(ls)) if ls else float("nan")
+
+    @property
+    def slo_violation_rate(self) -> float:
+        met = [r.slo_met for r in self.requests if r.slo_met is not None]
+        return 1.0 - float(np.mean(met)) if met else float("nan")
+
+    @property
+    def throughput(self) -> float:
+        toks = sum(r.true_output_len for r in self.requests
+                   if r.finish_time is not None)
+        return toks / self.makespan if self.makespan else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "avg_latency_s": round(self.avg_latency, 3),
+            "slo_violation": round(self.slo_violation_rate, 4),
+            "throughput_tok_s": round(self.throughput, 2),
+            "p99_itl_s": round(self.p99_inter_token_s, 5),
+            "max_itl_s": round(self.max_inter_token_s, 5),
+            "prefill_stall_s": round(self.prefill_stall_s, 4),
+            "prefill_chunks": self.prefill_chunks,
+            "preemptions": self.preemptions,
+            "preempted_tokens": self.preempted_tokens,
+        }
+
+
+def simulate_continuous(
+    requests: list[Request],
+    model_cfg: ModelConfig,
+    *,
+    profiler: Optional[ResourceProfiler] = None,
+    monitor: Optional[Monitor] = None,
+    deploy: Callable = helr,
+    nodes=None, latency=None,
+    model_mem: Optional[float] = None,
+    max_batch: int = 8,
+    max_new: int = 512,
+    chunk_tokens: int = 0,
+    preempt: bool = False,
+    block_size: int = 16,
+    n_blocks: int = 4096,
+) -> ContinuousSimResult:
+    """Iteration-level continuous-batching simulation on one replica — the
+    analytic twin of ``PagedEngine.run_continuous``.
+
+    Each iteration runs (a) at most one prefill chunk of ``chunk_tokens``
+    tokens from the admission frontier (``0`` = the *whole* prompt in one
+    iteration — the monolithic-prefill baseline whose decode stall this PR
+    measures) and (b) one decode token for every resident past prefill, so
+    an iteration costs ``prefill_time(chunk) + token_time(batch)`` and every
+    decoding resident's inter-token gap is exactly that iteration time —
+    the stall distribution the paged engine's ``inter_token_s`` measures.
+
+    Admission reserves worst-case blocks from the *predicted* output length
+    clamped to ``max_new`` (the same oracle-free charge as
+    ``PagedEngine.can_admit``).  With ``preempt``, a blocked arrival with
+    less SLO slack than the slack-most decoding resident evicts it:
+    its blocks free, its prompt + generated tokens requeue as recompute
+    prefill (work is re-spent; tokens already emitted stay emitted)."""
+    if nodes is None:
+        nodes, latency = paper_cluster()
+    model_mem = model_mem or model_cfg.param_count() * 2.0
+    dmap = deploy(model_mem, model_cfg.n_layers, nodes, latency)
+    if not dmap.path:
+        raise RuntimeError("deployment infeasible")
+    lm = LatencyModel(model_cfg, nodes, latency, dmap)
+
+    reqs = sorted(requests, key=lambda r: r.arrival)
+    if profiler is not None:
+        profiler.profile(reqs)
+    usable = n_blocks - 1                      # engine parity: null block
+
+    def worst_blocks(r: Request, gen: int) -> int:
+        plan = min(max_new, max(min(r.sched_output_len, max_new), gen + 1))
+        return -(-(r.input_len + plan) // block_size)
+
+    for r in reqs:
+        # engine parity: a request must fit the pool alone at its budgeted
+        # horizon, or it would block the admission head forever
+        wb = -(-(r.input_len + max_new) // block_size)
+        if wb > usable:
+            raise ValueError(f"request {r.rid}: needs {wb} blocks, "
+                             f"pool has {usable} usable")
+
+    class _Entry:
+        __slots__ = ("r", "pre_rem", "out_done", "last_emit")
+
+        def __init__(self, r: Request, pre_rem: int, out_done: int):
+            self.r, self.pre_rem, self.out_done = r, pre_rem, out_done
+            self.last_emit: Optional[float] = None
+
+    res = ContinuousSimResult(requests=reqs, makespan=0.0)
+    gen_sofar: dict[int, int] = {}             # rid -> tokens already emitted
+    inflight: list[_Entry] = []
+    pending: list[Request] = []
+    t, i = 0.0, 0
+
+    def reserved() -> int:
+        return sum(worst_blocks(e.r, e.out_done) for e in inflight)
+
+    def admit() -> None:
+        nonlocal pending
+        while pending and len(inflight) < max_batch:
+            cand = pending[0]
+            gen = gen_sofar.get(cand.rid, 0)
+            need = worst_blocks(cand, gen)
+            if reserved() + need > usable:
+                if not preempt:
+                    break
+                slack_c = cand.arrival + cand.slo - t
+                decoding = [e for e in inflight if e.pre_rem == 0]
+                victim = max(decoding,
+                             key=lambda e: e.r.arrival + e.r.slo - t,
+                             default=None)
+                if victim is None or \
+                        victim.r.arrival + victim.r.slo - t <= slack_c:
+                    break
+                inflight.remove(victim)
+                gen_sofar[victim.r.rid] = victim.out_done
+                res.preemptions += 1
+                res.preempted_tokens += victim.out_done
+                pending.insert(1, victim.r)
+                continue
+            pending.pop(0)
+            if cand.start_time is None:
+                cand.start_time = t
+            # recompute prefix: prompt + all-but-last generated token
+            inflight.append(_Entry(cand, cand.input_len + max(0, gen - 1),
+                                   gen))
+
+    while i < len(reqs) or pending or inflight:
+        while i < len(reqs) and reqs[i].arrival <= t:
+            pending.append(reqs[i])
+            i += 1
+        admit()
+        if not inflight:
+            if i < len(reqs):
+                t = max(t, reqs[i].arrival)
+                continue
+            break
+        t_pre = 0.0
+        prefilling = [e for e in inflight if e.pre_rem > 0]
+        completed: Optional[_Entry] = None
+        if prefilling:
+            e = prefilling[0]
+            c = e.pre_rem if chunk_tokens <= 0 else min(chunk_tokens,
+                                                        e.pre_rem)
+            t_pre = lm.prefill_time(1, c)
+            e.pre_rem -= c
+            res.prefill_chunks += 1
+            if e.pre_rem == 0:
+                completed = e
+        decoding = [e for e in inflight
+                    if e.pre_rem == 0 and e is not completed]
+        t_dec = 0.0
+        if decoding:
+            kv = float(np.mean([e.r.input_len + e.out_done
+                                for e in decoding]))
+            t_dec = lm.token_time(len(decoding), kv)
+            res.prefill_stall_s += t_pre
+        t_iter = t_pre + t_dec
+        t += t_iter
+        res.steps += 1
+        if completed is not None and completed.out_done == 0:
+            # first token out of prefill; a recompute completion (out_done
+            # carried over from before eviction) restores the resume token
+            # without emitting, exactly like the engine
+            completed.out_done += 1
+            completed.last_emit = t
+        for e in decoding:
+            e.out_done += 1
+            if e.last_emit is not None:
+                res.inter_token_s.append(t - e.last_emit)
+            e.last_emit = t
+        done = [e for e in inflight
+                if e.out_done >= min(e.r.true_output_len, max_new)]
+        for e in done:
+            inflight.remove(e)
+            e.r.finish_time = t
+            if monitor is not None:
+                monitor.observe(e.r)
+    res.makespan = t
+    if monitor is not None:
+        monitor.observe_interleave(
+            stall_s=res.prefill_stall_s, chunks=res.prefill_chunks,
+            preemptions=res.preemptions,
+            preempted_tokens=res.preempted_tokens)
+    return res
+
+
 # ------------------------------------------------- multi-replica simulation
 
 def replicated_cluster(n: int, *, scale: float = 1.0
@@ -450,6 +671,8 @@ def simulate_cluster(
     block_size: int = 16,
     n_blocks: int = 4096,
     prefix_cache: bool = True,
+    chunk_tokens: int = 0,
+    preempt: bool = False,
 ) -> ClusterSimResult:
     """Discrete-event simulation of a replicated cluster: arrivals are
     routed on landing (``router``: a policy name, RouterConfig, or Router),
@@ -462,6 +685,13 @@ def simulate_cluster(
     Requests never routable (shed) get no ``finish_time`` and are counted
     as SLO violations by ``ClusterSimResult.slo_attainment`` and by the
     monitor (``observe_shed``) — one accounting for sim and engines.
+
+    ``chunk_tokens``/``preempt`` describe engine-side iteration-level
+    scheduling to the *replica load projections*: chunked prefill prices an
+    interleave overhead into ``_chunk_time`` (drain/backlog/finish get
+    slower, honestly), and preemption shrinks the busy-tail barrier in
+    ``projected_finish`` for tight arrivals (so slo_aware does not shed
+    requests the engine would serve by evicting slack residents).
     """
     from repro.serving.cluster import (Autoscaler, Replica, Router,
                                        RouterConfig)
@@ -489,7 +719,8 @@ def simulate_cluster(
         rep = Replica(idx, model_cfg, nodes, lat, deploy=deploy,
                       model_mem=model_mem, max_batch=max_batch,
                       block_size=block_size, n_blocks=n_blocks,
-                      prefix_cache=prefix_cache, spawned_at=now)
+                      prefix_cache=prefix_cache, chunk_tokens=chunk_tokens,
+                      preempt=preempt, spawned_at=now)
         rep.partition = pi
         replicas.append(rep)
         return rep

@@ -81,6 +81,42 @@ class TestReplicaLoad:
     def test_capacity_positive(self):
         assert _replica().capacity_rps(64.0, 64.0) > 0.0
 
+    def test_chunk_interleave_priced_into_drain(self):
+        """Engine-side chunked prefill trades throughput for bounded stalls;
+        the replica's drain/backlog projections must charge the per-chunk
+        overhead (plain replicas are byte-identical to before)."""
+        plain = _replica()
+        chunked = _replica(chunk_tokens=32)
+        for rep in (plain, chunked):
+            for i in range(4):
+                rep.enqueue(_req(i, in_len=256), 0.0)
+        assert chunked.projected_drain() > plain.projected_drain()
+        assert chunked.projected_finish(_req(9, in_len=256), 0.0) > \
+            plain.projected_finish(_req(9, in_len=256), 0.0)
+
+    def test_preempt_shrinks_busy_barrier_for_tight_arrivals(self):
+        """With engine-side preemption, only the tighter-or-equal share of
+        the in-flight batch blocks a tight candidate — a slack candidate
+        still pays the whole tail, and a no-preempt replica is unchanged."""
+        base = _replica()
+        pre = _replica(preempt=True)
+        for rep in (base, pre):
+            rep.busy_until = 100.0
+            rep.inflight_slos = [50.0, 60.0, 70.0, 80.0]
+        tight = _req(0, slo=55.0)        # tighter than 3 of 4 inflight
+        slack = _req(1, slo=500.0)
+        assert pre.projected_finish(tight, 0.0) < \
+            base.projected_finish(tight, 0.0)
+        assert pre.projected_finish(slack, 0.0) == \
+            base.projected_finish(slack, 0.0)
+        # start/finish bookkeeping feeds the barrier
+        rep = _replica(preempt=True)
+        rep.enqueue(_req(2), 0.0)
+        rep.start_batch(0.0, get_scheduler("slo-odbs"), SchedulerConfig())
+        assert rep.inflight_slos
+        rep.finish_batch()
+        assert not rep.inflight_slos
+
 
 # ------------------------------------------------------------------- router
 

@@ -8,8 +8,8 @@ deterministic cases below still collect and run.
 import numpy as np
 import pytest
 
-from repro.core.scheduler import (SchedulerConfig, fifo, odbs, s3_binpack,
-                                  slo_dbs, slo_odbs)
+from repro.core.scheduler import (SchedulerConfig, derive_chunk_tokens,
+                                  fifo, odbs, s3_binpack, slo_dbs, slo_odbs)
 from repro.core.types import Batch, Request
 
 try:
@@ -101,6 +101,49 @@ def test_memory_budget_respected():
     batches = slo_odbs(reqs, cfg)
     for b in batches:
         assert len(b) <= 3   # 3*4e6 > 10e6 would exceed
+
+
+def _shape(batches):
+    return [sorted(r.rid for r in b.requests) for b in batches]
+
+
+def test_slo_dbs_cap_ignores_output_lengths():
+    """SLO-DBS (w1=1, w2=0) projects the composite onto the SLO term; its
+    dynamic cap must respond to deadlines only — output predictions, however
+    extreme, must not change the batching (regression: the CM update used
+    to weigh the *output* term with w1, capping SLO-DBS on lengths)."""
+    short = [mk_req(i, slo=5.0, out_len=1) for i in range(10)]
+    long = [mk_req(i, slo=5.0, out_len=10 ** 6) for i in range(10)]
+    cfg = SchedulerConfig(threshold=2.5e4, max_batch=16)
+    assert _shape(slo_dbs(short, cfg)) == _shape(slo_dbs(long, cfg))
+    # ... while deadlines do drive it: blowing up the SLOs shrinks batches
+    late = [mk_req(i, slo=1e6, out_len=1) for i in range(10)]
+    assert len(slo_dbs(late, cfg)) > len(slo_dbs(short, cfg))
+
+
+def test_odbs_cap_ignores_slos():
+    """ODBS (w1=0, w2=1) projects onto the output term; its cap must respond
+    to predicted lengths only — SLOs must not change the batching."""
+    lax = [mk_req(i, slo=10.0, out_len=50) for i in range(10)]
+    tight = [mk_req(i, slo=10 ** 6, out_len=50) for i in range(10)]
+    cfg = SchedulerConfig(threshold=2.5e4, max_batch=16)
+    assert _shape(odbs(lax, cfg)) == _shape(odbs(tight, cfg))
+    heavy = [mk_req(i, slo=10.0, out_len=10 ** 6) for i in range(10)]
+    assert len(odbs(heavy, cfg)) > len(odbs(lax, cfg))
+
+
+def test_derive_chunk_tokens_monotone():
+    """The chunked-prefill budget follows the composite threshold: more
+    per-batch latency budget -> larger chunks; heavier weights -> smaller;
+    always a positive multiple of the block size."""
+    lo = derive_chunk_tokens(SchedulerConfig(threshold=1e3), block_size=16)
+    mid = derive_chunk_tokens(SchedulerConfig(), block_size=16)
+    hi = derive_chunk_tokens(SchedulerConfig(threshold=1e6), block_size=16)
+    assert lo <= mid <= hi
+    assert lo >= 16 and all(v % 16 == 0 for v in (lo, mid, hi))
+    heavy = derive_chunk_tokens(SchedulerConfig(w1=4.0, w2=4.0),
+                                block_size=16)
+    assert heavy <= mid
 
 
 def test_batch_metrics():
