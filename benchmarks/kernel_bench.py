@@ -10,6 +10,8 @@ import numpy as np
 from benchmarks.common import csv_row, emit, persist, timeit
 from repro.kernels.decode_attention.xla import decode_attention_xla
 from repro.kernels.flash_attention.xla import flash_attention_xla
+from repro.kernels.paged_attention.xla import (paged_decode_attention_xla,
+                                               paged_window_attention_xla)
 from repro.kernels.wkv6.xla import wkv6_xla
 
 
@@ -37,6 +39,40 @@ def run() -> dict:
     bytes_touched = kd.size * 4 * 2
     rows["decode_4k"] = {"us": us, "gbps_cpu": bytes_touched / us / 1e3}
     csv_row("kernel_decode_4k", us, f"cpu_gbps={bytes_touched/us/1e3:.1f}")
+
+    # paged decode: same shape class as decode_4k but block-table addressed
+    # (8 seqs x 4096 tokens in 16-slot blocks + a null block) — regressions
+    # in the paged path were invisible while only the contiguous kernel was
+    # benched.  The multi-token window (T=5: one input + 4 drafts) amortizes
+    # the pool sweep over T query positions — us_per_tok is the speculative
+    # verify's per-position cost vs the single-token baseline.
+    bsz, nb_ = 16, 256
+    n_pool = 8 * nb_ + 1
+    kpp = jnp.asarray(rng.standard_normal((n_pool, bsz, kv, d)), jnp.float32)
+    vpp = jnp.asarray(rng.standard_normal((n_pool, bsz, kv, d)), jnp.float32)
+    btp = jnp.asarray(
+        1 + rng.permutation(n_pool - 1)[:8 * nb_].reshape(8, nb_), jnp.int32)
+    klp = jnp.full((8,), nb_ * bsz, jnp.int32)
+    pd = jax.jit(lambda q, k, v, bt, l: paged_decode_attention_xla(
+        q, k, v, bt, l))
+    us = timeit(lambda: jax.block_until_ready(pd(qd, kpp, vpp, btp, klp)),
+                n=10)
+    rows["paged_decode_4k"] = {"us": us,
+                               "gbps_cpu": bytes_touched / us / 1e3}
+    csv_row("kernel_paged_decode_4k", us,
+            f"cpu_gbps={bytes_touched/us/1e3:.1f}")
+
+    t_w = 5
+    qw = jnp.asarray(rng.standard_normal((8, t_w, h, d)), jnp.float32)
+    pw = jax.jit(lambda q, k, v, bt, l: paged_window_attention_xla(
+        q, k, v, bt, l))
+    usw = timeit(lambda: jax.block_until_ready(
+        pw(qw, kpp, vpp, btp, klp - t_w)), n=10)
+    rows["paged_window_4k_t5"] = {"us": usw, "us_per_tok": usw / t_w,
+                                  "amortization_vs_decode": us * t_w / usw}
+    csv_row("kernel_paged_window_4k_t5", usw,
+            f"us_per_tok={usw/t_w:.1f},"
+            f"amortization={us*t_w/usw:.2f}x")
 
     r = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32) * 0.5
     kk = jnp.asarray(rng.standard_normal((1, 256, 4, 64)), jnp.float32) * 0.5

@@ -19,7 +19,7 @@ def _harnesses() -> dict:
                             fig1_config_sweep, fig4_batching, fig4_deploy,
                             fig5_e2e, interleave_bench, kernel_bench,
                             paged_bench, prefix_bench, profiler_accuracy,
-                            roofline, table1_device_map)
+                            roofline, spec_bench, table1_device_map)
     return {
         "table1": table1_device_map.run,
         "fig1": fig1_config_sweep.run,
@@ -32,6 +32,7 @@ def _harnesses() -> dict:
         "paged": paged_bench.run,
         "prefix": prefix_bench.run,
         "interleave": interleave_bench.run,
+        "spec": spec_bench.run,
         "cluster": cluster_bench.run,
         "roofline": lambda: (roofline.run("16x16", "baseline"),
                              roofline.run("2x16x16", "baseline")),

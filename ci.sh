@@ -12,7 +12,8 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 KERNEL_TESTS=(tests/test_kernels_flash.py tests/test_kernels_decode.py
               tests/test_kernels_wkv6.py tests/test_paged_attention.py)
-SERVING_TESTS=(tests/test_paged_engine.py tests/test_prefix_cache.py)
+SERVING_TESTS=(tests/test_paged_engine.py tests/test_prefix_cache.py
+               tests/test_speculative.py)
 CLUSTER_TESTS=(tests/test_cluster.py tests/test_workload.py)
 
 interleave_smoke() {
@@ -50,6 +51,40 @@ print(f"interleave smoke: chunks={res.prefill_chunks} "
 PY
 }
 
+spec_smoke() {
+    echo "== speculative smoke (n-gram drafter, token-identity) =="
+    python - <<'PY'
+import copy, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.core.types import Batch, Request
+from repro.models import api
+from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
+                           PagedEngineConfig)
+
+cfg = get_config("smollm-135m").reduced()
+params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+# cycled prompts: the n-gram drafter must land at least some accepts, and
+# greedy acceptance must keep outputs exactly equal to sequential decode
+reqs = [Request(rid=i, tokens=([7 + i, 11, 13 + i, 17] * 6)[:20],
+                input_len=20, slo=60.0, arrival=0.0, true_output_len=10)
+        for i in range(4)]
+ref = InferenceEngine(cfg, params,
+                      EngineConfig(max_batch=4, cache_len=48,
+                                   max_new_tokens=12)).run_batch(
+    Batch(requests=[copy.copy(r) for r in reqs]),
+    true_lens={r.rid: r.true_output_len for r in reqs})
+eng = PagedEngine(cfg, params, PagedEngineConfig(
+    max_batch=2, block_size=8, n_blocks=24, max_seq_len=48,
+    max_new_tokens=12, spec_tokens=4))
+res = eng.run_continuous([copy.copy(r) for r in reqs])
+assert all(res.outputs[r.rid] == ref.outputs[r.rid] for r in reqs), \
+    "speculation changed outputs"
+assert res.drafted_tokens > 0, "drafter never proposed"
+print(f"spec smoke: {res.steps} iterations for {res.generated_tokens} "
+      f"tokens, acceptance={res.acceptance_rate:.2f} (token-identical)")
+PY
+}
+
 cluster_smoke() {
     echo "== cluster smoke (2 simulated replicas, slo_aware router) =="
     python - <<'PY'
@@ -79,6 +114,7 @@ fi
 if [[ "${1:-}" == "serving" ]]; then
     python -m pytest -q "${SERVING_TESTS[@]}"
     interleave_smoke
+    spec_smoke
     exit 0
 fi
 
@@ -97,6 +133,7 @@ echo "== kernel parity (pallas interpret + xla vs oracle) =="
 python -m pytest -q "${KERNEL_TESTS[@]}"
 
 interleave_smoke
+spec_smoke
 cluster_smoke
 
 echo "ci.sh: all green"

@@ -6,7 +6,7 @@ from repro.core.profiler import (LengthPredictor, PredictorConfig,  # noqa: F401
 from repro.core.scheduler import (SchedulerConfig, SCHEDULERS,  # noqa: F401
                                   derive_chunk_tokens, fifo, get_scheduler,
                                   odbs, prefix_affinity_key, s3_binpack,
-                                  slo_dbs, slo_odbs)
+                                  slo_dbs, slo_odbs, spec_speedup)
 from repro.core.deployer import (DEPLOYERS, HELRConfig, MeshPlan, bgs,  # noqa: F401
                                  candidate_plans, he, helr, helr_mesh, lr)
 from repro.core.monitor import Monitor, MonitorStats  # noqa: F401

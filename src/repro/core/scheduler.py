@@ -39,6 +39,25 @@ class SchedulerConfig:
     # serves their hits while the blocks are hot
     prefix_aware: bool = False
     prefix_block: int = 16         # tokens of leading prompt that define a group
+    # speculative decoding (beyond-paper; serving.speculative): expected
+    # tokens emitted per engine iteration (= spec_speedup(K, acceptance)).
+    # The composite's output term counts decode *iterations*, so speculation
+    # widens the effective per-batch decode budget by this factor
+    spec_speedup: float = 1.0
+
+
+def spec_speedup(spec_tokens: int, acceptance: float) -> float:
+    """Expected tokens emitted per verify iteration under greedy speculative
+    decoding with window K and i.i.d. per-draft acceptance probability a:
+    ``E = 1 + a + a^2 + ... + a^K = (1 - a^(K+1)) / (1 - a)`` (the run of
+    accepted drafts plus the always-emitted bonus token)."""
+    k = max(0, int(spec_tokens))
+    a = min(max(float(acceptance), 0.0), 1.0)
+    if k == 0:
+        return 1.0
+    if a >= 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
 
 
 def prefix_affinity_key(requests: list, block: int = 16
@@ -102,9 +121,12 @@ def slo_odbs(requests: Iterable[Request], cfg: SchedulerConfig,
     batches: list[Batch] = []
     cur = Batch()
     l_cm = o_cm = cm = 0.0
+    # speculation compresses output length into fewer engine iterations, so
+    # the output term is charged in expected *iterations*, not tokens
+    sp = max(cfg.spec_speedup, 1.0)
     for q in reqs:
         t_l = (q.slo + l_cm) * (len(cur) + 1) * cfg.l1
-        t_o = (q.sched_output_len + o_cm) * (len(cur) + 1) * cfg.l2
+        t_o = (q.sched_output_len + o_cm) / sp * (len(cur) + 1) * cfg.l2
         total = cfg.w1 * t_l + cfg.w2 * t_o
         kv_after = sum(r.kv_bytes_estimate for r in cur.requests) + q.kv_bytes_estimate
         cap = _dynamic_cap(cm, cfg)
@@ -117,12 +139,12 @@ def slo_odbs(requests: Iterable[Request], cfg: SchedulerConfig,
             # w2 the output term (a historical swap here capped SLO-DBS on
             # output length and ODBS on deadlines — each projection's cap
             # must respond to its own term only)
-            cm = max(cm, cfg.w1 * q.slo + cfg.w2 * q.sched_output_len)
+            cm = max(cm, cfg.w1 * q.slo + cfg.w2 * q.sched_output_len / sp)
         else:
             batches.append(cur)
             cur = Batch(requests=[q])
             l_cm, o_cm = q.slo, q.sched_output_len
-            cm = cfg.w1 * q.slo + cfg.w2 * q.sched_output_len
+            cm = cfg.w1 * q.slo + cfg.w2 * q.sched_output_len / sp
     if len(cur):
         batches.append(cur)
     return batches

@@ -31,3 +31,24 @@ def paged_decode_attention_reference(
     v = gather_pool(v_pool, block_tables)
     return decode_attention_reference(q, k, v, kv_len, softcap=softcap,
                                       scale=scale)
+
+
+def paged_window_attention_reference(
+    q: jnp.ndarray,              # [B, T, H, D] — draft window
+    k_pool: jnp.ndarray,         # [N, bs, KV, D]
+    v_pool: jnp.ndarray,         # [N, bs, KV, Dv]
+    block_tables: jnp.ndarray,   # [B, nb] int32
+    kv_len: jnp.ndarray,         # [B] int32 — history length BEFORE the window
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Oracle for the multi-token verify window: one single-token decode per
+    window position (position t's K/V already scattered at ``kv_len + t``, so
+    its per-position valid length is ``kv_len + t + 1``)."""
+    outs = [decode_attention_reference(
+        q[:, t], gather_pool(k_pool, block_tables),
+        gather_pool(v_pool, block_tables),
+        jnp.asarray(kv_len, jnp.int32) + t + 1, softcap=softcap, scale=scale)
+        for t in range(q.shape[1])]
+    return jnp.stack(outs, axis=1)

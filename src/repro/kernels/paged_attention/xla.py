@@ -15,6 +15,35 @@ from repro.kernels.decode_attention.xla import decode_attention_partial
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "scale"))
+def paged_window_attention_xla(
+    q: jnp.ndarray,              # [B, T, H, D] — draft window
+    k_pool: jnp.ndarray,         # [N, bs, KV, D]
+    v_pool: jnp.ndarray,         # [N, bs, KV, Dv]
+    block_tables: jnp.ndarray,   # [B, nb] int32
+    kv_len: jnp.ndarray,         # [B] int32 — history length BEFORE the window
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Multi-token verify window in plain XLA: one gather materializes the
+    contiguous view, then each window position runs the *same* masked
+    partial-softmax math as the single-token step (unrolled over the static
+    T) — identical per-position shapes keep verify logits bitwise equal to
+    sequential decode on CPU, which greedy token-identity rides on."""
+    b, t, h, d = q.shape
+    _, bs, kv, dv = v_pool.shape
+    nb = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(b, nb * bs, kv, -1)
+    v = v_pool[block_tables].reshape(b, nb * bs, kv, dv)
+    outs = []
+    for ti in range(t):
+        acc, m, l = decode_attention_partial(
+            q[:, ti], k, v, kv_len + ti + 1, softcap=softcap, scale=scale)
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    return jnp.stack(outs, axis=1).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "scale"))
 def paged_decode_attention_xla(
     q: jnp.ndarray,              # [B, H, D]
     k_pool: jnp.ndarray,         # [N, bs, KV, D]

@@ -15,7 +15,10 @@ lets admission skip a too-big queue head when a later request fits.
 ``-1`` derives N from the scheduler's composite threshold) and ``--preempt``
 lets block pressure evict the slack-most resident for recompute instead of
 blocking a tight arrival — both also feed the cluster paths (replica load
-projections price them).
+projections price them).  ``--speculate`` turns on speculative decoding:
+``--drafter`` proposes ``--spec-tokens`` candidates per iteration, verified
+in one multi-token kernel pass with greedy acceptance (outputs stay
+token-identical; the cluster projections price the acceptance prior).
 
 ``--replicas N`` lifts serving to the cluster layer (serving/cluster):
 requests are routed by ``--router`` across N replicas.  With ``--paged``
@@ -47,7 +50,20 @@ from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
 from repro.models import api
 from repro.serving import (AutoscalerConfig, EngineConfig, InferenceEngine,
                            PagedEngine, PagedEngineConfig, Replica, Router,
-                           RouterConfig, paper_cluster, simulate_cluster)
+                           RouterConfig, get_drafter, paper_cluster,
+                           simulate_cluster)
+
+# planning prior for live/simulated speculation pricing before any
+# acceptance has been measured (repetitive MLaaS traffic with the n-gram
+# drafter lands 0.4-0.8; spec_bench records the measured point)
+SPEC_ACCEPT_PRIOR = 0.5
+
+
+def _make_drafter(args, cfg):
+    """Engine drafter from the CLI flags (None lets the engine default)."""
+    if args.spec_tokens > 0 and args.drafter == "model":
+        return get_drafter("model", draft_cfg=cfg)
+    return None
 
 
 def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
@@ -63,12 +79,16 @@ def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
             cfg, args.kv_budget, max_batch=4, block_size=8,
             max_seq_len=max_seq, max_new_tokens=args.max_new,
             prefix_cache=args.prefix_cache, admit_lookahead=args.lookahead,
-            chunk_tokens=args.chunk_tokens, preempt=args.preempt)
+            chunk_tokens=args.chunk_tokens, preempt=args.preempt,
+            spec_tokens=args.spec_tokens, drafter=args.drafter)
         replicas.append(Replica(
             i, cfg, nodes, lat, max_batch=4, block_size=8,
             n_blocks=pcfg.usable_blocks, prefix_cache=args.prefix_cache,
             chunk_tokens=args.chunk_tokens, preempt=args.preempt,
-            engine=PagedEngine(cfg, params, pcfg, monitor=mon)))
+            spec_tokens=args.spec_tokens,
+            spec_acceptance=SPEC_ACCEPT_PRIOR if args.spec_tokens else 0.0,
+            engine=PagedEngine(cfg, params, pcfg, monitor=mon,
+                               drafter=_make_drafter(args, cfg))))
     for r in sorted(reqs, key=lambda q: q.arrival):
         rep = router.dispatch(r, replicas, r.arrival)
         if rep is None:
@@ -82,10 +102,13 @@ def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
         res = rep.engine.run_continuous(
             sorted(rep.queue, key=lambda q: q.arrival))
         done.update(res.outputs)
+        spec = "" if not args.spec_tokens else (
+            f", spec acc={res.acceptance_rate:.2f} "
+            f"it/tok={res.iterations_per_token:.2f}")
         print(f"replica {rep.rid}: {len(rep.queue)} requests, "
               f"prefill_tokens={res.prefill_tokens}, "
               f"prefix_hits={res.prefix_hits}/{res.prefix_lookups}, "
-              f"peak_blocks={res.peak_blocks}")
+              f"peak_blocks={res.peak_blocks}{spec}")
     print(f"router: {router.stats.summary()}")
     return done
 
@@ -114,7 +137,9 @@ def _serve_cluster_sim(args, prof, mon) -> None:
         reqs, full_cfg, get_scheduler(args.scheduler), SchedulerConfig(),
         n_replicas=args.replicas, router=args.router, autoscale=auto,
         prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens,
-        preempt=args.preempt, profiler=prof, monitor=mon)
+        preempt=args.preempt, spec_tokens=args.spec_tokens,
+        spec_acceptance=SPEC_ACCEPT_PRIOR if args.spec_tokens else 0.0,
+        profiler=prof, monitor=mon)
     print("cluster:", res.summary())
     for s in res.replica_stats:
         print(f"  replica {s['rid']}: served={s['served']} "
@@ -148,6 +173,19 @@ def main():
                     help="under block pressure evict the resident with the "
                          "most SLO slack and requeue it for recompute "
                          "instead of blocking a tighter arrival")
+    ap.add_argument("--speculate", action="store_true",
+                    help="speculative decoding on the paged engine: a "
+                         "drafter proposes tokens verified in one "
+                         "multi-token kernel pass; greedy acceptance keeps "
+                         "outputs token-identical (implies --paged)")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="draft tokens verified per engine iteration")
+    ap.add_argument("--drafter", default="ngram",
+                    choices=["ngram", "model"],
+                    help="draft proposer: deterministic n-gram prompt "
+                         "lookup (free), or a small draft LM (here: "
+                         "randomly initialized stand-in for a distilled "
+                         "checkpoint — plumbing demo, low acceptance)")
     ap.add_argument("--workload", default="alpaca",
                     choices=["alpaca", "shared-prefix", "bursty", "diurnal"],
                     help="alpaca: lognormal Poisson mix; shared-prefix: "
@@ -169,8 +207,10 @@ def main():
     if args.autoscale and args.paged:
         raise SystemExit("--autoscale needs the simulated cluster path: "
                          "drop --paged (elasticity has no live-engine mode)")
-    if args.prefix_cache and not (args.replicas > 1 or args.autoscale):
-        args.paged = True          # cluster sim path honors the flag itself
+    if (args.prefix_cache or args.speculate) \
+            and not (args.replicas > 1 or args.autoscale):
+        args.paged = True          # cluster sim path honors the flags itself
+    args.spec_tokens = args.spec_tokens if args.speculate else 0
 
     if args.chunk_tokens < 0:
         args.chunk_tokens = derive_chunk_tokens(SchedulerConfig(),
@@ -239,13 +279,16 @@ def main():
             max_seq_len=max_seq, max_new_tokens=args.max_new,
             prefix_cache=args.prefix_cache,
             admit_lookahead=args.lookahead,
-            chunk_tokens=args.chunk_tokens, preempt=args.preempt)
+            chunk_tokens=args.chunk_tokens, preempt=args.preempt,
+            spec_tokens=args.spec_tokens, drafter=args.drafter)
         print(f"paged pool: {pcfg.usable_blocks} usable blocks (+null) x "
               f"{pcfg.block_size} slots ({args.kv_budget:.0f} B budget, "
               f"prefix_cache={'on' if pcfg.prefix_cache else 'off'}, "
               f"chunk_tokens={pcfg.chunk_tokens}, "
-              f"preempt={'on' if pcfg.preempt else 'off'})")
-        paged = PagedEngine(cfg, params, pcfg, monitor=mon)
+              f"preempt={'on' if pcfg.preempt else 'off'}, "
+              f"speculate={pcfg.spec_tokens or 'off'})")
+        paged = PagedEngine(cfg, params, pcfg, monitor=mon,
+                            drafter=_make_drafter(args, cfg))
         res = paged.run_continuous(sorted(reqs, key=lambda r: r.arrival))
         done = res.outputs
         print(f"paged: {res.admission_waves} admission waves, "
@@ -253,6 +296,12 @@ def main():
               f"peak_blocks={res.peak_blocks}, "
               f"kv_util={res.kv_utilization:.3f}, "
               f"waste_vs_padded={res.waste_vs_padded:.3f}")
+        if pcfg.spec_tokens:
+            print(f"speculate: {pcfg.spec_tokens} drafts/iter "
+                  f"({args.drafter}), acceptance={res.acceptance_rate:.3f}, "
+                  f"{res.steps} iterations for {res.generated_tokens} "
+                  f"tokens ({res.iterations_per_token:.3f} it/tok), "
+                  f"rolled_back={res.spec_rolled_blocks} blocks")
         if pcfg.chunk_tokens or pcfg.preempt:
             print(f"interleave: {res.prefill_chunks} chunks, "
                   f"stall={res.prefill_stall_s*1e3:.1f}ms, "

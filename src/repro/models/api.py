@@ -62,6 +62,19 @@ def paged_decode_step(cfg: ModelConfig, params, tokens, pools, block_tables,
                                   kv_len, plan=plan)
 
 
+def paged_spec_step(cfg: ModelConfig, params, tokens, pools, block_tables,
+                    kv_len, blk, off, *, plan=None):
+    """Speculative-verification step: score T tokens per sequence (the
+    current input token plus T-1 drafts) against paged KV pools in one pass.
+    tokens [B, T]; blk/off [B, T] scatter targets for each position's K/V
+    (null block where the position is invalid); kv_len [B] history length
+    before the window.  Returns (logits [B, T, Vp], new_pools)."""
+    if cfg.is_encdec:
+        raise NotImplementedError("paged decode: enc-dec uses cross caches")
+    return T.lm_paged_spec_step(cfg, params, tokens, pools, block_tables,
+                                kv_len, blk, off, plan=plan)
+
+
 def paged_compatible(cfg: ModelConfig) -> tuple[bool, str]:
     """Whether the architecture's decode cache can live in paged KV blocks:
     every mixer a full-attention GQA layer (no MLA latents, no sliding-window

@@ -23,7 +23,8 @@ from repro.configs.base import LayerSpec, ModelConfig
 from repro.kernels.decode_attention import (
     combine_partials, decode_attention, decode_attention_partial)
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           paged_window_attention)
 from repro.models.common import apply_dense, apply_mrope, apply_rope, dense_init
 from repro.sharding.compat import get_abstract_mesh, shard_map
 from repro.sharding.plan import ShardingPlan, axis_size, constrain, divisible
@@ -382,6 +383,41 @@ def attn_paged_decode(cfg: ModelConfig, spec: LayerSpec, p, x, pool,
                                  kv_len + 1, softcap=cfg.attn_softcap)
     y = apply_dense(p["o"], out.reshape(b, -1))
     return y.reshape(b, 1, -1), {"k": k_pool, "v": v_pool}
+
+
+def attn_paged_spec(cfg: ModelConfig, spec: LayerSpec, p, x, pool,
+                    block_tables, kv_len, blk, off, *,
+                    plan: Optional[ShardingPlan] = None):
+    """Multi-token decode (speculative verification) against a paged pool.
+
+    x: [B, T, d] — the current input token plus T-1 draft tokens per
+    sequence; kv_len: [B] history length *before* the window; blk/off:
+    [B, T] int32 scatter targets for each window position's K/V, computed
+    host-side by the engine from its block tables (invalid positions point
+    at the null block, so a slot mid-prefill or past its budget never
+    clobbers live blocks).  All T positions' K/V are scattered in one
+    batched write, then attention reads through the table with causal
+    masking of the window (kernels.paged_attention.paged_window_attention).
+    Returns (y [B, T, d], updated pool).  Same architecture gates as
+    ``attn_paged_decode``."""
+    if cfg.mla is not None:
+        raise NotImplementedError("paged decode: MLA uses the latent cache")
+    if spec.attn == "window" and cfg.sliding_window:
+        raise NotImplementedError("paged decode: window layers use ring cache")
+    if plan is not None and (plan.model_axis is not None or plan.seq_axes):
+        raise NotImplementedError(
+            "paged decode: model/seq-sharded plans are not supported yet")
+    b, t, _ = x.shape
+    positions = kv_len[:, None] + jnp.arange(t)[None, :]
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions, (3, b, t))
+    q, k, v = _qkv(cfg, p, x, positions)
+    k_pool = pool["k"].at[blk, off].set(k)
+    v_pool = pool["v"].at[blk, off].set(v)
+    out = paged_window_attention(q, k_pool, v_pool, block_tables, kv_len,
+                                 softcap=cfg.attn_softcap)
+    y = apply_dense(p["o"], out.reshape(b, t, -1))
+    return y, {"k": k_pool, "v": v_pool}
 
 
 def _ring_decode(cfg, q, cache, kv_len, window):

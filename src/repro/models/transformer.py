@@ -71,10 +71,13 @@ def block_init(cfg: ModelConfig, spec: LayerSpec, key, dtype):
 
 
 def block_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions, plan,
-                cache, kv_len, mode: str, cache_len: int, block_tables=None):
+                cache, kv_len, mode: str, cache_len: int, block_tables=None,
+                spec_scatter=None):
     """Returns (x, new_cache_entry, aux).  When ``block_tables`` is given the
     decode path reads/writes the paged KV pool instead of a contiguous cache
-    (attention layers only; gated by api.paged_compatible)."""
+    (attention layers only; gated by api.paged_compatible).  ``spec_scatter``
+    ((blk, off) [B, T] target arrays) switches the paged decode to the
+    multi-token speculative-verification window."""
     aux = {}
     h = apply_norm(cfg, p["norm1"], x)
     new_cache = {}
@@ -82,7 +85,12 @@ def block_apply(cfg: ModelConfig, spec: LayerSpec, p, x, *, positions, plan,
         raise NotImplementedError(
             f"paged decode only supports attention mixers, got {spec.mixer}")
     if spec.mixer == "attn":
-        if mode == "decode" and block_tables is not None:
+        if mode == "decode" and block_tables is not None \
+                and spec_scatter is not None:
+            mx, c = attn.attn_paged_spec(cfg, spec, p["mixer"], h,
+                                         cache["mixer"], block_tables,
+                                         kv_len, *spec_scatter, plan=plan)
+        elif mode == "decode" and block_tables is not None:
             mx, c = attn.attn_paged_decode(cfg, spec, p["mixer"], h,
                                            cache["mixer"], block_tables,
                                            kv_len, plan=plan)
@@ -181,7 +189,7 @@ def init_params(cfg: ModelConfig, key, dtype=None):
 
 def apply_stack(cfg: ModelConfig, params, x, *, positions, plan, mode: str,
                 cache=None, kv_len=None, cache_len: int = 0,
-                block_tables=None):
+                block_tables=None, spec_scatter=None):
     """Run all layer groups.  Returns (x, new_cache, aux)."""
     period = group_period(cfg)
     specs = cfg.layer_plan()[:period]
@@ -195,7 +203,7 @@ def apply_stack(cfg: ModelConfig, params, x, *, positions, plan, mode: str,
             xc, nc, aux = block_apply(
                 cfg, specs[i], gp[f"l{i}"], xc, positions=positions, plan=plan,
                 cache=c_i, kv_len=kv_len, mode=mode, cache_len=cache_len,
-                block_tables=block_tables)
+                block_tables=block_tables, spec_scatter=spec_scatter)
             if nc is not None:
                 new_gc[f"l{i}"] = nc
             if "lb_loss" in aux:
@@ -365,3 +373,20 @@ def lm_paged_decode_step(cfg: ModelConfig, params, tokens, pools,
                                   block_tables=block_tables)
     x = apply_norm(cfg, params["final_norm"], x)
     return lm_head(cfg, params, x[:, 0]), new_pools
+
+
+def lm_paged_spec_step(cfg: ModelConfig, params, tokens, pools, block_tables,
+                       kv_len, blk, off, *, plan=None):
+    """Multi-token (speculative-verification) decode step against paged KV
+    pools.  tokens [B, T] = current input token + T-1 draft tokens; kv_len
+    [B] history *before* the window; blk/off [B, T] per-position scatter
+    targets (engine-computed; null block where invalid).  Returns
+    (logits [B, T, Vp], new_pools) — logits[:, t] scores the token *after*
+    window position t, so the greedy acceptance walk reads them in order."""
+    x = embed_tokens(cfg, params, tokens)
+    x, new_pools, _ = apply_stack(cfg, params, x, positions=None, plan=plan,
+                                  mode="decode", cache=pools, kv_len=kv_len,
+                                  block_tables=block_tables,
+                                  spec_scatter=(blk, off))
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_head(cfg, params, x), new_pools

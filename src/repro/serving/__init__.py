@@ -6,6 +6,8 @@ from repro.serving.paged_engine import (PagedBatchResult,  # noqa: F401
                                         PagedEngineConfig, kv_block_bytes)
 from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,  # noqa: F401
                                         RadixBlockTree)
+from repro.serving.speculative import (Drafter, ModelDrafter,  # noqa: F401
+                                       NGramDrafter, get_drafter)
 from repro.serving.cluster import (Autoscaler, AutoscalerConfig,  # noqa: F401
                                    Replica, Router, RouterConfig)
 from repro.serving.simulator import (ClusterSimResult,  # noqa: F401

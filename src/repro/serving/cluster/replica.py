@@ -75,6 +75,7 @@ class Replica:
                  n_blocks: int = 4096, prefix_cache: bool = True,
                  max_tree_nodes: int = 65536,
                  chunk_tokens: int = 0, preempt: bool = False,
+                 spec_tokens: int = 0, spec_acceptance: float = 0.0,
                  spawned_at: float = 0.0, engine=None):
         self.rid = rid
         self.model_cfg = model_cfg
@@ -93,6 +94,11 @@ class Replica:
         self.engine = engine                  # live PagedEngine (optional)
         self.chunk_tokens = chunk_tokens      # engine-side chunked prefill
         self.preempt = preempt                # engine-side SLO preemption
+        # engine-side speculative decoding: load projections price decode
+        # at the expected tokens/iteration of the (K, acceptance) operating
+        # point, with each iteration costing a K+1-wide verify pass
+        self.spec_tokens = spec_tokens
+        self.spec_acceptance = spec_acceptance
         self.queue: list[Request] = []
         self.busy_until = 0.0
         self.inflight_blocks = 0
@@ -151,6 +157,18 @@ class Replica:
     def free_blocks(self) -> int:
         return max(0, self.n_blocks - self.projected_blocks)
 
+    def _decode_seconds(self, w: int, out: float, kv: float) -> float:
+        """Decode-phase seconds for ``out`` tokens at batch width ``w``:
+        with speculation each iteration is a K+1-wide verify pass emitting
+        ``spec_speedup(K, acceptance)`` expected tokens — the projection
+        must price the *measured* operating point, or slo_aware routing
+        sheds requests a speculating engine would finish in time (and
+        conversely over-admits when acceptance collapses)."""
+        from repro.core.scheduler import spec_speedup
+        t_iter = self.lm.token_time(w, kv, q_tokens=self.spec_tokens + 1)
+        iters = out / spec_speedup(self.spec_tokens, self.spec_acceptance)
+        return iters * t_iter
+
     def _chunk_time(self, chunk: list[Request]) -> float:
         """Service time of one batch-width chunk: prefill on the longest
         *uncached* prompt + decode to the longest predicted output.  With
@@ -170,7 +188,7 @@ class Replica:
         if self.chunk_tokens > 0:
             n_chunks = -(-in_net // self.chunk_tokens)
             t_pre += (n_chunks - 1) * self.lm.token_time(w, in_net / 2)
-        return t_pre + out * self.lm.token_time(w, kv)
+        return t_pre + self._decode_seconds(w, out, kv)
 
     def projected_drain(self) -> float:
         """Seconds to clear the queue, batched at engine width."""
@@ -207,10 +225,10 @@ class Replica:
     def capacity_rps(self, mean_in: float = 64.0,
                      mean_out: float = 64.0) -> float:
         """Sustainable request rate at full batch width (autoscaler's
-        per-replica capacity denominator)."""
+        per-replica capacity denominator; speculation raises it)."""
         w = self.max_batch
         t = self.lm.prefill_time(w, mean_in) \
-            + mean_out * self.lm.token_time(w, mean_in + mean_out / 2)
+            + self._decode_seconds(w, mean_out, mean_in + mean_out / 2)
         return w / t if t > 0 else float("inf")
 
     # ------------------------------------------------------------- dispatch
@@ -278,8 +296,11 @@ class Replica:
         for r in remaining:
             steps = r.true_output_len - step_start
             if steps > 0:
-                tt = self.lm.token_time(n, in_len + step_start + steps / 2)
-                t_cursor += steps * tt
+                # same speculation-aware pricing as the projections — the
+                # simulated execution must deliver the speedup the routing
+                # signals promised, or slo_aware admits on optimism
+                t_cursor += self._decode_seconds(
+                    n, steps, in_len + step_start + steps / 2)
                 step_start = r.true_output_len
             r.start_time = now
             r.finish_time = t_cursor

@@ -140,6 +140,23 @@ class BlockAllocator:
             self._decref(b)
         return len(blocks)
 
+    def truncate(self, seq_id: int, n_blocks: int) -> int:
+        """Drop a sequence's trailing table entries beyond ``n_blocks``
+        (speculative-rejection rollback: the verify step grows the table to
+        the full draft window up front; rejected tail blocks come back
+        here).  Each dropped entry releases one reference through the same
+        path as ``free_seq`` — a shared block survives under its other
+        owners, a prefix-tree-retained block parks in ``cached`` — so
+        rollback can never double-free or leak.  Returns entries dropped."""
+        table = self.tables.get(seq_id, [])
+        dropped = table[n_blocks:]
+        if not dropped:
+            return 0
+        del table[n_blocks:]
+        for b in dropped:
+            self._decref(b)
+        return len(dropped)
+
     # ------------------------------------------- prefix-tree cooperation
     def retain(self, block: int) -> None:
         """Mark a block as held by the prefix tree: at refcount zero it is

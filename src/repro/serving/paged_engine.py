@@ -84,6 +84,11 @@ class PagedEngineConfig:
     chunk_tokens: int = 0
     # SLO-slack preemption under block pressure (preempt-and-recompute)
     preempt: bool = False
+    # speculative decoding: draft tokens verified per iteration (0 = off)
+    # and the default proposer (serving.speculative.get_drafter name);
+    # greedy acceptance keeps outputs token-identical to sequential decode
+    spec_tokens: int = 0
+    drafter: str = "ngram"
 
     @classmethod
     def from_memory_budget(cls, cfg: ModelConfig, memory_budget: float,
@@ -134,13 +139,36 @@ class PagedBatchResult(BatchResult):
     preempted_tokens: int = 0      # generated tokens whose K/V was recomputed
     inter_token_s: list = field(default_factory=list)
     #   wall-clock gaps between consecutive decode emissions per slot — the
-    #   decode-stall distribution interleave_bench takes its p99 over
+    #   decode-stall distribution interleave_bench takes its p99 over (a
+    #   speculative iteration emitting n tokens spreads its gap over the n)
+    # --- speculative decoding (spec_tokens > 0) ---
+    drafted_tokens: int = 0        # draft positions scored by verify passes
+    accepted_tokens: int = 0       # drafts matching the target's greedy pick
+    spec_rolled_blocks: int = 0    # rejected-tail blocks rolled back
 
     @property
     def p99_inter_token_s(self) -> float:
         if not self.inter_token_s:
             return float("nan")
         return float(np.percentile(self.inter_token_s, 99))
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target's greedy walk accepted."""
+        return self.accepted_tokens / self.drafted_tokens \
+            if self.drafted_tokens else 0.0
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(v) for v in self.outputs.values())
+
+    @property
+    def iterations_per_token(self) -> float:
+        """Engine decode iterations per generated token — the decode-latency
+        axis speculation compresses (1.0 without it; prefill-emitted first
+        tokens make sub-1.0 possible even unspeculated)."""
+        n = self.generated_tokens
+        return self.steps / n if n else float("nan")
 
 
 @dataclass
@@ -213,6 +241,31 @@ class PagedDecodeState:
         return [s for s, r in enumerate(self.active)
                 if r is not None and s not in self.prefilling]
 
+    def masked_decode_view(self) -> tuple:
+        """(block_tables, kv_len, cur_tok) with mid-prefill slots masked to
+        the null block (like free slots) — the decode/verify step must
+        neither read their half-written KV nor clobber it, and both steps
+        must mask identically or token identity breaks."""
+        bt, kv, ct = self.block_tables, self.kv_len, self.cur_tok
+        if self.prefilling:
+            bt, kv, ct = bt.copy(), kv.copy(), ct.copy()
+            for s in self.prefilling:
+                bt[s, :] = self.null_block
+                kv[s] = 0
+                ct[s] = 0
+        return bt, kv, ct
+
+    def truncate_blocks(self, slot: int, n_tokens: int,
+                        block_size: int) -> int:
+        """Shrink a slot's block list to exactly cover ``n_tokens``
+        (speculative-rejection rollback); freed table columns point back at
+        the null block.  Returns blocks released."""
+        keep = -(-n_tokens // block_size)
+        dropped = self.alloc.truncate(slot, keep)
+        if dropped:
+            self.block_tables[slot, keep:] = self.null_block
+        return dropped
+
 
 class PagedEngine:
     """Continuous batching over paged KV blocks.  Greedy decoding, token-
@@ -223,6 +276,7 @@ class PagedEngine:
     def __init__(self, cfg: ModelConfig, params, pcfg: PagedEngineConfig,
                  plan: Optional[ShardingPlan] = None,
                  monitor: Optional[Monitor] = None,
+                 drafter=None,
                  dtype=jnp.float32):
         ok, why = api.paged_compatible(cfg)
         if not ok:
@@ -233,6 +287,20 @@ class PagedEngine:
         self.plan = plan
         self.monitor = monitor
         self.dtype = dtype
+        # speculative decoding: drafter + the one-pass verify step scoring
+        # the K drafts and the current input token together
+        self.drafter = None
+        if drafter is not None and pcfg.spec_tokens <= 0:
+            raise ValueError(
+                "drafter passed but spec_tokens == 0: set "
+                "PagedEngineConfig.spec_tokens > 0 to enable speculation")
+        if pcfg.spec_tokens > 0:
+            from repro.serving.speculative import get_drafter
+            self.drafter = drafter if drafter is not None \
+                else get_drafter(pcfg.drafter)
+            self._verify = jax.jit(
+                functools.partial(api.paged_spec_step, cfg, plan=plan),
+                donate_argnums=(2,))
         # per-iteration prefill budget, block-aligned so full chunks scatter
         # without padding holes mid-prompt (a hole would be read back as
         # garbage by the next chunk's prefix gather)
@@ -375,6 +443,8 @@ class PagedEngine:
         r = st.active[slot]
         res.preemptions += 1
         res.preempted_tokens += len(outs[r.rid])
+        if self.drafter is not None:
+            self.drafter.release(slot)
         st.free_slot(slot)
         queue.insert(min(1, len(queue)), r)
 
@@ -557,6 +627,68 @@ class PagedEngine:
         self._last_emit[slot] = None
         return True
 
+    # ------------------------------------------------------------ speculative
+    def _spec_step(self, st: PagedDecodeState, decoding: list, outs: dict,
+                   res: PagedBatchResult, drafts: np.ndarray,
+                   win: np.ndarray) -> None:
+        """One speculative iteration: score the current input token plus the
+        drafted window in a single multi-token verify pass, accept the
+        longest draft prefix matching the target's own greedy choices, and
+        roll back the rejected tail's blocks.
+
+        Every window position's K/V is scattered by the verify step; only
+        positions backing *emitted* tokens stay referenced — rejected
+        positions sit beyond the advanced ``kv_len``, are rolled back at
+        block granularity here, and any surviving stale slots are
+        overwritten by the next iteration's writes before ``kv_len`` ever
+        reaches them, so no rollback of pool *contents* is needed."""
+        bs = self.pcfg.block_size
+        b = self.pcfg.max_batch
+        t_w = self.pcfg.spec_tokens + 1
+        bt, kv, ct = st.masked_decode_view()
+        win_eff = np.zeros(b, np.int32)
+        for slot in decoding:
+            win_eff[slot] = win[slot]
+        toks = np.zeros((b, t_w), np.int32)
+        toks[:, 0] = ct
+        toks[:, 1:] = drafts
+        # host-side scatter targets: window position t of slot s lands at
+        # logical position kv+t -> (table[(kv+t)//bs], (kv+t)%bs); invalid
+        # positions (masked slot, past the slot's window) go to the null
+        # block so the batched write never touches live blocks
+        pos = kv[:, None] + np.arange(t_w)[None, :]
+        valid = np.arange(t_w)[None, :] < win_eff[:, None]
+        blk_idx = np.minimum(pos // bs, bt.shape[1] - 1)
+        blk = np.take_along_axis(bt, blk_idx, axis=1)
+        blk = np.where(valid, blk, st.null_block).astype(np.int32)
+        off = np.where(valid, pos % bs, 0).astype(np.int32)
+        logits, st.pools = self._verify(
+            self.params, jnp.asarray(toks), st.pools, jnp.asarray(bt),
+            jnp.asarray(kv), jnp.asarray(blk), jnp.asarray(off))
+        g = np.asarray(greedy(logits.reshape(b * t_w, -1),
+                              self.cfg.vocab_size)).reshape(b, t_w)
+        now = time.perf_counter()
+        for slot in decoding:
+            r = st.active[slot]
+            k_eff = int(win[slot]) - 1
+            j = 0
+            while j < k_eff and int(drafts[slot, j]) == int(g[slot, j]):
+                j += 1
+            n_emit = j + 1           # accepted drafts + the bonus token
+            emitted = [int(x) for x in g[slot, :n_emit]]
+            outs[r.rid].extend(emitted)
+            st.cur_tok[slot] = emitted[-1]
+            st.kv_len[slot] += n_emit
+            res.drafted_tokens += k_eff
+            res.accepted_tokens += j
+            res.spec_rolled_blocks += st.truncate_blocks(
+                slot, int(st.kv_len[slot]), bs)
+            prev = self._last_emit.get(slot)
+            if prev is not None:
+                gap = (now - prev) / n_emit
+                res.inter_token_s.extend([gap] * n_emit)
+            self._last_emit[slot] = now
+
     # ------------------------------------------------------------------ serve
     def run_continuous(self, requests: list, *,
                        max_new: Optional[int] = None) -> PagedBatchResult:
@@ -644,18 +776,47 @@ class PagedEngine:
                             st.active[s].true_output_len, budget)]
             if not decoding:
                 continue
-            # c) grow block lists to cover the token about to be written;
-            #    exhaustion under misprediction preempts the slack-most
-            #    resident (possibly the grower itself) instead of dying
+            # c) speculative draft window: propose *before* block growth so
+            #    the grower knows the full write horizon.  Per-slot draft
+            #    width is capped by the tokens the request may still emit
+            #    and by its block-table width, so a near-finished or
+            #    near-max_seq sequence never drafts past its own end
+            k_spec = self.pcfg.spec_tokens
+            win = np.ones(self.pcfg.max_batch, np.int32)
+            drafts: Optional[np.ndarray] = None
+            if k_spec > 0:
+                drafts = np.zeros((self.pcfg.max_batch, k_spec), np.int32)
+                win = np.zeros(self.pcfg.max_batch, np.int32)
+                for slot in decoding:
+                    r = st.active[slot]
+                    m = min(r.true_output_len, budget) - len(outs[r.rid])
+                    cap = min(k_spec, m - 1,
+                              self.pcfg.max_seq_len
+                              - int(st.kv_len[slot]) - 1)
+                    props = [] if cap <= 0 else self.drafter.propose(
+                        slot, list(r.tokens) + outs[r.rid], cap)
+                    props = [int(t) for t in props[:max(cap, 0)]]
+                    drafts[slot, :len(props)] = props
+                    win[slot] = 1 + len(props)
+            #    grow block lists to cover the token(s) about to be written;
+            #    exhaustion first sheds the draft window (speculation must
+            #    never force an eviction), then under misprediction preempts
+            #    the slack-most resident (possibly the grower itself)
             for slot in list(decoding):
                 if st.active[slot] is None:
                     continue
                 while True:
                     try:
-                        st.ensure_blocks(slot, int(st.kv_len[slot]) + 1,
+                        st.ensure_blocks(slot,
+                                         int(st.kv_len[slot])
+                                         + int(win[slot]),
                                          self.pcfg.block_size)
                         break
                     except MemoryError:
+                        if win[slot] > 1:
+                            win[slot] = 1
+                            drafts[slot, :] = 0
+                            continue
                         if not self.pcfg.preempt:
                             raise MemoryError(
                                 "KV pool exhausted mid-decode (output "
@@ -691,14 +852,14 @@ class PagedEngine:
                 util_n += 1
             # e) one fixed-shape decode step over all slots; mid-prefill
             #    slots are masked to the null block (like free slots) so
-            #    their half-written KV is neither read nor clobbered
-            bt, kv, ct = st.block_tables, st.kv_len, st.cur_tok
-            if st.prefilling:
-                bt, kv, ct = bt.copy(), kv.copy(), ct.copy()
-                for s in st.prefilling:
-                    bt[s, :] = st.null_block
-                    kv[s] = 0
-                    ct[s] = 0
+            #    their half-written KV is neither read nor clobbered.  With
+            #    speculation the step is a verify pass scoring the input
+            #    token plus the drafts in one multi-token kernel call
+            if k_spec > 0:
+                self._spec_step(st, decoding, outs, res, drafts, win)
+                steps += 1
+                continue
+            bt, kv, ct = st.masked_decode_view()
             logits, st.pools = self._decode(
                 self.params, jnp.asarray(ct)[:, None], st.pools,
                 jnp.asarray(bt), jnp.asarray(kv))
@@ -756,6 +917,8 @@ class PagedEngine:
             n_kv = int(st.kv_len[slot])
             chain = list(r.tokens) + outs[r.rid][:n_kv - len(r.tokens)]
             st.prefix.insert(chain, st.alloc.tables[slot], n_kv)
+        if self.drafter is not None:
+            self.drafter.release(slot)
         st.free_slot(slot)
         if r.finish_time is None:
             # trace-replay clock: serve start is t=0 of the workload's

@@ -76,14 +76,18 @@ class LatencyModel:
         kv_bytes = 2.0 * 2.0 * kv * c.n_kv_heads * c.head_dim_eff * batch
         return layers * (per_layer_w + kv_bytes)
 
-    def token_time(self, batch: int, kv: int) -> float:
+    def token_time(self, batch: int, kv: int, q_tokens: int = 1) -> float:
         """One decode iteration for the whole batch (pipeline stages execute
-        sequentially per token — paper Observation #1)."""
+        sequentially per token — paper Observation #1).  ``q_tokens > 1``
+        prices a speculative *verify* iteration: the window's query
+        positions multiply the compute term but share one weight/cache HBM
+        sweep — exactly why collapsing K decode steps into one verify pass
+        wins on the memory-bound decode roofline."""
         t = 0.0
         path = [d for d in self.dmap.path if self.dmap.layers.get(d, 0) > 0]
         for idx, dev in enumerate(path):
             nl = self.dmap.layers[dev]
-            t_comp = self._stage_flops_token(nl, kv) * batch \
+            t_comp = self._stage_flops_token(nl, kv) * batch * q_tokens \
                 / (self.nodes[dev].performance * self.efficiency)
             t_mem = self._stage_bytes(nl, batch, kv) / self.hbm_bw
             t += max(t_comp, t_mem)
@@ -345,12 +349,20 @@ class ContinuousSimResult:
     prefill_stall_s: float = 0.0   # prefill time co-resident decoders sat out
     preemptions: int = 0
     preempted_tokens: int = 0      # generated tokens recomputed after evict
+    emitted_tokens: int = 0        # decode emissions (speculation: > steps)
 
     @property
     def p99_inter_token_s(self) -> float:
         if not self.inter_token_s:
             return float("nan")
         return float(np.percentile(self.inter_token_s, 99))
+
+    @property
+    def iterations_per_token(self) -> float:
+        """Engine iterations per emitted token — the axis speculative
+        decoding compresses below 1 step/token."""
+        return self.steps / self.emitted_tokens if self.emitted_tokens \
+            else float("nan")
 
     @property
     def max_inter_token_s(self) -> float:
@@ -383,6 +395,7 @@ class ContinuousSimResult:
             "prefill_chunks": self.prefill_chunks,
             "preemptions": self.preemptions,
             "preempted_tokens": self.preempted_tokens,
+            "iterations_per_token": round(self.iterations_per_token, 4),
         }
 
 
@@ -401,6 +414,8 @@ def simulate_continuous(
     preempt: bool = False,
     block_size: int = 16,
     n_blocks: int = 4096,
+    spec_tokens: int = 0,
+    spec_acceptance: float = 0.0,
 ) -> ContinuousSimResult:
     """Iteration-level continuous-batching simulation on one replica — the
     analytic twin of ``PagedEngine.run_continuous``.
@@ -418,7 +433,15 @@ def simulate_continuous(
     ``PagedEngine.can_admit``).  With ``preempt``, a blocked arrival with
     less SLO slack than the slack-most decoding resident evicts it:
     its blocks free, its prompt + generated tokens requeue as recompute
-    prefill (work is re-spent; tokens already emitted stay emitted)."""
+    prefill (work is re-spent; tokens already emitted stay emitted).
+
+    ``spec_tokens > 0`` models speculative decoding at the measured
+    ``spec_acceptance``: each decode iteration is priced as a verify pass
+    over the K+1-token window (compute × window, one shared HBM sweep —
+    ``LatencyModel.token_time(q_tokens=...)``) and emits
+    ``spec_speedup(K, a)`` expected tokens, carried per-resident as
+    fractional credit so the accounting is deterministic."""
+    from repro.core.scheduler import spec_speedup as _speedup
     if nodes is None:
         nodes, latency = paper_cluster()
     model_mem = model_mem or model_cfg.param_count() * 2.0
@@ -445,11 +468,12 @@ def simulate_continuous(
                              f"pool has {usable} usable")
 
     class _Entry:
-        __slots__ = ("r", "pre_rem", "out_done", "last_emit")
+        __slots__ = ("r", "pre_rem", "out_done", "last_emit", "credit")
 
         def __init__(self, r: Request, pre_rem: int, out_done: int):
             self.r, self.pre_rem, self.out_done = r, pre_rem, out_done
             self.last_emit: Optional[float] = None
+            self.credit = 0.0          # fractional speculative emissions
 
     res = ContinuousSimResult(requests=reqs, makespan=0.0)
     gen_sofar: dict[int, int] = {}             # rid -> tokens already emitted
@@ -518,7 +542,8 @@ def simulate_continuous(
         if decoding:
             kv = float(np.mean([e.r.input_len + e.out_done
                                 for e in decoding]))
-            t_dec = lm.token_time(len(decoding), kv)
+            t_dec = lm.token_time(len(decoding), kv,
+                                  q_tokens=spec_tokens + 1)
             res.prefill_stall_s += t_pre
         t_iter = t_pre + t_dec
         t += t_iter
@@ -529,10 +554,22 @@ def simulate_continuous(
             # without emitting, exactly like the engine
             completed.out_done += 1
             completed.last_emit = t
+            res.emitted_tokens += 1
+        exp_extra = _speedup(spec_tokens, spec_acceptance) - 1.0
         for e in decoding:
-            e.out_done += 1
+            n_emit = 1
+            if spec_tokens > 0:
+                e.credit += exp_extra
+                extra = int(e.credit)
+                e.credit -= extra
+                n_emit += extra
+            n_emit = min(n_emit,
+                         min(e.r.true_output_len, max_new) - e.out_done)
+            e.out_done += n_emit
+            res.emitted_tokens += n_emit
             if e.last_emit is not None:
-                res.inter_token_s.append(t - e.last_emit)
+                res.inter_token_s.extend([(t - e.last_emit) / n_emit]
+                                         * n_emit)
             e.last_emit = t
         done = [e for e in inflight
                 if e.out_done >= min(e.r.true_output_len, max_new)]
@@ -673,6 +710,8 @@ def simulate_cluster(
     prefix_cache: bool = True,
     chunk_tokens: int = 0,
     preempt: bool = False,
+    spec_tokens: int = 0,
+    spec_acceptance: float = 0.0,
 ) -> ClusterSimResult:
     """Discrete-event simulation of a replicated cluster: arrivals are
     routed on landing (``router``: a policy name, RouterConfig, or Router),
@@ -692,6 +731,9 @@ def simulate_cluster(
     slower, honestly), and preemption shrinks the busy-tail barrier in
     ``projected_finish`` for tight arrivals (so slo_aware does not shed
     requests the engine would serve by evicting slack residents).
+    ``spec_tokens``/``spec_acceptance`` likewise describe engine-side
+    speculative decoding: replicas price decode at the expected
+    tokens-per-verify-iteration of that operating point.
     """
     from repro.serving.cluster import (Autoscaler, Replica, Router,
                                        RouterConfig)
@@ -720,7 +762,8 @@ def simulate_cluster(
                       model_mem=model_mem, max_batch=max_batch,
                       block_size=block_size, n_blocks=n_blocks,
                       prefix_cache=prefix_cache, chunk_tokens=chunk_tokens,
-                      preempt=preempt, spawned_at=now)
+                      preempt=preempt, spec_tokens=spec_tokens,
+                      spec_acceptance=spec_acceptance, spawned_at=now)
         rep.partition = pi
         replicas.append(rep)
         return rep

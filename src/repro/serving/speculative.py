@@ -1,0 +1,169 @@
+"""Speculative decoding: drafters proposing K tokens per engine iteration.
+
+The paged engine's decode loop is strictly one token per step — every
+generated token pays a full HBM sweep of the KV pool plus a host↔device
+round trip.  Speculative decoding collapses K of those steps into one
+*verification* pass: a drafter proposes K cheap candidate tokens, the target
+model scores all K+1 positions in a single multi-token kernel call
+(``kernels.paged_attention.paged_window_attention``), and the engine accepts
+the longest prefix of drafts that match the target's own greedy choices.
+With greedy acceptance the emitted stream is *exactly* the sequential greedy
+stream — position t's verify logits see precisely the tokens the sequential
+loop would have fed it — so speculation is a pure latency lever, never a
+quality trade.
+
+Two proposers:
+
+* ``NGramDrafter`` — prompt-lookup decoding (deterministic, model-free):
+  the continuation of the most recent earlier occurrence of the current
+  trailing n-gram in (prompt + generated).  Free to run, surprisingly
+  effective on the prefix-redundant traffic this repo already optimizes for
+  (templates, multi-turn chat, code, summarization quoting its source).
+* ``ModelDrafter`` — a small draft LM proposing greedy continuations.
+  Correctness does not depend on draft quality — a bad draft only wastes the
+  verify width — so the draft model needs no distillation coupling to the
+  target.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """Proposes up to ``k`` draft tokens to verify in one engine iteration.
+
+    ``history`` is the full token stream so far (prompt + generated,
+    including the engine's pending input token as the last element).  The
+    proposal must be a list of 0..k token ids; shorter is always safe — the
+    engine pads the verify window and only charges for what was proposed.
+    Drafters may keep per-slot state keyed on ``slot``; ``release`` is
+    called when a slot's sequence finishes or is preempted."""
+
+    name: str
+
+    def propose(self, slot: int, history: list, k: int) -> list: ...
+
+    def release(self, slot: int) -> None: ...
+
+
+class NGramDrafter:
+    """Prompt-lookup decoding: match the trailing ``n``-gram (longest first)
+    against earlier history and propose the tokens that followed its most
+    recent occurrence.  Stateless across slots and deterministic, so the
+    engine's token-identity guarantee is trivially preserved."""
+
+    name = "ngram"
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if min_ngram < 1 or max_ngram < min_ngram:
+            raise ValueError(f"bad ngram range [{min_ngram}, {max_ngram}]")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, slot: int, history: list, k: int) -> list:
+        ln = len(history)
+        for n in range(self.max_ngram, self.min_ngram - 1, -1):
+            if ln < n + 1:
+                continue
+            tail = history[-n:]
+            # most recent earlier occurrence (rightmost i with a non-empty
+            # continuation: i + n < ln ensures >= 1 proposable token)
+            for i in range(ln - n - 1, -1, -1):
+                if history[i:i + n] == tail:
+                    # read the continuation cyclically with period p (the
+                    # match distance): a far-back match yields the plain
+                    # slice (j < p), while a near-tail match — a sequence
+                    # looping with period p — extends through the loop
+                    # instead of truncating the proposal at p tokens
+                    p = ln - n - i
+                    return [history[i + n + (j % p)] for j in range(k)]
+        return []
+
+    def release(self, slot: int) -> None:
+        pass
+
+
+class ModelDrafter:
+    """Greedy draft proposals from a small LM (its own params + contiguous
+    cache, independent of the paged target pools).
+
+    Correctness-first implementation: each proposal re-prefills the slot's
+    history (padded to a power-of-two bucket so jit specializations stay
+    bounded, mirroring the paged kernels' ``bucket_nb``) and then decodes
+    ``k`` greedy tokens.  That is O(history) work per iteration — fine for
+    the CPU testbed and for draft models ~10x smaller than the target; an
+    incremental per-slot draft cache is the recorded follow-up
+    (ROADMAP open items)."""
+
+    name = "model"
+
+    def __init__(self, cfg, params, *, max_len: int = 1024):
+        from repro.models import api           # deferred: keep import light
+        from repro.serving.sampling import greedy
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._greedy = greedy
+        self._prefill = jax.jit(
+            lambda params, toks, kv_len, cache_len: api.prefill(
+                cfg, params, {"tokens": toks}, cache_len=cache_len,
+                kv_len=kv_len),
+            static_argnames=("cache_len",))
+        self._decode = jax.jit(
+            lambda params, tok, cache, kv_len: api.decode_step(
+                cfg, params, tok, cache, kv_len))
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        from repro.kernels.paged_attention.paged_attention import bucket_nb
+        return max(8, bucket_nb(n))
+
+    def propose(self, slot: int, history: list, k: int) -> list:
+        hist = history[-self.max_len:]
+        ln = len(hist)
+        if ln == 0 or k <= 0:
+            return []
+        pad = self._bucket(ln)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :ln] = [t % self.cfg.vocab_size for t in hist]
+        cache_len = pad + k
+        logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                      jnp.asarray([ln], jnp.int32), cache_len)
+        out: list = []
+        kv_len = jnp.asarray([ln], jnp.int32)
+        for _ in range(k):
+            tok = self._greedy(logits, self.cfg.vocab_size)
+            out.append(int(np.asarray(tok)[0]))
+            if len(out) == k:
+                break
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         kv_len)
+            kv_len = kv_len + 1
+        return out
+
+    def release(self, slot: int) -> None:
+        pass
+
+
+def get_drafter(name: str, *, draft_cfg=None, draft_params=None,
+                max_ngram: int = 3) -> Drafter:
+    """Factory behind ``serve.py --drafter`` / ``PagedEngine``."""
+    if name == "ngram":
+        return NGramDrafter(max_ngram=max_ngram)
+    if name == "model":
+        if draft_cfg is None:
+            raise ValueError("model drafter needs draft_cfg (+ params)")
+        if draft_params is None:
+            draft_params = _default_draft_params(draft_cfg)
+        return ModelDrafter(draft_cfg, draft_params)
+    raise ValueError(f"unknown drafter {name!r} (ngram | model)")
+
+
+def _default_draft_params(cfg):
+    from repro.models import api
+    return api.init_params(cfg, jax.random.PRNGKey(7), jnp.float32)

@@ -1,0 +1,202 @@
+"""BlockAllocator rollback/refcount property tests: random interleavings of
+alloc / share / cow / truncate / free_seq / retain / release_cached (the
+exact op mix the prefix cache + speculative rollback drive) must conserve
+blocks — every physical block in exactly one of {free, referenced, cached},
+refcounts equal to table references, never a double-free or a leak.
+
+Deterministic fuzzing (seeded numpy) so tier-1 stays reproducible; a
+hypothesis-powered variant runs when the library is installed, mirroring
+test_scheduler's optional property layer."""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import BlockAllocator
+
+
+def check_conservation(a: BlockAllocator) -> None:
+    free = set(a.free)
+    referenced = set(a.refcnt)
+    cached = set(a.cached)
+    # free list has no duplicates
+    assert len(free) == len(a.free), "duplicate entries in free list"
+    # partition: every block in exactly one bucket
+    assert free | referenced | cached == set(range(a.n_blocks))
+    assert not free & referenced
+    assert not free & cached
+    assert not cached & referenced, \
+        "cached blocks must have refcount zero"
+    # refcounts match table references exactly
+    counts: dict = {}
+    for table in a.tables.values():
+        for b in table:
+            counts[b] = counts.get(b, 0) + 1
+    assert counts == a.refcnt
+    # stats() agrees
+    s = a.stats()
+    assert s["free"] == len(a.free)
+    assert s["used"] == len(referenced)
+    assert s["cached"] == len(cached)
+
+
+def _random_walk(seed: int, n_blocks: int = 24, steps: int = 400) -> dict:
+    rng = np.random.default_rng(seed)
+    a = BlockAllocator(n_blocks)
+    # half the walks get a reclaimer (evict LRU-arbitrary cached block),
+    # exercising the cached-supply path share/alloc replenish through
+    if seed % 2:
+        def reclaim(n):
+            freed = 0
+            while freed < n and a.cached:
+                a.release_cached(next(iter(a.cached)))
+                freed += 1
+            return freed
+        a.reclaimer = reclaim
+    live: list = []
+    next_seq = 0
+    ops = {"alloc": 0, "share": 0, "cow": 0, "truncate": 0, "free": 0,
+           "retain": 0, "release": 0}
+    for _ in range(steps):
+        op = rng.integers(0, 7)
+        if op == 0:                                   # start + alloc
+            sid = next_seq
+            next_seq += 1
+            a.start_seq(sid)
+            live.append(sid)
+            n = int(rng.integers(1, 4))
+            if a.can_alloc(n):
+                a.alloc(sid, n)
+                ops["alloc"] += 1
+            check_conservation(a)
+        elif op == 1 and live:                        # grow
+            sid = live[rng.integers(len(live))]
+            if a.can_alloc(1):
+                a.alloc(sid, 1)
+                ops["alloc"] += 1
+        elif op == 2 and live:                        # share a prefix
+            src = live[rng.integers(len(live))]
+            dst = live[rng.integers(len(live))]
+            blocks = a.tables.get(src, [])
+            if blocks and src != dst:
+                k = int(rng.integers(1, len(blocks) + 1))
+                a.share(dst, blocks[:k])
+                ops["share"] += 1
+        elif op == 3 and live:                        # cow a shared block
+            sid = live[rng.integers(len(live))]
+            blocks = a.tables.get(sid, [])
+            if blocks and (a.can_alloc(1) or
+                           a.refcnt.get(blocks[-1], 0) == 1):
+                try:
+                    a.cow(sid, blocks[int(rng.integers(len(blocks)))])
+                    ops["cow"] += 1
+                except MemoryError:
+                    pass
+        elif op == 4 and live:                        # speculative rollback
+            sid = live[rng.integers(len(live))]
+            keep = int(rng.integers(0, len(a.tables.get(sid, [])) + 1))
+            a.truncate(sid, keep)
+            assert len(a.tables.get(sid, [])) <= keep or keep == 0
+            ops["truncate"] += 1
+        elif op == 5 and live:                        # finish (retain some)
+            sid = live.pop(rng.integers(len(live)))
+            for b in a.tables.get(sid, []):
+                if rng.random() < 0.5:
+                    a.retain(b)
+                    ops["retain"] += 1
+            a.free_seq(sid)
+            a.free_seq(sid)                           # idempotent
+            ops["free"] += 1
+        elif op == 6 and a.cached:                    # evict cached
+            a.release_cached(next(iter(a.cached)))
+            ops["release"] += 1
+        check_conservation(a)
+    # drain: free everything, evict all cached -> full pool returns
+    for sid in live:
+        a.free_seq(sid)
+    for b in list(a.cached):
+        a.release_cached(b)
+    check_conservation(a)
+    assert len(a.free) == n_blocks, "leak: not all blocks returned"
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_op_walk_conserves(seed):
+    ops = _random_walk(seed)
+    # the walk must actually exercise the interesting paths
+    assert ops["alloc"] > 0 and ops["free"] > 0
+    assert ops["truncate"] > 0
+
+
+def test_walks_cover_share_cow_retain():
+    """At least one seed drives every op kind (coverage of the mix, not per
+    seed — short walks may skip rare ops)."""
+    total: dict = {}
+    for seed in range(8):
+        for k, v in _random_walk(seed, steps=200).items():
+            total[k] = total.get(k, 0) + v
+    assert all(total[k] > 0 for k in
+               ("alloc", "share", "cow", "truncate", "free", "retain",
+                "release")), total
+
+
+def test_truncate_shared_block_survives_for_other_owner():
+    a = BlockAllocator(8)
+    a.start_seq(0)
+    blocks = a.alloc(0, 3)
+    a.start_seq(1)
+    a.share(1, blocks[:2])
+    # seq 1 rolls back its speculative tail including a shared block
+    a.truncate(1, 1)
+    assert a.refcnt[blocks[1]] == 1          # still owned by seq 0
+    assert blocks[1] not in a.free
+    check_conservation(a)
+    a.free_seq(0)
+    a.free_seq(1)
+    check_conservation(a)
+    assert len(a.free) == 8
+
+
+def test_truncate_retained_block_parks_in_cached():
+    a = BlockAllocator(8)
+    a.start_seq(0)
+    blocks = a.alloc(0, 3)
+    a.retain(blocks[2])
+    a.truncate(0, 2)
+    assert blocks[2] in a.cached             # not free: the tree holds it
+    assert blocks[2] not in a.free
+    check_conservation(a)
+    a.release_cached(blocks[2])
+    assert blocks[2] in a.free
+    check_conservation(a)
+
+
+def test_truncate_noop_and_bounds():
+    a = BlockAllocator(8)
+    a.start_seq(0)
+    a.alloc(0, 2)
+    assert a.truncate(0, 5) == 0             # keep more than held: no-op
+    assert a.truncate(0, 2) == 0
+    assert a.truncate(99, 0) == 0            # unknown seq: no-op
+    assert a.truncate(0, 0) == 2             # drop everything
+    check_conservation(a)
+    assert len(a.free) == 8
+
+
+# Optional hypothesis-powered layer (mirrors test_scheduler's guard: the
+# deterministic walks above always run; this widens the seed space).
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def test_hypothesis_available_or_skipped():
+    pytest.importorskip("hypothesis")
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_property_random_walks(seed):
+        _random_walk(seed, steps=120)

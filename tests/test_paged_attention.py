@@ -1,16 +1,21 @@
 """Paged decode-attention kernels: block-table gather parity against the
 contiguous decode oracle, across the xla / pallas-interpret backends, with
-padded (null-block) table tails."""
+padded (null-block) table tails; multi-token window parity (speculative
+verification) and the power-of-two block-table bucketing that caps jit
+specialization churn."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.decode_attention.ref import decode_attention_reference
 from repro.kernels.paged_attention.paged_attention import (
-    paged_decode_attention_pallas)
-from repro.kernels.paged_attention.ref import (gather_pool,
-                                               paged_decode_attention_reference)
-from repro.kernels.paged_attention.xla import paged_decode_attention_xla
+    _paged_window_core, bucket_nb, paged_decode_attention_pallas,
+    paged_window_attention_pallas)
+from repro.kernels.paged_attention.ref import (
+    gather_pool, paged_decode_attention_reference,
+    paged_window_attention_reference)
+from repro.kernels.paged_attention.xla import (paged_decode_attention_xla,
+                                               paged_window_attention_xla)
 
 # (b, h, kv, d, block_size, logical_blocks, n_phys_blocks, softcap)
 CASES = [
@@ -73,6 +78,140 @@ def test_padded_table_tail_is_inert(rng, impl):
     vp2[0] = -1e3
     out2 = np.asarray(fn(q, kp2, vp2, jnp.asarray(bt2), jnp.asarray(kv_len)))
     np.testing.assert_allclose(out1, out2, atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------- multi-token window kernel
+
+# (b, h, kv, d, block_size, logical_blocks, n_phys_blocks, softcap)
+WINDOW_CASES = [
+    (2, 4, 2, 16, 8, 4, 16, None),       # group 2: the T fold packs rows
+    (3, 6, 3, 8, 16, 3, 24, 50.0),       # softcap + group 2 over 3 kv heads
+    (1, 8, 8, 32, 4, 6, 32, None),       # MHA (group 1)
+    (2, 16, 2, 64, 16, 2, 48, None),     # wide GQA group 8
+]
+
+
+def _mk_window(rng, case, t):
+    b, h, kv, d, bs, nb, n, cap = case
+    q = rng.standard_normal((b, t, h, d)).astype(np.float32)
+    kp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    vp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    bt = rng.permutation(n)[:b * nb].reshape(b, nb).astype(np.int32)
+    # ragged histories: every sequence a different base length, window fits
+    base = rng.integers(0, nb * bs - t + 1, size=b).astype(np.int32)
+    return q, kp, vp, bt, base, cap
+
+
+@pytest.mark.parametrize("case", WINDOW_CASES)
+@pytest.mark.parametrize("t", [1, 2, 4, 8])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_window_matches_reference(rng, case, t, impl):
+    """[B, T, H, D] verify window: causal against the paged history and the
+    window itself, for ragged kv_len and GQA groups."""
+    q, kp, vp, bt, base, cap = _mk_window(rng, case, t)
+    ref = paged_window_attention_reference(q, kp, vp, bt, base, softcap=cap)
+    if impl == "xla":
+        out = paged_window_attention_xla(q, kp, vp, jnp.asarray(bt),
+                                         jnp.asarray(base), softcap=cap)
+    else:
+        out = paged_window_attention_pallas(
+            q, kp, vp, jnp.asarray(bt), jnp.asarray(base), softcap=cap,
+            interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("case", WINDOW_CASES)
+def test_window_t1_reproduces_single_token_kernel(rng, case):
+    """T=1 at base kv_len-1 must be *exactly* the single-token paged decode
+    kernel — same core, same row layout, bitwise."""
+    b, h, kv, d, bs, nb, n, cap = case
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    kp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    vp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    bt = rng.permutation(n)[:b * nb].reshape(b, nb).astype(np.int32)
+    kv_len = rng.integers(1, nb * bs + 1, size=b).astype(np.int32)
+    single = paged_decode_attention_pallas(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(kv_len), softcap=cap,
+        interpret=True)
+    window = paged_window_attention_pallas(
+        q[:, None], kp, vp, jnp.asarray(bt), jnp.asarray(kv_len) - 1,
+        softcap=cap, interpret=True)[:, 0]
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(window))
+
+
+def test_window_causality_within_window(rng):
+    """Window position t must not see positions > kv_len + t: scrambling a
+    later draft's K/V cannot change an earlier position's output."""
+    b, h, kv, d, bs, nb, n, t = 1, 4, 2, 16, 8, 3, 12, 4
+    q = rng.standard_normal((b, t, h, d)).astype(np.float32)
+    kp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    vp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    bt = rng.permutation(n)[:nb].reshape(1, nb).astype(np.int32)
+    base = np.array([5], np.int32)
+    out1 = np.asarray(paged_window_attention_xla(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(base)))
+    # scramble the *last* window position's K/V slot (logical pos base+t-1)
+    pos = int(base[0]) + t - 1
+    kp2, vp2 = kp.copy(), vp.copy()
+    kp2[bt[0, pos // bs], pos % bs] = 1e3
+    vp2[bt[0, pos // bs], pos % bs] = -1e3
+    out2 = np.asarray(paged_window_attention_xla(
+        q, kp2, vp2, jnp.asarray(bt), jnp.asarray(base)))
+    np.testing.assert_array_equal(out1[:, :t - 1], out2[:, :t - 1])
+    assert np.abs(out1[:, t - 1] - out2[:, t - 1]).max() > 1.0
+
+
+@pytest.mark.parametrize("t", [1, 3])
+def test_window_padded_table_tail_is_inert(rng, t):
+    b, h, kv, d, bs, nb, n = 2, 4, 2, 16, 8, 4, 16
+    q = rng.standard_normal((b, t, h, d)).astype(np.float32)
+    kp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    vp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    bt = (1 + rng.permutation(n - 1)[:b * nb].reshape(b, nb)).astype(np.int32)
+    base = np.array([bs + 3 - t, 2 * bs - t], np.int32)
+    out1 = np.asarray(paged_window_attention_pallas(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(base), interpret=True))
+    bt2 = bt.copy()
+    bt2[:, 2:] = 0
+    kp2, vp2 = kp.copy(), vp.copy()
+    kp2[0] = 1e3
+    vp2[0] = -1e3
+    out2 = np.asarray(paged_window_attention_pallas(
+        q, kp2, vp2, jnp.asarray(bt2), jnp.asarray(base), interpret=True))
+    np.testing.assert_allclose(out1, out2, atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------- jit specialization bucketing
+
+def test_block_table_width_buckets_cap_compiles(rng):
+    """Block-table widths are padded to a power-of-two bucket *outside* the
+    jit boundary, so every width in one bucket shares one compilation —
+    without this the kernel respecializes per distinct nb."""
+    b, h, kv, d, bs, n = 2, 4, 2, 16, 8, 64
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    kp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    vp = rng.standard_normal((n, bs, kv, d)).astype(np.float32)
+    outs = {}
+    before = _paged_window_core._cache_size()
+    for nb in (5, 6, 7, 8):
+        bt = rng.permutation(n)[:b * nb].reshape(b, nb).astype(np.int32)
+        kv_len = np.minimum(np.array([nb * bs - 2, nb * bs], np.int32),
+                            nb * bs)
+        outs[nb] = paged_decode_attention_pallas(
+            q, kp, vp, jnp.asarray(bt), jnp.asarray(kv_len), interpret=True)
+    added = _paged_window_core._cache_size() - before
+    assert added == 1, f"nb in 5..8 should share one bucket, added {added}"
+    assert all(bucket_nb(nb) == 8 for nb in (5, 6, 7, 8))
+    # and the padding itself must be inert: bucketed result == exact result
+    nb = 5
+    bt = rng.permutation(n)[:b * nb].reshape(b, nb).astype(np.int32)
+    kv_len = np.array([nb * bs - 3, nb * bs], np.int32)
+    got = paged_decode_attention_pallas(
+        q, kp, vp, jnp.asarray(bt), jnp.asarray(kv_len), interpret=True)
+    ref = paged_decode_attention_reference(q, kp, vp, bt, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 def test_paged_reads_through_permuted_tables(rng):
