@@ -14,6 +14,7 @@ from repro.core import LengthPredictor, ResourceProfiler
 from repro.core.profiler import PredictorConfig
 from repro.core.types import DeviceNode
 from repro.data.workload import WorkloadConfig, train_pairs
+from repro.obs.export import metrics_payload, write_metrics
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -25,24 +26,19 @@ def emit(name: str, payload: dict):
 
 def persist(name: str, *, latency_s=None, p99_latency_s=None,
             throughput=None, utilization=None, slo_attainment=None,
-            extra: dict | None = None) -> dict:
-    """Write ``BENCH_<name>.json`` with the shared cross-PR schema so the
-    perf trajectory is machine-readable: every benchmark reports the same
-    latency / throughput / utilization / SLO fields (null where a harness
-    has no such axis) plus free-form ``extra`` detail."""
-    payload = {
-        "bench": name,
-        "schema": 1,
-        "latency_s": latency_s,
-        "p99_latency_s": p99_latency_s,
-        "throughput": throughput,
-        "utilization": utilization,
-        "slo_attainment": slo_attainment,
-        "extra": extra or {},
-    }
+            monitor: dict | None = None, extra: dict | None = None) -> dict:
+    """Write ``BENCH_<name>.json`` in the shared metrics schema
+    (``repro.obs.export.metrics_payload`` — the same payload ``serve.py
+    --metrics-json`` emits) so the perf trajectory is machine-readable:
+    every benchmark reports the same latency / throughput / utilization /
+    SLO fields (null where a harness has no such axis), an optional
+    ``Monitor.metrics()`` dict, and free-form ``extra`` detail."""
+    payload = metrics_payload(
+        name, latency_s=latency_s, p99_latency_s=p99_latency_s,
+        throughput=throughput, utilization=utilization,
+        slo_attainment=slo_attainment, monitor=monitor, extra=extra)
     ART.mkdir(parents=True, exist_ok=True)
-    (ART / f"BENCH_{name}.json").write_text(
-        json.dumps(payload, indent=1, default=str))
+    write_metrics(ART / f"BENCH_{name}.json", payload)
     return payload
 
 
@@ -72,10 +68,22 @@ def bench_cluster(memory: float = 7e9):
     return nodes, lat
 
 
-def timeit(fn, *args, n: int = 5, warmup: int = 2, **kw) -> float:
+def timeit_stats(fn, *args, n: int = 5, warmup: int = 2, **kw) -> dict:
+    """Per-call wall times after ``warmup`` discarded calls.  Reports min
+    (the noise floor — best proxy for the kernel's true cost on a shared
+    CPU) and median (typical); a single mean is hostage to one descheduled
+    outlier, which is exactly what CI boxes produce."""
     for _ in range(warmup):
         fn(*args, **kw)
-    t0 = time.perf_counter()
+    ts = []
     for _ in range(n):
+        t0 = time.perf_counter()
         fn(*args, **kw)
-    return (time.perf_counter() - t0) / n * 1e6   # µs
+        ts.append((time.perf_counter() - t0) * 1e6)   # µs
+    return {"min_us": float(np.min(ts)), "median_us": float(np.median(ts)),
+            "mean_us": float(np.mean(ts)), "n": n}
+
+
+def timeit(fn, *args, n: int = 5, warmup: int = 2, **kw) -> float:
+    """Median µs per call (see ``timeit_stats`` for min/median detail)."""
+    return timeit_stats(fn, *args, n=n, warmup=warmup, **kw)["median_us"]

@@ -13,11 +13,14 @@ regression fails ``benchmarks.run``):
   chunked+preempt — iteration-level scheduling must not change the math;
 * p99 inter-token decode latency strictly drops with chunking on the
   long/short mix;
-* the forced-pressure preemption run actually preempts.
+* the forced-pressure preemption run actually preempts;
+* tracing is free: a live Tracer leaves outputs token-identical and costs
+  <5% wall-clock (min-of-runs, alternated with untraced runs).
 """
 from __future__ import annotations
 
 import copy
+import time
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +30,7 @@ from benchmarks.common import csv_row, emit, persist
 from repro.configs import get_config
 from repro.core.types import Batch, Request
 from repro.models import api
+from repro.obs import NULL_TRACER, Tracer, check_invariants
 from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
                            PagedEngineConfig)
 
@@ -117,6 +121,33 @@ def run() -> dict:
             "forced-pressure run admitted without preempting — the "
             "eligibility/feasibility path regressed")
 
+    # tracing overhead: same warmed engine, tracer swapped per run,
+    # alternated so machine drift hits both modes equally; min-of-runs is
+    # the de-noised wall-clock each mode can achieve
+    tr = Tracer()
+    wall = {"off": [], "on": []}
+    res_tr = None
+    for _ in range(N_RUNS):
+        for mode, tracer in (("off", NULL_TRACER), ("on", tr)):
+            tr.clear()
+            eng_chunk.tracer = tracer
+            t0 = time.perf_counter()
+            res = eng_chunk.run_continuous([copy.copy(r) for r in reqs])
+            wall[mode].append(time.perf_counter() - t0)
+            if mode == "on":
+                res_tr = res
+    eng_chunk.tracer = NULL_TRACER
+    for r in reqs:
+        if res_tr.outputs[r.rid] != ref.outputs[r.rid]:
+            raise AssertionError(f"tracing changed outputs (rid {r.rid})")
+    bad = check_invariants(tr.events)
+    if bad:
+        raise AssertionError(f"trace invariants violated: {bad[:3]}")
+    overhead = min(wall["on"]) / max(min(wall["off"]), 1e-9) - 1.0
+    if overhead > 0.05:
+        raise AssertionError(
+            f"tracing overhead {overhead:.1%} exceeds the 5% budget")
+
     rows = {
         "whole_prompt": {
             "p99_itl_ms": round(p99_w * 1e3, 3),
@@ -136,11 +167,18 @@ def run() -> dict:
             "preempted_tokens": res_pre.preempted_tokens,
             "peak_blocks": res_pre.peak_blocks,
         },
+        "tracing": {
+            "overhead_pct": round(overhead * 100, 3),
+            "events": len(tr.events),
+            "wall_on_s": round(min(wall["on"]), 4),
+            "wall_off_s": round(min(wall["off"]), 4),
+        },
     }
     csv_row("interleave_p99_itl", p99_c * 1e6,
             f"whole_p99_us={p99_w*1e6:.0f},"
             f"reduction={1 - p99_c / p99_w:.3f},"
-            f"preemptions={res_pre.preemptions}")
+            f"preemptions={res_pre.preemptions},"
+            f"trace_overhead={overhead:.2%}")
     emit("interleave_bench", rows)
     persist("interleave", p99_latency_s=p99_c, extra=rows)
     return rows

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, emit, persist, timeit
+from benchmarks.common import csv_row, emit, persist, timeit_stats
 from repro.configs import get_config
 from repro.core.types import Batch
 from repro.data.workload import WorkloadConfig, gen_requests
@@ -29,19 +29,23 @@ def _kernel_micro(rows: dict) -> None:
     v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
     kl = jnp.full((b,), s, jnp.int32)
     f = jax.jit(lambda q, k, v, l: decode_attention_xla(q, k, v, l))
-    us_c = timeit(lambda: jax.block_until_ready(f(q, k, v, kl)), n=10)
+    st_c = timeit_stats(lambda: jax.block_until_ready(f(q, k, v, kl)), n=10)
+    us_c = st_c["median_us"]
 
     kp = jnp.asarray(rng.standard_normal((b * nb + 1, bs, kv, d)), jnp.float32)
     vp = jnp.asarray(rng.standard_normal((b * nb + 1, bs, kv, d)), jnp.float32)
     bt = jnp.asarray(1 + np.arange(b * nb).reshape(b, nb), jnp.int32)
     g = jax.jit(lambda q, kp, vp, bt, l: paged_decode_attention_xla(
         q, kp, vp, bt, l))
-    us_p = timeit(lambda: jax.block_until_ready(g(q, kp, vp, bt, kl)), n=10)
-    rows["decode_2k_contiguous"] = {"us": us_c}
-    rows["decode_2k_paged_xla"] = {"us": us_p,
+    st_p = timeit_stats(lambda: jax.block_until_ready(g(q, kp, vp, bt, kl)),
+                        n=10)
+    us_p = st_p["median_us"]
+    rows["decode_2k_contiguous"] = {"us": us_c, "min_us": st_c["min_us"]}
+    rows["decode_2k_paged_xla"] = {"us": us_p, "min_us": st_p["min_us"],
                                    "gather_overhead": us_p / max(us_c, 1e-9)}
     csv_row("paged_kernel_decode_2k", us_p,
-            f"contiguous_us={us_c:.1f},overhead_x={us_p/max(us_c,1e-9):.2f}")
+            f"min_us={st_p['min_us']:.1f},contiguous_us={us_c:.1f},"
+            f"overhead_x={us_p/max(us_c,1e-9):.2f}")
 
 
 def _engine_e2e(rows: dict) -> None:

@@ -106,6 +106,32 @@ print("cluster smoke:", res.summary())
 PY
 }
 
+traced_smoke() {
+    echo "== traced smoke (serve.py --paged --trace/--metrics-json) =="
+    python -m repro.launch.serve --paged --preempt --speculate \
+        --chunk-tokens 8 --requests 8 \
+        --trace /tmp/trace.json --metrics-json /tmp/m.json > /dev/null
+    python - <<'PY'
+import json
+from repro.obs.export import validate_metrics, validate_trace
+
+obj = json.load(open("/tmp/trace.json"))
+errs = validate_trace(obj)
+assert not errs, errs
+names = {e["name"] for e in obj["traceEvents"] if e["ph"] != "M"}
+need = {"queued", "admitted", "prefill_chunk", "finish"}
+assert need <= names, need - names
+metrics = json.load(open("/tmp/m.json"))
+errs = validate_metrics(metrics)
+assert not errs, errs
+mon = metrics["monitor"]
+for key in ("queue_wait", "ttft", "itl", "e2e"):
+    assert {"p50", "p95", "p99"} <= set(mon[key]), key
+print(f"traced smoke: {len(obj['traceEvents'])} events, "
+      f"p99_e2e={mon['e2e']['p99']:.3f}s (both artifacts valid)")
+PY
+}
+
 if [[ "${1:-}" == "kernels" ]]; then
     python -m pytest -q "${KERNEL_TESTS[@]}"
     exit 0
@@ -135,5 +161,6 @@ python -m pytest -q "${KERNEL_TESTS[@]}"
 interleave_smoke
 spec_smoke
 cluster_smoke
+traced_smoke
 
 echo "ci.sh: all green"

@@ -8,6 +8,7 @@ from dataclasses import dataclass, field
 
 from repro.core.profiler import ResourceProfiler
 from repro.core.types import Request
+from repro.obs.hist import Histogram
 
 
 @dataclass
@@ -36,18 +37,32 @@ class MonitorStats:
     prefix_cow_forks: int = 0
     # --- iteration-level scheduling gauges (chunked prefill + preemption,
     # fed by PagedEngine.run_continuous / simulate_continuous) ---
-    prefill_stall_s: float = 0.0   # prefill time run while >=1 slot decoded
     prefill_chunks: int = 0        # prefill calls issued (1/prompt unchunked)
     preemptions: int = 0           # residents evicted for tighter arrivals
     preempted_tokens: int = 0      # generated tokens recomputed after evict
+    # --- latency histograms (log-bucketed; p50/p95/p99 in metrics()) ---
+    # one per lifecycle phase so a violated SLO decomposes by where the
+    # time went, not just that it went
+    queue_wait: Histogram = field(default_factory=Histogram)
+    ttft: Histogram = field(default_factory=Histogram)
+    itl: Histogram = field(default_factory=Histogram)       # inter-token
+    prefill_stall: Histogram = field(default_factory=Histogram)  # per chunk
+    e2e: Histogram = field(default_factory=Histogram)
     # --- SLO accounting (one code path: engines, simulator, cluster) ---
     slo_observed: int = 0          # finished (or shed) requests with a deadline
     slo_violations: int = 0        # missed deadlines, shed requests included
     shed_requests: int = 0         # router admission-shed (never served)
-    # --- cluster gauges (latest snapshot from the cluster layer) ---
-    cluster_replicas: int = 0
-    cluster_queue_depths: list = field(default_factory=list)
-    cluster_utilizations: list = field(default_factory=list)
+    # --- cluster gauges (accumulated over every snapshot of the run, not
+    # last-writer-wins: the peak and mean are what capacity planning reads,
+    # and the final sample of a drained cluster is always zeros) ---
+    cluster_replicas: int = 0                 # latest accepting-replica count
+    cluster_queue_depths: list = field(default_factory=list)   # latest
+    cluster_utilizations: list = field(default_factory=list)   # latest
+    cluster_snapshots: int = 0
+    cluster_queue_peak: int = 0               # max per-replica depth seen
+    cluster_queue_mean_sum: float = 0.0       # sum of per-snapshot means
+    cluster_util_peak: float = 0.0            # max per-replica busy fraction
+    cluster_util_mean_sum: float = 0.0        # sum of per-snapshot means
     scale_up_events: int = 0
     scale_down_events: int = 0
 
@@ -78,6 +93,24 @@ class MonitorStats:
         return self.prefix_hits / self.prefix_lookups \
             if self.prefix_lookups else 0.0
 
+    @property
+    def prefill_stall_s(self) -> float:
+        """Total prefill time co-resident decoders sat out (the histogram's
+        sum — kept as a property so the old scalar key survives)."""
+        return self.prefill_stall.total
+
+    @property
+    def cluster_queue_mean(self) -> float:
+        """Mean (over snapshots) of the mean per-replica queue depth."""
+        return self.cluster_queue_mean_sum / self.cluster_snapshots \
+            if self.cluster_snapshots else 0.0
+
+    @property
+    def cluster_util_mean(self) -> float:
+        """Mean (over snapshots) of the mean per-replica busy fraction."""
+        return self.cluster_util_mean_sum / self.cluster_snapshots \
+            if self.cluster_snapshots else 0.0
+
 
 class Monitor:
     def __init__(self, profiler: ResourceProfiler, *, ewma: float = 0.1,
@@ -97,6 +130,21 @@ class Monitor:
         if met is not None:
             st.slo_observed += 1
             st.slo_violations += not met
+        # latency histograms: prefer the serving path's per-phase breakdown
+        # (obs.trace.LatencyBreakdown); fall back to the request stamps
+        lat = req.latency
+        if lat is not None:
+            st.e2e.record(lat)
+        bd = req.breakdown
+        if bd is not None:
+            st.queue_wait.record(bd.queue_wait_s)
+            if bd.ttft_s > 0 or req.first_token_time is not None:
+                st.ttft.record(bd.ttft_s)
+        else:
+            if req.start_time is not None:
+                st.queue_wait.record(max(0.0, req.start_time - req.arrival))
+            if req.ttft is not None:
+                st.ttft.record(req.ttft)
         true_bucket = int(self.profiler.predictor.length_to_bucket([true])[0])
         if req.predicted_bucket == true_bucket:
             st.bucket_hits += 1
@@ -147,15 +195,24 @@ class Monitor:
 
     def observe_interleave(self, *, stall_s: float = 0.0, chunks: int = 0,
                            preemptions: int = 0,
-                           preempted_tokens: int = 0) -> None:
+                           preempted_tokens: int = 0,
+                           stalls=(), itl=()) -> None:
         """Iteration-level scheduling gauges from a serving run: decode
         stall time imposed by prefill work, chunk count, and SLO-slack
-        preemption activity (evictions + recomputed tokens)."""
+        preemption activity (evictions + recomputed tokens).  ``stalls``
+        carries per-chunk stall durations and ``itl`` per-emission
+        inter-token gaps; both land in the latency histograms (a producer
+        without per-sample data may still pass the ``stall_s`` aggregate,
+        recorded as one sample)."""
         st = self.stats
-        st.prefill_stall_s += stall_s
         st.prefill_chunks += chunks
         st.preemptions += preemptions
         st.preempted_tokens += preempted_tokens
+        if len(stalls):
+            st.prefill_stall.record_many(stalls)
+        elif stall_s > 0:
+            st.prefill_stall.record(stall_s)
+        st.itl.record_many(itl)
 
     def observe_shed(self, req: Request) -> None:
         """A request the router refused (no replica could meet its SLO):
@@ -173,12 +230,25 @@ class Monitor:
             self.stats.scale_down_events += n
 
     def observe_replicas(self, queue_depths: list, utilizations: list) -> None:
-        """Latest cluster snapshot: one queue depth / busy-fraction gauge per
-        accepting replica."""
+        """One cluster snapshot: a queue depth / busy-fraction gauge per
+        accepting replica.  Keeps the latest sample *and* accumulates the
+        run's peak and mean — the final snapshot of a drained cluster is
+        always zeros, so last-writer-wins gauges understated every run."""
         st = self.stats
         st.cluster_replicas = len(queue_depths)
         st.cluster_queue_depths = list(queue_depths)
         st.cluster_utilizations = [round(u, 4) for u in utilizations]
+        st.cluster_snapshots += 1
+        if queue_depths:
+            st.cluster_queue_peak = max(st.cluster_queue_peak,
+                                        max(queue_depths))
+            st.cluster_queue_mean_sum += \
+                sum(queue_depths) / len(queue_depths)
+        if utilizations:
+            st.cluster_util_peak = max(st.cluster_util_peak,
+                                       max(utilizations))
+            st.cluster_util_mean_sum += \
+                sum(utilizations) / len(utilizations)
 
     def metrics(self) -> dict:
         st = self.stats
@@ -214,10 +284,20 @@ class Monitor:
             out["slo_violations"] = st.slo_violations
             out["slo_attainment"] = round(st.slo_attainment, 4)
             out["shed_requests"] = st.shed_requests
-        if st.cluster_replicas:
+        if st.cluster_snapshots or st.cluster_replicas:
             out["cluster_replicas"] = st.cluster_replicas
             out["cluster_queue_depths"] = st.cluster_queue_depths
             out["cluster_utilizations"] = st.cluster_utilizations
+            out["cluster_queue_peak"] = st.cluster_queue_peak
+            out["cluster_queue_mean"] = round(st.cluster_queue_mean, 4)
+            out["cluster_util_peak"] = round(st.cluster_util_peak, 4)
+            out["cluster_util_mean"] = round(st.cluster_util_mean, 4)
             out["scale_up_events"] = st.scale_up_events
             out["scale_down_events"] = st.scale_down_events
+        # per-phase latency quantiles (log-bucketed, <=4.5% relative error)
+        for key, h in (("queue_wait", st.queue_wait), ("ttft", st.ttft),
+                       ("itl", st.itl), ("e2e", st.e2e),
+                       ("prefill_stall", st.prefill_stall)):
+            if h.n:
+                out[key] = h.summary()
         return out

@@ -22,13 +22,24 @@ class Request:
     # --- bookkeeping ---
     start_time: Optional[float] = None
     finish_time: Optional[float] = None
+    first_token_time: Optional[float] = None   # TTFT numerator (run clock)
     generated: int = 0
+    # per-phase latency attribution (obs.trace.LatencyBreakdown), attached
+    # by the serving path at finish so SLO violations decompose by phase
+    breakdown: Optional[object] = None
 
     @property
     def latency(self) -> Optional[float]:
         if self.finish_time is None:
             return None
         return self.finish_time - self.arrival
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Arrival -> first emitted token (None until one is emitted)."""
+        if self.first_token_time is None:
+            return None
+        return max(0.0, self.first_token_time - self.arrival)
 
     @property
     def slo_met(self) -> Optional[bool]:

@@ -48,6 +48,8 @@ from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
                                  gen_requests, gen_shared_prefix_requests,
                                  train_pairs)
 from repro.models import api
+from repro.obs.export import export_trace, metrics_payload, write_metrics
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving import (AutoscalerConfig, EngineConfig, InferenceEngine,
                            PagedEngine, PagedEngineConfig, Replica, Router,
                            RouterConfig, get_drafter, paper_cluster,
@@ -66,7 +68,31 @@ def _make_drafter(args, cfg):
     return None
 
 
-def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
+def _write_artifacts(args, mon, tracer, *, latency_s=None, p99_latency_s=None,
+                     throughput=None, utilization=None) -> None:
+    """Export the request-lifecycle trace (``--trace``, Chrome/Perfetto JSON)
+    and the shared metrics payload (``--metrics-json`` — same schema the
+    benchmarks persist).  Latency quantiles default to the monitor's e2e
+    histogram when the caller has no direct measurement."""
+    st = mon.stats
+    if latency_s is None and st.e2e.n:
+        latency_s = st.e2e.total / st.e2e.n
+    if p99_latency_s is None and st.e2e.n:
+        p99_latency_s = st.e2e.quantile(0.99)
+    if args.trace:
+        obj = export_trace(tracer, args.trace)
+        print(f"trace: {len(obj['traceEvents'])} events -> {args.trace}")
+    if args.metrics_json:
+        payload = metrics_payload(
+            "serve", latency_s=latency_s, p99_latency_s=p99_latency_s,
+            throughput=throughput, utilization=utilization,
+            slo_attainment=st.slo_attainment if st.slo_observed else None,
+            monitor=mon.metrics())
+        write_metrics(args.metrics_json, payload)
+        print(f"metrics -> {args.metrics_json}")
+
+
+def _serve_cluster_live(args, cfg, params, mon, reqs, tracer) -> dict:
     """Route requests across N real PagedEngine-backed replicas, then serve
     each replica's share live (per-replica pool + prefix cache)."""
     max_prompt = max(len(r.tokens) for r in reqs)
@@ -88,7 +114,9 @@ def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
             spec_tokens=args.spec_tokens,
             spec_acceptance=SPEC_ACCEPT_PRIOR if args.spec_tokens else 0.0,
             engine=PagedEngine(cfg, params, pcfg, monitor=mon,
-                               drafter=_make_drafter(args, cfg))))
+                               drafter=_make_drafter(args, cfg),
+                               tracer=tracer, track=i),
+            tracer=tracer))
     for r in sorted(reqs, key=lambda q: q.arrival):
         rep = router.dispatch(r, replicas, r.arrival)
         if rep is None:
@@ -113,7 +141,7 @@ def _serve_cluster_live(args, cfg, params, mon, reqs) -> dict:
     return done
 
 
-def _serve_cluster_sim(args, prof, mon) -> None:
+def _serve_cluster_sim(args, prof, mon, tracer) -> None:
     """Cluster-scale path: LatencyModel-backed replicas on per-replica HELR
     deployments, driven by the discrete-event simulator."""
     full_cfg = get_config(args.arch)
@@ -139,7 +167,7 @@ def _serve_cluster_sim(args, prof, mon) -> None:
         prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens,
         preempt=args.preempt, spec_tokens=args.spec_tokens,
         spec_acceptance=SPEC_ACCEPT_PRIOR if args.spec_tokens else 0.0,
-        profiler=prof, monitor=mon)
+        profiler=prof, monitor=mon, tracer=tracer)
     print("cluster:", res.summary())
     for s in res.replica_stats:
         print(f"  replica {s['rid']}: served={s['served']} "
@@ -203,6 +231,12 @@ def main():
     ap.add_argument("--kv-budget", type=float, default=2e6,
                     help="paged KV pool budget in bytes (shared with SLO-ODBS)")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the request-lifecycle trace as Chrome/"
+                         "Perfetto JSON (load in ui.perfetto.dev)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write final metrics (incl. latency quantiles) as "
+                         "JSON in the shared benchmark schema")
     args = ap.parse_args()
     if args.autoscale and args.paged:
         raise SystemExit("--autoscale needs the simulated cluster path: "
@@ -211,6 +245,8 @@ def main():
             and not (args.replicas > 1 or args.autoscale):
         args.paged = True          # cluster sim path honors the flags itself
     args.spec_tokens = args.spec_tokens if args.speculate else 0
+
+    tracer = Tracer() if args.trace else NULL_TRACER
 
     if args.chunk_tokens < 0:
         args.chunk_tokens = derive_chunk_tokens(SchedulerConfig(),
@@ -232,8 +268,9 @@ def main():
         pred.fit(toks, lens, epochs=8)
         prof = ResourceProfiler(pred, get_config(args.arch))
         mon = Monitor(prof)
-        _serve_cluster_sim(args, prof, mon)
+        _serve_cluster_sim(args, prof, mon, tracer)
         print("monitor:", mon.metrics())
+        _write_artifacts(args, mon, tracer)
         return
 
     params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
@@ -268,7 +305,7 @@ def main():
 
     t0 = time.perf_counter()
     if args.replicas > 1 and args.paged:
-        done = _serve_cluster_live(args, cfg, params, mon, reqs)
+        done = _serve_cluster_live(args, cfg, params, mon, reqs, tracer)
     elif args.paged:
         # size the block tables for the longest admitted prompt plus the
         # decode budget so any --max-new value is admissible
@@ -288,7 +325,7 @@ def main():
               f"preempt={'on' if pcfg.preempt else 'off'}, "
               f"speculate={pcfg.spec_tokens or 'off'})")
         paged = PagedEngine(cfg, params, pcfg, monitor=mon,
-                            drafter=_make_drafter(args, cfg))
+                            drafter=_make_drafter(args, cfg), tracer=tracer)
         res = paged.run_continuous(sorted(reqs, key=lambda r: r.arrival))
         done = res.outputs
         print(f"paged: {res.admission_waves} admission waves, "
@@ -330,6 +367,7 @@ def main():
     print(f"served {len(done)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s on CPU)")
     print("monitor:", mon.metrics())
+    _write_artifacts(args, mon, tracer, throughput=total / dt)
 
 
 if __name__ == "__main__":

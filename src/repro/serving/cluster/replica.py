@@ -34,6 +34,8 @@ from typing import Callable, Optional, Sequence
 from repro.configs.base import ModelConfig
 from repro.core.deployer import helr
 from repro.core.types import DeviceNode, Request
+from repro.obs.trace import (NULL_TRACER, ROW_QUEUE, LatencyBreakdown,
+                             Tracer)
 from repro.serving.prefix_cache import RadixBlockTree
 from repro.serving.simulator import LatencyModel
 
@@ -76,7 +78,8 @@ class Replica:
                  max_tree_nodes: int = 65536,
                  chunk_tokens: int = 0, preempt: bool = False,
                  spec_tokens: int = 0, spec_acceptance: float = 0.0,
-                 spawned_at: float = 0.0, engine=None):
+                 spawned_at: float = 0.0, engine=None,
+                 tracer: Optional[Tracer] = None):
         self.rid = rid
         self.model_cfg = model_cfg
         model_mem = model_mem or model_cfg.param_count() * 2.0
@@ -109,6 +112,10 @@ class Replica:
         self.retired_at: Optional[float] = None
         self.stats = ReplicaStats()
         self._net_prefill: dict[int, int] = {}   # rid -> uncached prompt len
+        # lifecycle tracing: this replica's events land on track ``rid``
+        # (one Perfetto process per replica); disabled tracer = no-op
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._qstart: dict[int, float] = {}      # rid -> enqueue time
 
     # ------------------------------------------------------------- liveness
     @property
@@ -261,6 +268,7 @@ class Replica:
         self._net_prefill[r.rid] = r.input_len - hit
         self.stats.prefill_tokens_saved += hit
         self.stats.prefix_hit_requests += hit > 0
+        self._qstart[r.rid] = now
         self.queue.append(r)
 
     # ------------------------------------------------------------ execution
@@ -303,9 +311,34 @@ class Replica:
                     n, steps, in_len + step_start + steps / 2)
                 step_start = r.true_output_len
             r.start_time = now
+            r.first_token_time = now + t_pre
             r.finish_time = t_cursor
+            q0 = self._qstart.pop(r.rid, r.arrival)
+            bd = LatencyBreakdown(
+                queue_wait_s=max(0.0, now - q0), prefill_s=t_pre,
+                ttft_s=max(0.0, r.first_token_time - r.arrival),
+                decode_s=max(0.0, t_cursor - r.first_token_time),
+                e2e_s=r.latency or 0.0)
+            r.breakdown = bd
+            if self.tracer.enabled:
+                self.tracer.span("queued", min(q0, now), now,
+                                 track=self.rid, row=ROW_QUEUE,
+                                 args={"rid": r.rid})
+                self.tracer.instant("admitted", now, track=self.rid,
+                                    args={"rid": r.rid})
+                self.tracer.instant("finish", t_cursor, track=self.rid,
+                                    args={"rid": r.rid,
+                                          "slo_met": r.slo_met})
             if monitor is not None:
                 monitor.observe(r)
+        if self.tracer.enabled:
+            self.tracer.span("batch_prefill", now, now + t_pre,
+                             track=self.rid,
+                             args={"batch": n, "tokens": pre_len})
+            self.tracer.span("batch_decode", now + t_pre, t_cursor,
+                             track=self.rid,
+                             args={"batch": n,
+                                   "tokens": b.true_padded_output})
         st = self.stats
         st.batches += 1
         st.served += n

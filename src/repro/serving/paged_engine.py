@@ -51,6 +51,8 @@ from repro.core.monitor import Monitor
 from repro.core.types import Request
 from repro.models import api
 from repro.serving.engine import BatchResult
+from repro.obs.trace import (NULL_TRACER, ROW_QUEUE, LatencyBreakdown,
+                             Tracer, slot_row)
 from repro.serving.kv_cache import BlockAllocator
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.sampling import greedy
@@ -176,6 +178,9 @@ class PrefillProgress:
     """Host-side cursor of one slot's (possibly chunked) prefill."""
     prompt: list                  # tokens to prefill (prompt [+ recompute])
     done: int                     # tokens whose K/V already sits in the pool
+    recompute_from: Optional[int] = None
+    #   prompt index where replayed (previously generated) tokens start —
+    #   chunk time past it is recompute, not first-pass prefill
     resume_tok: Optional[int] = None
     #   preempt-and-recompute: the next input token is already known (the
     #   last token emitted before eviction) — completion restores it instead
@@ -277,6 +282,8 @@ class PagedEngine:
                  plan: Optional[ShardingPlan] = None,
                  monitor: Optional[Monitor] = None,
                  drafter=None,
+                 tracer: Optional[Tracer] = None,
+                 track: int = 0,
                  dtype=jnp.float32):
         ok, why = api.paged_compatible(cfg)
         if not ok:
@@ -286,6 +293,11 @@ class PagedEngine:
         self.pcfg = pcfg
         self.plan = plan
         self.monitor = monitor
+        # lifecycle tracing: a disabled tracer is a no-op at every call, so
+        # the engine holds one unconditionally; ``track`` is the replica id
+        # this engine's events land on (chrome pid)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.track = track
         self.dtype = dtype
         # speculative decoding: drafter + the one-pass verify step scoring
         # the K drafts and the current input token together
@@ -443,6 +455,16 @@ class PagedEngine:
         r = st.active[slot]
         res.preemptions += 1
         res.preempted_tokens += len(outs[r.rid])
+        now = time.perf_counter() - self._serve_t0
+        bd = self._bd.get(r.rid)
+        if bd is not None:
+            bd.preemptions += 1
+        self._qstart[r.rid] = now        # requeue: a fresh queued interval
+        if self.tracer.enabled:
+            self.tracer.instant("preempt", now, track=self.track,
+                                row=slot_row(slot),
+                                args={"rid": r.rid,
+                                      "tokens": len(outs[r.rid])})
         if self.drafter is not None:
             self.drafter.release(slot)
         st.free_slot(slot)
@@ -499,6 +521,12 @@ class PagedEngine:
                 if n_evict and self.can_admit(st, head, budget, outs):
                     pick = 0
             if pick is None:
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "admission_reject",
+                        time.perf_counter() - self._serve_t0,
+                        track=self.track,
+                        args={"rid": queue[0].rid, "queued": len(queue)})
                 break
             if pick:
                 res.hol_skips += 1
@@ -506,6 +534,19 @@ class PagedEngine:
             slot = min(s for s in range(self.pcfg.max_batch)
                        if st.active[s] is None)
             st.active[slot] = r
+            now = time.perf_counter() - self._serve_t0
+            if r.start_time is None:
+                r.start_time = max(r.arrival, now)
+            bd = self._bd.setdefault(r.rid, LatencyBreakdown())
+            qt0 = self._qstart.pop(r.rid, r.arrival)
+            bd.queue_wait_s += max(0.0, now - qt0)
+            if self.tracer.enabled:
+                self.tracer.span("queued", min(qt0, now), now,
+                                 track=self.track, row=ROW_QUEUE,
+                                 args={"rid": r.rid})
+                self.tracer.instant("admitted", now, track=self.track,
+                                    row=slot_row(slot),
+                                    args={"rid": r.rid, "hol_skip": pick})
             self._begin_prefill(st, slot, r, outs, res)
             if not self._chunk:
                 while slot in st.prefilling:
@@ -566,11 +607,20 @@ class PagedEngine:
                         st.pools = self._cow_copy(
                             st.pools, jnp.int32(m.tail.block), jnp.int32(new))
                         res.cow_forks += 1
+                        if self.tracer.enabled:
+                            self.tracer.instant(
+                                "cow_fork",
+                                time.perf_counter() - self._serve_t0,
+                                track=self.track, row=slot_row(slot),
+                                args={"rid": r.rid, "src": m.tail.block,
+                                      "dst": new})
         st.ensure_blocks(slot, ln, bs)
         table = st.alloc.tables[slot]
         st.block_tables[slot, :len(table)] = table
-        st.prefilling[slot] = PrefillProgress(prompt=prompt, done=p_len,
-                                              resume_tok=resume)
+        st.prefilling[slot] = PrefillProgress(
+            prompt=prompt, done=p_len,
+            recompute_from=len(r.tokens) if gen else None,
+            resume_tok=resume)
 
     def _run_chunk(self, st: PagedDecodeState, slot: int, outs: dict,
                    res: PagedBatchResult) -> bool:
@@ -585,6 +635,8 @@ class PagedEngine:
         table = st.alloc.tables[slot]
         remaining = ln - pg.done
         sn = remaining if not self._chunk else min(remaining, self._chunk)
+        start = pg.done
+        tc0 = time.perf_counter()
         cl = self._padded_len(sn)
         toks = np.zeros((1, cl), np.int32)
         toks[0, :sn] = prompt[pg.done:pg.done + sn]
@@ -607,6 +659,7 @@ class PagedEngine:
         res.prefill_tokens += cl
         res.prefill_chunks += 1
         if pg.done < ln:
+            self._chunk_telemetry(r, pg, slot, start, sn, tc0)
             return False
         del st.prefilling[slot]
         st.kv_len[slot] = ln
@@ -620,12 +673,40 @@ class PagedEngine:
             first = int(np.asarray(greedy(logits, self.cfg.vocab_size))[0])
             st.cur_tok[slot] = first
             outs[r.rid] = [first]
+            r.first_token_time = max(
+                r.arrival, time.perf_counter() - self._serve_t0)
+            bd = self._bd.get(r.rid)
+            if bd is not None:
+                bd.ttft_s = max(0.0, r.first_token_time - r.arrival)
         # reset the slot's inter-token stamp: None marks a fresh sequence,
         # so neither a previous occupant's stale stamp nor the wave-start
         # first-token gap (TTFT, with its one-time sync costs) pollutes the
         # decode-gap series — gaps count between consecutive decode steps
         self._last_emit[slot] = None
+        self._chunk_telemetry(r, pg, slot, start, sn, tc0)
         return True
+
+    def _chunk_telemetry(self, r: Request, pg: PrefillProgress, slot: int,
+                         start: int, sn: int, tc0: float) -> None:
+        """Per-chunk latency attribution + trace span: chunk wall time lands
+        in the request's breakdown (split into first-pass prefill vs replayed
+        recompute by token overlap) and on the slot's timeline row."""
+        tc1 = time.perf_counter()
+        dt = tc1 - tc0
+        bd = self._bd.get(r.rid)
+        if bd is not None:
+            bd.prefill_s += dt
+            rf, ln = pg.recompute_from, len(pg.prompt)
+            if rf is not None and sn:
+                rec = max(0, min(start + sn, ln) - max(start, rf))
+                bd.recompute_s += dt * rec / sn
+        if self.tracer.enabled:
+            self.tracer.span(
+                "prefill_chunk", tc0 - self._serve_t0, tc1 - self._serve_t0,
+                track=self.track, row=slot_row(slot),
+                args={"rid": r.rid, "tokens": sn, "done": pg.done,
+                      "total": len(pg.prompt),
+                      "recompute": pg.recompute_from is not None})
 
     # ------------------------------------------------------------ speculative
     def _spec_step(self, st: PagedDecodeState, decoding: list, outs: dict,
@@ -645,6 +726,7 @@ class PagedEngine:
         bs = self.pcfg.block_size
         b = self.pcfg.max_batch
         t_w = self.pcfg.spec_tokens + 1
+        ts0 = time.perf_counter()
         bt, kv, ct = st.masked_decode_view()
         win_eff = np.zeros(b, np.int32)
         for slot in decoding:
@@ -688,6 +770,15 @@ class PagedEngine:
                 gap = (now - prev) / n_emit
                 res.inter_token_s.extend([gap] * n_emit)
             self._last_emit[slot] = now
+            if self.tracer.enabled:
+                # a window of 1 (no drafts proposed) is a plain decode
+                # iteration routed through the verify kernel — name it so
+                self.tracer.span(
+                    "verify" if k_eff > 0 else "decode",
+                    ts0 - self._serve_t0, now - self._serve_t0,
+                    track=self.track, row=slot_row(slot),
+                    args={"rid": r.rid, "drafted": k_eff, "accepted": j,
+                          "emitted": n_emit})
 
     # ------------------------------------------------------------------ serve
     def run_continuous(self, requests: list, *,
@@ -720,6 +811,9 @@ class PagedEngine:
         peak_live = -1
         peak_pool_stats: Optional[dict] = None
         self._last_emit = {}                  # slot -> last emission stamp
+        self._bd = {}                         # rid -> LatencyBreakdown
+        self._qstart = {r.rid: r.arrival for r in requests}
+        self._stalls: list = []               # per-chunk decode-stall samples
         rr = 0                                # chunk round-robin cursor
         # _admit accrues res.prefill_s itself (mid-run waves included);
         # decode_s is the remainder of the serving wall clock
@@ -767,6 +861,7 @@ class PagedEngine:
                 res.prefill_s += dt
                 if had_decoders:
                     res.prefill_stall_s += dt
+                    self._stalls.append(dt)
             decoding = st.decoding_slots()
             # just-admitted (or just-completed-prefill) sequences may already
             # be at their stop count — let the fixpoint retire them before
@@ -859,6 +954,7 @@ class PagedEngine:
                 self._spec_step(st, decoding, outs, res, drafts, win)
                 steps += 1
                 continue
+            td0 = time.perf_counter()
             bt, kv, ct = st.masked_decode_view()
             logits, st.pools = self._decode(
                 self.params, jnp.asarray(ct)[:, None], st.pools,
@@ -875,6 +971,12 @@ class PagedEngine:
                 if prev is not None:
                     res.inter_token_s.append(now - prev)
                 self._last_emit[slot] = now
+                if self.tracer.enabled:
+                    self.tracer.span(
+                        "decode", td0 - self._serve_t0,
+                        now - self._serve_t0, track=self.track,
+                        row=slot_row(slot),
+                        args={"rid": r.rid, "token": int(nxt[slot])})
         jax.block_until_ready(st.pools)
         res.decode_s = time.perf_counter() - t_total - res.prefill_s
         res.steps = steps
@@ -904,7 +1006,8 @@ class PagedEngine:
             self.monitor.observe_interleave(
                 stall_s=res.prefill_stall_s, chunks=res.prefill_chunks,
                 preemptions=res.preemptions,
-                preempted_tokens=res.preempted_tokens)
+                preempted_tokens=res.preempted_tokens,
+                stalls=self._stalls, itl=res.inter_token_s)
         return res
 
     def _finish(self, st: PagedDecodeState, slot: int, r: Request,
@@ -929,5 +1032,18 @@ class PagedEngine:
             # a much faster replay degenerates to latency 0 (SLO met)
             r.finish_time = max(r.arrival,
                                 time.perf_counter() - self._serve_t0)
+        bd = self._bd.pop(r.rid, None)
+        if bd is not None:
+            bd.e2e_s = r.latency or 0.0
+            if r.first_token_time is not None:
+                bd.decode_s = max(0.0, r.finish_time - r.first_token_time)
+            r.breakdown = bd
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "finish", max(r.arrival,
+                              time.perf_counter() - self._serve_t0),
+                track=self.track, row=slot_row(slot),
+                args={"rid": r.rid, "tokens": len(outs[r.rid]),
+                      "slo_met": r.slo_met})
         if self.monitor is not None:
             self.monitor.observe(r)

@@ -29,6 +29,8 @@ from repro.core.monitor import Monitor
 from repro.core.profiler import ResourceProfiler
 from repro.core.scheduler import SchedulerConfig
 from repro.core.types import Batch, DeviceMap, DeviceNode, Request
+from repro.obs.trace import (NULL_TRACER, ROW_QUEUE, LatencyBreakdown,
+                             Tracer, slot_row)
 
 
 # ------------------------------------------------------ paper's cluster (T2)
@@ -306,6 +308,7 @@ def simulate(
                 t_cursor += steps * tt
                 step_start = r.true_output_len
             r.start_time = t
+            r.first_token_time = t + t_pre
             r.finish_time = t_cursor
             if monitor is not None:
                 monitor.observe(r)
@@ -416,6 +419,8 @@ def simulate_continuous(
     n_blocks: int = 4096,
     spec_tokens: int = 0,
     spec_acceptance: float = 0.0,
+    tracer: Optional[Tracer] = None,
+    track: int = 0,
 ) -> ContinuousSimResult:
     """Iteration-level continuous-batching simulation on one replica — the
     analytic twin of ``PagedEngine.run_continuous``.
@@ -440,8 +445,13 @@ def simulate_continuous(
     over the K+1-token window (compute × window, one shared HBM sweep —
     ``LatencyModel.token_time(q_tokens=...)``) and emits
     ``spec_speedup(K, a)`` expected tokens, carried per-resident as
-    fractional credit so the accounting is deterministic."""
+    fractional credit so the accounting is deterministic.
+
+    ``tracer`` records the same span schema as the live engine (queued /
+    prefill_chunk / decode / verify / preempt / finish on the same
+    queue/slot rows), so a simulated and a live timeline diff directly."""
     from repro.core.scheduler import spec_speedup as _speedup
+    tracer = tracer if tracer is not None else NULL_TRACER
     if nodes is None:
         nodes, latency = paper_cluster()
     model_mem = model_mem or model_cfg.param_count() * 2.0
@@ -468,17 +478,26 @@ def simulate_continuous(
                              f"pool has {usable} usable")
 
     class _Entry:
-        __slots__ = ("r", "pre_rem", "out_done", "last_emit", "credit")
+        __slots__ = ("r", "pre_rem", "out_done", "last_emit", "credit",
+                     "slot", "pre_total", "recompute")
 
-        def __init__(self, r: Request, pre_rem: int, out_done: int):
+        def __init__(self, r: Request, pre_rem: int, out_done: int,
+                     slot: int):
             self.r, self.pre_rem, self.out_done = r, pre_rem, out_done
             self.last_emit: Optional[float] = None
             self.credit = 0.0          # fractional speculative emissions
+            self.slot = slot           # timeline row (engine slot analogue)
+            self.pre_total = max(1, pre_rem)
+            self.recompute = max(0, out_done - 1)   # replayed tokens
 
     res = ContinuousSimResult(requests=reqs, makespan=0.0)
     gen_sofar: dict[int, int] = {}             # rid -> tokens already emitted
     inflight: list[_Entry] = []
     pending: list[Request] = []
+    free_slots = list(range(max_batch))        # min-slot assignment, engine-like
+    qstart = {r.rid: r.arrival for r in reqs}  # rid -> queue-entry time
+    bds: dict[int, LatencyBreakdown] = {}      # rid -> breakdown
+    stalls: list = []                          # per-chunk decode-stall samples
     t, i = 0.0, 0
 
     def reserved() -> int:
@@ -492,6 +511,10 @@ def simulate_continuous(
             need = worst_blocks(cand, gen)
             if reserved() + need > usable:
                 if not preempt:
+                    if tracer.enabled:
+                        tracer.instant("admission_reject", t, track=track,
+                                       args={"rid": cand.rid,
+                                             "queued": len(pending)})
                     break
                 slack_c = cand.arrival + cand.slo - t
                 decoding = [e for e in inflight if e.pre_rem == 0]
@@ -500,19 +523,43 @@ def simulate_continuous(
                              default=None)
                 if victim is None or \
                         victim.r.arrival + victim.r.slo - t <= slack_c:
+                    if tracer.enabled:
+                        tracer.instant("admission_reject", t, track=track,
+                                       args={"rid": cand.rid,
+                                             "queued": len(pending)})
                     break
                 inflight.remove(victim)
+                free_slots.append(victim.slot)
                 gen_sofar[victim.r.rid] = victim.out_done
                 res.preemptions += 1
                 res.preempted_tokens += victim.out_done
+                qstart[victim.r.rid] = t
+                vbd = bds.get(victim.r.rid)
+                if vbd is not None:
+                    vbd.preemptions += 1
+                if tracer.enabled:
+                    tracer.instant("preempt", t, track=track,
+                                   row=slot_row(victim.slot),
+                                   args={"rid": victim.r.rid,
+                                         "tokens": victim.out_done})
                 pending.insert(1, victim.r)
                 continue
             pending.pop(0)
             if cand.start_time is None:
                 cand.start_time = t
+            slot = min(free_slots)
+            free_slots.remove(slot)
+            bd = bds.setdefault(cand.rid, LatencyBreakdown())
+            q0 = qstart.pop(cand.rid, cand.arrival)
+            bd.queue_wait_s += max(0.0, t - q0)
+            if tracer.enabled:
+                tracer.span("queued", min(q0, t), t, track=track,
+                            row=ROW_QUEUE, args={"rid": cand.rid})
+                tracer.instant("admitted", t, track=track,
+                               row=slot_row(slot), args={"rid": cand.rid})
             # recompute prefix: prompt + all-but-last generated token
             inflight.append(_Entry(cand, cand.input_len + max(0, gen - 1),
-                                   gen))
+                                   gen, slot))
 
     while i < len(reqs) or pending or inflight:
         while i < len(reqs) and reqs[i].arrival <= t:
@@ -524,9 +571,12 @@ def simulate_continuous(
                 t = max(t, reqs[i].arrival)
                 continue
             break
+        t_iter0 = t
         t_pre = 0.0
         prefilling = [e for e in inflight if e.pre_rem > 0]
         completed: Optional[_Entry] = None
+        chunked: Optional[_Entry] = None
+        chunk_n = 0
         if prefilling:
             e = prefilling[0]
             c = e.pre_rem if chunk_tokens <= 0 else min(chunk_tokens,
@@ -534,6 +584,11 @@ def simulate_continuous(
             t_pre = lm.prefill_time(1, c)
             e.pre_rem -= c
             res.prefill_chunks += 1
+            chunked, chunk_n = e, c
+            bd = bds.get(e.r.rid)
+            if bd is not None:
+                bd.prefill_s += t_pre
+                bd.recompute_s += t_pre * e.recompute / e.pre_total
             if e.pre_rem == 0:
                 completed = e
         decoding = [e for e in inflight
@@ -545,9 +600,21 @@ def simulate_continuous(
             t_dec = lm.token_time(len(decoding), kv,
                                   q_tokens=spec_tokens + 1)
             res.prefill_stall_s += t_pre
+            if t_pre > 0:
+                stalls.append(t_pre)
         t_iter = t_pre + t_dec
         t += t_iter
         res.steps += 1
+        if tracer.enabled:
+            if chunked is not None:
+                tracer.span("prefill_chunk", t_iter0, t_iter0 + t_pre,
+                            track=track, row=slot_row(chunked.slot),
+                            args={"rid": chunked.r.rid, "tokens": chunk_n,
+                                  "remaining": chunked.pre_rem})
+            dec_name = "verify" if spec_tokens > 0 else "decode"
+            for e in decoding:
+                tracer.span(dec_name, t_iter0 + t_pre, t, track=track,
+                            row=slot_row(e.slot), args={"rid": e.r.rid})
         if completed is not None and completed.out_done == 0:
             # first token out of prefill; a recompute completion (out_done
             # carried over from before eviction) restores the resume token
@@ -555,6 +622,10 @@ def simulate_continuous(
             completed.out_done += 1
             completed.last_emit = t
             res.emitted_tokens += 1
+            completed.r.first_token_time = t
+            bd = bds.get(completed.r.rid)
+            if bd is not None:
+                bd.ttft_s = max(0.0, t - completed.r.arrival)
         exp_extra = _speedup(spec_tokens, spec_acceptance) - 1.0
         for e in decoding:
             n_emit = 1
@@ -575,7 +646,19 @@ def simulate_continuous(
                 if e.out_done >= min(e.r.true_output_len, max_new)]
         for e in done:
             inflight.remove(e)
+            free_slots.append(e.slot)
             e.r.finish_time = t
+            bd = bds.pop(e.r.rid, None)
+            if bd is not None:
+                bd.e2e_s = e.r.latency or 0.0
+                if e.r.first_token_time is not None:
+                    bd.decode_s = max(0.0, t - e.r.first_token_time)
+                e.r.breakdown = bd
+            if tracer.enabled:
+                tracer.instant("finish", t, track=track,
+                               row=slot_row(e.slot),
+                               args={"rid": e.r.rid, "tokens": e.out_done,
+                                     "slo_met": e.r.slo_met})
             if monitor is not None:
                 monitor.observe(e.r)
     res.makespan = t
@@ -583,7 +666,8 @@ def simulate_continuous(
         monitor.observe_interleave(
             stall_s=res.prefill_stall_s, chunks=res.prefill_chunks,
             preemptions=res.preemptions,
-            preempted_tokens=res.preempted_tokens)
+            preempted_tokens=res.preempted_tokens,
+            stalls=stalls, itl=res.inter_token_s)
     return res
 
 
@@ -712,6 +796,7 @@ def simulate_cluster(
     preempt: bool = False,
     spec_tokens: int = 0,
     spec_acceptance: float = 0.0,
+    tracer: Optional[Tracer] = None,
 ) -> ClusterSimResult:
     """Discrete-event simulation of a replicated cluster: arrivals are
     routed on landing (``router``: a policy name, RouterConfig, or Router),
@@ -738,6 +823,7 @@ def simulate_cluster(
     from repro.serving.cluster import (Autoscaler, Replica, Router,
                                        RouterConfig)
 
+    tracer = tracer if tracer is not None else NULL_TRACER
     if isinstance(router, str):
         router = Router(RouterConfig(policy=router))
     elif isinstance(router, RouterConfig):
@@ -763,7 +849,8 @@ def simulate_cluster(
                       block_size=block_size, n_blocks=n_blocks,
                       prefix_cache=prefix_cache, chunk_tokens=chunk_tokens,
                       preempt=preempt, spec_tokens=spec_tokens,
-                      spec_acceptance=spec_acceptance, spawned_at=now)
+                      spec_acceptance=spec_acceptance, spawned_at=now,
+                      tracer=tracer)
         rep.partition = pi
         replicas.append(rep)
         return rep
@@ -826,9 +913,16 @@ def simulate_cluster(
             rep = router.dispatch(obj, replicas, t)
             if rep is None:
                 shed.append(obj)
+                if tracer.enabled:
+                    tracer.instant("shed", t, track=0, row=ROW_QUEUE,
+                                   args={"rid": obj.rid})
                 if monitor is not None:
                     monitor.observe_shed(obj)
             else:
+                if tracer.enabled:
+                    tracer.instant("route", t, track=rep.rid,
+                                   args={"rid": obj.rid,
+                                         "policy": router.cfg.policy})
                 rep.enqueue(obj, t)
                 maybe_start(rep, t)
         elif kind == "done":
@@ -859,6 +953,10 @@ def simulate_cluster(
                 for _ in range(order):
                     pending_spawns += 1
                     push(t + autoscale.spawn_delay, "spawn")
+                if tracer.enabled:
+                    tracer.instant("scale_up", t, track=0,
+                                   args={"want": want,
+                                         "have": effective})
                 if monitor is not None:
                     monitor.observe_scale(+1, want - effective)
             elif want < len(accepting):
@@ -868,6 +966,10 @@ def simulate_cluster(
                     rep.draining = True
                     if rep.idle and rep.busy_until <= t:
                         retire(rep, t)
+                if tracer.enabled:
+                    tracer.instant("scale_down", t, track=0,
+                                   args={"want": want,
+                                         "have": len(accepting)})
                 if monitor is not None:
                     monitor.observe_scale(-1, len(accepting) - want)
             if monitor is not None:
