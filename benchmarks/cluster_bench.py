@@ -1,7 +1,8 @@
 """Cluster-serving benchmark: router-policy ablation + autoscaler vs static
-provisioning (EXPERIMENTS.md §Perf design record).
+provisioning + closed-loop cost calibration (EXPERIMENTS.md §Perf design
+record, §Observability calibration).
 
-Two claims, enforced with assertions so regressions fail ``benchmarks.run``:
+Three claims, enforced with assertions so regressions fail ``benchmarks.run``:
 
 * **Routing** — at equal replica count on a multi-turn shared-prefix
   workload, ``prefix_affinity`` and ``slo_aware`` beat ``round_robin`` on
@@ -16,10 +17,22 @@ Two claims, enforced with assertions so regressions fail ``benchmarks.run``:
   spending fewer replica-seconds (it drains the quiet valleys and
   overshoots the static count inside bursts — elasticity buys burst
   capacity static provisioning pays for all day).
+* **Calibration** — with every replica's *pricing* model deliberately
+  miscalibrated (analytic efficiency scaled 2x off; execution physics
+  untouched), routing/shedding decisions diverge from the well-calibrated
+  anchor and the autoscaler over-provisions (halved believed capacity
+  means earlier scale-up and later scale-down).  One measurement pass
+  feeds a ``CostProfiler`` from the span stream; re-running with the
+  miscalibrated model wrapped in ``CalibratedLatencyModel`` restores SLO
+  attainment to within 0.01 of the anchor and recovers part of the
+  autoscaler's replica-seconds over-spend.  The profiler must also flag
+  the miscalibration itself (``profile_drift``: predicted-vs-observed
+  ratio EMA leaves the tolerance band).
 """
 from __future__ import annotations
 
 import copy
+import dataclasses
 
 from benchmarks.common import csv_row, emit, persist
 from repro.configs import get_config
@@ -27,10 +40,12 @@ from repro.core import get_scheduler
 from repro.core.scheduler import SchedulerConfig
 from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
                                  gen_requests, gen_shared_prefix_requests)
+from repro.obs import CalibratedLatencyModel, CostProfiler, Tracer
 from repro.serving import AutoscalerConfig, simulate_cluster
 from repro.serving.cluster import RouterConfig
 
 N_REPLICAS = 3
+MISCAL_FACTOR = 0.5       # pricing model believes the hardware is 2x slower
 
 
 def _route_workload():
@@ -48,11 +63,37 @@ def _burst_workload():
         quiet_mean_s=15.0, slo_lo=8.0, slo_hi=60.0, seed=9))
 
 
-def _run(reqs, cfg, *, router, n_replicas=N_REPLICAS, autoscale=None):
+def _run(reqs, cfg, *, router, n_replicas=N_REPLICAS, autoscale=None,
+         price=None, tracer=None):
     return simulate_cluster(
         [copy.deepcopy(r) for r in reqs], cfg, get_scheduler("slo-odbs"),
         SchedulerConfig(), n_replicas=n_replicas, router=router,
-        autoscale=autoscale)
+        autoscale=autoscale, price=price, tracer=tracer)
+
+
+def _miscal(lm):
+    """The deliberately wrong pricing belief: same model, efficiency off
+    2x — prefill (compute-bound) prices double, decode (memory-bound at
+    small batch) barely moves.  Exactly the asymmetric error an offline
+    roofline fit produces when the MFU guess is stale."""
+    return dataclasses.replace(lm, efficiency=lm.efficiency * MISCAL_FACTOR)
+
+
+def _measurement_pass(run_fn):
+    """Run ``run_fn(price, tracer)`` with miscalibrated pricing while a
+    ``CostProfiler`` listens to the execution span stream, scoring every
+    measured phase time against the *miscalibrated* reference — the model
+    whose errors the profile must learn.  Returns (summary, profiler)."""
+    tracer = Tracer(retain=False)          # O(1) memory: pure measurement bus
+    prof = CostProfiler(tracer=tracer)
+    tracer.add_sink(prof.on_event)
+
+    def price(lm):
+        m = _miscal(lm)
+        if prof.reference is None:         # replicas are identical partitions
+            prof.reference = m
+        return m
+    return run_fn(price, tracer).summary(), prof
 
 
 def run() -> dict:
@@ -107,8 +148,77 @@ def run() -> dict:
             f"autoscaler used no fewer replica-seconds than static "
             f"({au['replica_seconds']} vs {st['replica_seconds']})")
 
+    # ------------------------------------------- closed-loop calibration
+    # Anchor: the well-calibrated slo_aware run above (pricing == physics).
+    # Miscal: pricing beliefs 2x off while a CostProfiler measures reality.
+    # Calibrated: same wrong analytic model, corrected by the live profile.
+    mis, prof = _measurement_pass(
+        lambda price, tracer: _run(reqs, cfg, router=policies["slo_aware"],
+                                   price=price, tracer=tracer))
+    cal = _run(reqs, cfg, router=policies["slo_aware"],
+               price=lambda lm: CalibratedLatencyModel(_miscal(lm), prof)
+               ).summary()
+    if prof.drift_events < 1:
+        raise AssertionError(
+            "profiler did not flag a 2x-miscalibrated reference model "
+            f"(drift_events={prof.drift_events})")
+    cov = prof.coverage()
+    if not all(c["samples"] > 0 for c in cov.values()):
+        raise AssertionError(f"profiler collected no samples: {cov}")
+    if abs(cal["slo_attainment"] - slo["slo_attainment"]) > 0.01:
+        raise AssertionError(
+            "calibration did not restore routing quality: attainment "
+            f"{cal['slo_attainment']} vs anchor {slo['slo_attainment']}")
+
+    # Same loop on the autoscaler: halved believed capacity over-provisions;
+    # calibration must claw back part of the replica-seconds over-spend
+    # without giving up attainment.
+    au_mis, au_prof = _measurement_pass(
+        lambda price, tracer: _run(
+            burst, cfg, router="least_loaded", n_replicas=1,
+            autoscale=AutoscalerConfig(
+                interval=1.0, min_replicas=1, max_replicas=6,
+                spawn_delay=1.0, down_patience=3),
+            price=price, tracer=tracer))
+    au_cal = _run(burst, cfg, router="least_loaded", n_replicas=1,
+                  autoscale=AutoscalerConfig(
+                      interval=1.0, min_replicas=1, max_replicas=6,
+                      spawn_delay=1.0, down_patience=3),
+                  price=lambda lm: CalibratedLatencyModel(_miscal(lm), au_prof)
+                  ).summary()
+    if au_mis["replica_seconds"] <= au["replica_seconds"]:
+        raise AssertionError(
+            "miscalibrated capacity did not over-provision "
+            f"({au_mis['replica_seconds']} vs {au['replica_seconds']})")
+    if au_cal["replica_seconds"] >= au_mis["replica_seconds"]:
+        raise AssertionError(
+            "calibration did not recover autoscaler over-provisioning "
+            f"({au_cal['replica_seconds']} vs {au_mis['replica_seconds']})")
+    if au_cal["slo_attainment"] < au["slo_attainment"] - 0.01:
+        raise AssertionError(
+            "calibrated autoscaler lost SLO attainment vs anchor "
+            f"({au_cal['slo_attainment']} vs {au['slo_attainment']})")
+
+    prof_metrics = prof.metrics()
     out = {"router_ablation": rows,
            "autoscaler": {"static": st, "auto": au},
+           "calibration": {
+               "anchor": {"attainment": slo["slo_attainment"],
+                          "shed": slo["shed"]},
+               "miscal": {"attainment": mis["slo_attainment"],
+                          "shed": mis["shed"]},
+               "calibrated": {"attainment": cal["slo_attainment"],
+                              "shed": cal["shed"]},
+               "autoscaler_replica_s": {
+                   "anchor": au["replica_seconds"],
+                   "miscal": au_mis["replica_seconds"],
+                   "calibrated": au_cal["replica_seconds"]},
+               "drift_events": prof.drift_events,
+               "coverage": cov,
+               "residual_p50": {
+                   ph: h.get("p50")
+                   for ph, h in prof_metrics.get("residual", {}).items()},
+           },
            "claims": {
                "affinity_vs_rr_attainment":
                    f"{aff['slo_attainment']} vs {rr['slo_attainment']}",
@@ -116,6 +226,12 @@ def run() -> dict:
                    1 - aff["prefill_tokens"] / rr["prefill_tokens"], 4),
                "auto_replica_seconds_saved": round(
                    1 - au["replica_seconds"] / st["replica_seconds"], 4),
+               "calibration_attainment_gap": round(
+                   abs(cal["slo_attainment"] - slo["slo_attainment"]), 4),
+               "calibration_overprovision_recovered": round(
+                   (au_mis["replica_seconds"] - au_cal["replica_seconds"])
+                   / max(au_mis["replica_seconds"] - au["replica_seconds"],
+                         1e-9), 4),
            }}
     emit("cluster_bench", out)
     persist("cluster",
@@ -124,6 +240,7 @@ def run() -> dict:
             throughput=aff["throughput_tok_s"],
             utilization=au["mean_utilization"],
             slo_attainment=aff["slo_attainment"],
+            profile=prof_metrics,
             extra=out["claims"])
     csv_row("cluster_router", 0.0,
             f"attain_rr={rr['slo_attainment']};"
@@ -134,4 +251,11 @@ def run() -> dict:
             f"attain_static={st['slo_attainment']};"
             f"attain_auto={au['slo_attainment']};"
             f"replica_s={st['replica_seconds']}->{au['replica_seconds']}")
+    csv_row("cluster_calibration", 0.0,
+            f"attain_anchor={slo['slo_attainment']};"
+            f"attain_miscal={mis['slo_attainment']};"
+            f"attain_cal={cal['slo_attainment']};"
+            f"drift={prof.drift_events};"
+            f"auto_rep_s={au['replica_seconds']}->"
+            f"{au_mis['replica_seconds']}->{au_cal['replica_seconds']}")
     return out

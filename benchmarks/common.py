@@ -26,17 +26,20 @@ def emit(name: str, payload: dict):
 
 def persist(name: str, *, latency_s=None, p99_latency_s=None,
             throughput=None, utilization=None, slo_attainment=None,
-            monitor: dict | None = None, extra: dict | None = None) -> dict:
+            monitor: dict | None = None, profile: dict | None = None,
+            extra: dict | None = None) -> dict:
     """Write ``BENCH_<name>.json`` in the shared metrics schema
     (``repro.obs.export.metrics_payload`` — the same payload ``serve.py
     --metrics-json`` emits) so the perf trajectory is machine-readable:
     every benchmark reports the same latency / throughput / utilization /
     SLO fields (null where a harness has no such axis), an optional
-    ``Monitor.metrics()`` dict, and free-form ``extra`` detail."""
+    ``Monitor.metrics()`` dict, an optional ``CostProfiler.metrics()``
+    dict, and free-form ``extra`` detail."""
     payload = metrics_payload(
         name, latency_s=latency_s, p99_latency_s=p99_latency_s,
         throughput=throughput, utilization=utilization,
-        slo_attainment=slo_attainment, monitor=monitor, extra=extra)
+        slo_attainment=slo_attainment, monitor=monitor, profile=profile,
+        extra=extra)
     ART.mkdir(parents=True, exist_ok=True)
     write_metrics(ART / f"BENCH_{name}.json", payload)
     return payload

@@ -15,7 +15,10 @@ regression fails ``benchmarks.run``):
   long/short mix;
 * the forced-pressure preemption run actually preempts;
 * tracing is free: a live Tracer leaves outputs token-identical and costs
-  <5% wall-clock (min-of-runs, alternated with untraced runs).
+  <5% wall-clock (min-of-runs, alternated with untraced runs);
+* so is online profiling: a retain-free Tracer feeding a ``CostProfiler``
+  sink (the serve-path ``--profile-out`` configuration) stays within the
+  same 5% budget, token-identical, while actually collecting cost cells.
 """
 from __future__ import annotations
 
@@ -30,7 +33,7 @@ from benchmarks.common import csv_row, emit, persist
 from repro.configs import get_config
 from repro.core.types import Batch, Request
 from repro.models import api
-from repro.obs import NULL_TRACER, Tracer, check_invariants
+from repro.obs import NULL_TRACER, CostProfiler, Tracer, check_invariants
 from repro.serving import (EngineConfig, InferenceEngine, PagedEngine,
                            PagedEngineConfig)
 
@@ -66,6 +69,9 @@ def _engine(cfg, params, reqs, **kw):
 
 N_RUNS = 3   # measured runs pooled per mode (alternated, to decorrelate
              # machine drift from the whole-vs-chunked comparison)
+OVERHEAD_RUNS = 6   # the tracing/profiling overhead gate compares a ~1-2%
+                    # effect against ±20% scheduler jitter; min-of-3 still
+                    # crosses the 5% budget on a noisy box, min-of-6 does not
 
 
 def run() -> dict:
@@ -121,25 +127,36 @@ def run() -> dict:
             "forced-pressure run admitted without preempting — the "
             "eligibility/feasibility path regressed")
 
-    # tracing overhead: same warmed engine, tracer swapped per run,
-    # alternated so machine drift hits both modes equally; min-of-runs is
-    # the de-noised wall-clock each mode can achieve
+    # tracing/profiling overhead: same warmed engine, tracer swapped per
+    # run, alternated so machine drift hits all modes equally; min-of-runs
+    # is the de-noised wall-clock each mode can achieve.  "prof" is the
+    # serve-path ``--profile-out`` configuration: a retain-free Tracer
+    # (no event buffer) feeding a CostProfiler sink.
     tr = Tracer()
-    wall = {"off": [], "on": []}
-    res_tr = None
-    for _ in range(N_RUNS):
-        for mode, tracer in (("off", NULL_TRACER), ("on", tr)):
-            tr.clear()
+    prof_tr = Tracer(retain=False)
+    cprof = CostProfiler(tracer=prof_tr)
+    prof_tr.add_sink(cprof.on_event)
+    wall = {"off": [], "on": [], "prof": []}
+    res_tr = res_prof = None
+    for _ in range(OVERHEAD_RUNS):
+        for mode, tracer in (("off", NULL_TRACER), ("on", tr),
+                             ("prof", prof_tr)):
+            if tracer is tr:      # keep the last traced run's event buffer
+                tr.clear()        # for the invariant check below
             eng_chunk.tracer = tracer
             t0 = time.perf_counter()
             res = eng_chunk.run_continuous([copy.copy(r) for r in reqs])
             wall[mode].append(time.perf_counter() - t0)
             if mode == "on":
                 res_tr = res
+            elif mode == "prof":
+                res_prof = res
     eng_chunk.tracer = NULL_TRACER
     for r in reqs:
         if res_tr.outputs[r.rid] != ref.outputs[r.rid]:
             raise AssertionError(f"tracing changed outputs (rid {r.rid})")
+        if res_prof.outputs[r.rid] != ref.outputs[r.rid]:
+            raise AssertionError(f"profiling changed outputs (rid {r.rid})")
     bad = check_invariants(tr.events)
     if bad:
         raise AssertionError(f"trace invariants violated: {bad[:3]}")
@@ -147,6 +164,14 @@ def run() -> dict:
     if overhead > 0.05:
         raise AssertionError(
             f"tracing overhead {overhead:.1%} exceeds the 5% budget")
+    prof_overhead = min(wall["prof"]) / max(min(wall["off"]), 1e-9) - 1.0
+    if prof_overhead > 0.05:
+        raise AssertionError(
+            f"profiling overhead {prof_overhead:.1%} exceeds the 5% budget")
+    cov = cprof.coverage()
+    if cov.get("decode", {}).get("samples", 0) < 1:
+        raise AssertionError(
+            f"profiler sink collected no decode samples: {cov}")
 
     rows = {
         "whole_prompt": {
@@ -169,16 +194,22 @@ def run() -> dict:
         },
         "tracing": {
             "overhead_pct": round(overhead * 100, 3),
+            "profiling_overhead_pct": round(prof_overhead * 100, 3),
             "events": len(tr.events),
+            "profile_cells": len(cprof.cells),
+            "profile_samples": cov,
             "wall_on_s": round(min(wall["on"]), 4),
             "wall_off_s": round(min(wall["off"]), 4),
+            "wall_prof_s": round(min(wall["prof"]), 4),
         },
     }
     csv_row("interleave_p99_itl", p99_c * 1e6,
             f"whole_p99_us={p99_w*1e6:.0f},"
             f"reduction={1 - p99_c / p99_w:.3f},"
             f"preemptions={res_pre.preemptions},"
-            f"trace_overhead={overhead:.2%}")
+            f"trace_overhead={overhead:.2%},"
+            f"prof_overhead={prof_overhead:.2%}")
     emit("interleave_bench", rows)
-    persist("interleave", p99_latency_s=p99_c, extra=rows)
+    persist("interleave", p99_latency_s=p99_c, profile=cprof.metrics(),
+            extra=rows)
     return rows

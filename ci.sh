@@ -132,6 +132,57 @@ print(f"traced smoke: {len(obj['traceEvents'])} events, "
 PY
 }
 
+profile_smoke() {
+    echo "== profile smoke (--profile-out / --profile-in round trip) =="
+    python -m repro.launch.serve --paged --speculate --chunk-tokens 8 \
+        --requests 8 --profile-out /tmp/prof.json > /tmp/serve_a.log
+    python -m repro.launch.serve --paged --speculate --chunk-tokens 8 \
+        --requests 8 --profile-in /tmp/prof.json > /tmp/serve_b.log
+    da=$(grep -o 'outputs_digest=[0-9a-f]*' /tmp/serve_a.log)
+    db=$(grep -o 'outputs_digest=[0-9a-f]*' /tmp/serve_b.log)
+    if [[ -z "$da" || "$da" != "$db" ]]; then
+        echo "profile smoke: calibrated pricing changed outputs" \
+             "('$da' vs '$db')"
+        exit 1
+    fi
+    python - <<'PY'
+import json
+from repro.obs import CalibratedLatencyModel, CostProfiler
+
+a = CostProfiler.load("/tmp/prof.json")
+b = CostProfiler.from_json(a.to_json())
+assert a.to_json() == b.to_json(), "profile registry not byte-stable"
+cov = a.coverage()
+assert any(c["samples"] > 0 for c in cov.values()), cov
+for key, ca in a.cells.items():
+    cb = b.cells[key]
+    assert ca.ema_s == cb.ema_s and ca.mean_s == cb.mean_s \
+        and ca.ratio_ema == cb.ratio_ema, key
+print(f"profile smoke: {len(a.cells)} cells round-trip identical, "
+      f"coverage={json.dumps(cov)} (token-identical serve)")
+PY
+}
+
+validate_artifacts() {
+    echo "== bench artifact validation (shared metrics schema) =="
+    python - <<'PY'
+import glob, json, sys
+from repro.obs.export import validate_metrics
+
+files = sorted(glob.glob("artifacts/bench/BENCH_*.json"))
+bad = 0
+for f in files:
+    errs = validate_metrics(json.load(open(f)))
+    if errs:
+        print(f"{f}: INVALID {errs}")
+        bad += 1
+if bad:
+    sys.exit(1)
+print(f"validate_artifacts: {len(files)} BENCH_*.json artifacts valid"
+      if files else "validate_artifacts: no artifacts present (ok)")
+PY
+}
+
 if [[ "${1:-}" == "kernels" ]]; then
     python -m pytest -q "${KERNEL_TESTS[@]}"
     exit 0

@@ -18,6 +18,12 @@ class MonitorStats:
     overpredict_tokens: int = 0
     underpredict_tokens: int = 0
     online_updates: int = 0
+    # (predicted_bucket, true_bucket) -> count: the length predictor's
+    # confusion matrix, from which metrics() derives per-bucket precision —
+    # aggregate accuracy hides *which* bucket the predictor bleeds on (and
+    # over- vs under-bucket misses cost differently: wasted blocks vs
+    # admission optimism)
+    bucket_confusion: dict = field(default_factory=dict)
     # --- paged-KV gauges (fed by PagedEngine.run_continuous) ---
     kv_samples: int = 0
     kv_util_sum: float = 0.0
@@ -146,6 +152,9 @@ class Monitor:
             if req.ttft is not None:
                 st.ttft.record(req.ttft)
         true_bucket = int(self.profiler.predictor.length_to_bucket([true])[0])
+        if req.predicted_bucket is not None:
+            key = (int(req.predicted_bucket), true_bucket)
+            st.bucket_confusion[key] = st.bucket_confusion.get(key, 0) + 1
         if req.predicted_bucket == true_bucket:
             st.bucket_hits += 1
         elif self.update_on_miss:
@@ -294,6 +303,23 @@ class Monitor:
             out["cluster_util_mean"] = round(st.cluster_util_mean, 4)
             out["scale_up_events"] = st.scale_up_events
             out["scale_down_events"] = st.scale_down_events
+        if st.bucket_confusion:
+            # per-bucket precision: of requests *predicted* into bucket b,
+            # the fraction whose true length landed there too
+            pred_totals: dict[int, int] = {}
+            pred_hits: dict[int, int] = {}
+            for (p, t), c in st.bucket_confusion.items():
+                pred_totals[p] = pred_totals.get(p, 0) + c
+                if p == t:
+                    pred_hits[p] = pred_hits.get(p, 0) + c
+            out["length_prediction"] = {
+                "accuracy": round(st.bucket_accuracy, 4),
+                "per_bucket_precision": {
+                    str(p): round(pred_hits.get(p, 0) / n, 4)
+                    for p, n in sorted(pred_totals.items())},
+                "confusion": {f"{p}->{t}": c for (p, t), c in
+                              sorted(st.bucket_confusion.items())},
+            }
         # per-phase latency quantiles (log-bucketed, <=4.5% relative error)
         for key, h in (("queue_wait", st.queue_wait), ("ttft", st.ttft),
                        ("itl", st.itl), ("e2e", st.e2e),

@@ -45,6 +45,15 @@ class SchedulerConfig:
     # widens the effective per-batch decode budget by this factor
     spec_speedup: float = 1.0
 
+    def with_speculation(self, spec_tokens: int,
+                         acceptance: float) -> "SchedulerConfig":
+        """This config re-priced at a (K, acceptance) operating point —
+        the one constructor every serve path uses, so the measured-
+        acceptance EMA flows into the composite the same way everywhere."""
+        import dataclasses
+        return dataclasses.replace(
+            self, spec_speedup=spec_speedup(spec_tokens, acceptance))
+
 
 def spec_speedup(spec_tokens: int, acceptance: float) -> float:
     """Expected tokens emitted per verify iteration under greedy speculative

@@ -18,7 +18,11 @@ blocking a tight arrival — both also feed the cluster paths (replica load
 projections price them).  ``--speculate`` turns on speculative decoding:
 ``--drafter`` proposes ``--spec-tokens`` candidates per iteration, verified
 in one multi-token kernel pass with greedy acceptance (outputs stay
-token-identical; the cluster projections price the acceptance prior).
+token-identical; the cluster projections price the *measured* acceptance
+EMA — warm-started from ``--profile-in``, bootstrap 0.5 before the first
+verify pass).  ``--profile-out``/``--profile-in`` persist and reload the
+online cost profile (measured phase-time cells, residuals, acceptance) as
+a versioned JSON registry, calibrating every pricing model it reaches.
 
 ``--replicas N`` lifts serving to the cluster layer (serving/cluster):
 requests are routed by ``--router`` across N replicas.  With ``--paged``
@@ -34,6 +38,8 @@ on CPU (--reduced) it serves the reduced config end-to-end.
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
 import time
 
 import jax
@@ -48,17 +54,14 @@ from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
                                  gen_requests, gen_shared_prefix_requests,
                                  train_pairs)
 from repro.models import api
+from repro.obs.calibrate import CalibratedLatencyModel
 from repro.obs.export import export_trace, metrics_payload, write_metrics
+from repro.obs.profile import CostProfiler
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving import (AutoscalerConfig, EngineConfig, InferenceEngine,
                            PagedEngine, PagedEngineConfig, Replica, Router,
                            RouterConfig, get_drafter, paper_cluster,
                            simulate_cluster)
-
-# planning prior for live/simulated speculation pricing before any
-# acceptance has been measured (repetitive MLaaS traffic with the n-gram
-# drafter lands 0.4-0.8; spec_bench records the measured point)
-SPEC_ACCEPT_PRIOR = 0.5
 
 
 def _make_drafter(args, cfg):
@@ -68,8 +71,27 @@ def _make_drafter(args, cfg):
     return None
 
 
-def _write_artifacts(args, mon, tracer, *, latency_s=None, p99_latency_s=None,
-                     throughput=None, utilization=None) -> None:
+def _spec_acceptance(args, cprof: CostProfiler) -> float:
+    """Speculation acceptance for *planning* (replica projections,
+    SchedulerConfig.spec_speedup): the cost profiler's measured EMA —
+    warm-started from ``--profile-in``, its bootstrap prior when nothing
+    has been measured yet, and live-updated by ``PagedEngine._spec_step``
+    once serving starts."""
+    return cprof.spec_acceptance if args.spec_tokens else 0.0
+
+
+def _outputs_digest(done: dict) -> str:
+    """Order-independent digest of the generated tokens — two serve runs
+    printing the same digest emitted identical output streams (the CI
+    profile smoke compares this across --profile-out/--profile-in runs)."""
+    blob = json.dumps(sorted((int(k), list(map(int, v)))
+                             for k, v in done.items()))
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def _write_artifacts(args, mon, tracer, cprof, *, latency_s=None,
+                     p99_latency_s=None, throughput=None,
+                     utilization=None) -> None:
     """Export the request-lifecycle trace (``--trace``, Chrome/Perfetto JSON)
     and the shared metrics payload (``--metrics-json`` — same schema the
     benchmarks persist).  Latency quantiles default to the monitor's e2e
@@ -87,12 +109,17 @@ def _write_artifacts(args, mon, tracer, *, latency_s=None, p99_latency_s=None,
             "serve", latency_s=latency_s, p99_latency_s=p99_latency_s,
             throughput=throughput, utilization=utilization,
             slo_attainment=st.slo_attainment if st.slo_observed else None,
-            monitor=mon.metrics())
+            monitor=mon.metrics(), profile=cprof.metrics())
         write_metrics(args.metrics_json, payload)
         print(f"metrics -> {args.metrics_json}")
+    if args.profile_out:
+        cprof.save(args.profile_out)
+        cov = {p: c["samples"] for p, c in cprof.coverage().items()}
+        print(f"profile: {len(cprof.cells)} cells, samples {cov} "
+              f"-> {args.profile_out}")
 
 
-def _serve_cluster_live(args, cfg, params, mon, reqs, tracer) -> dict:
+def _serve_cluster_live(args, cfg, params, mon, reqs, tracer, cprof) -> dict:
     """Route requests across N real PagedEngine-backed replicas, then serve
     each replica's share live (per-replica pool + prefix cache)."""
     max_prompt = max(len(r.tokens) for r in reqs)
@@ -107,16 +134,20 @@ def _serve_cluster_live(args, cfg, params, mon, reqs, tracer) -> dict:
             prefix_cache=args.prefix_cache, admit_lookahead=args.lookahead,
             chunk_tokens=args.chunk_tokens, preempt=args.preempt,
             spec_tokens=args.spec_tokens, drafter=args.drafter)
-        replicas.append(Replica(
+        rep = Replica(
             i, cfg, nodes, lat, max_batch=4, block_size=8,
             n_blocks=pcfg.usable_blocks, prefix_cache=args.prefix_cache,
             chunk_tokens=args.chunk_tokens, preempt=args.preempt,
             spec_tokens=args.spec_tokens,
-            spec_acceptance=SPEC_ACCEPT_PRIOR if args.spec_tokens else 0.0,
+            spec_acceptance=_spec_acceptance(args, cprof),
             engine=PagedEngine(cfg, params, pcfg, monitor=mon,
                                drafter=_make_drafter(args, cfg),
-                               tracer=tracer, track=i),
-            tracer=tracer))
+                               tracer=tracer, track=i,
+                               cost_profiler=cprof),
+            tracer=tracer)
+        if args.profile_in:
+            rep.price = CalibratedLatencyModel(rep.lm, cprof)
+        replicas.append(rep)
     for r in sorted(reqs, key=lambda q: q.arrival):
         rep = router.dispatch(r, replicas, r.arrival)
         if rep is None:
@@ -127,6 +158,10 @@ def _serve_cluster_live(args, cfg, params, mon, reqs, tracer) -> dict:
     for rep in replicas:
         if not rep.queue:
             continue
+        if args.spec_tokens:
+            # replicas serve sequentially here, so each one plans at the
+            # acceptance the earlier shares already measured
+            rep.spec_acceptance = cprof.spec_acceptance
         res = rep.engine.run_continuous(
             sorted(rep.queue, key=lambda q: q.arrival))
         done.update(res.outputs)
@@ -141,7 +176,7 @@ def _serve_cluster_live(args, cfg, params, mon, reqs, tracer) -> dict:
     return done
 
 
-def _serve_cluster_sim(args, prof, mon, tracer) -> None:
+def _serve_cluster_sim(args, prof, mon, tracer, cprof) -> None:
     """Cluster-scale path: LatencyModel-backed replicas on per-replica HELR
     deployments, driven by the discrete-event simulator."""
     full_cfg = get_config(args.arch)
@@ -161,13 +196,22 @@ def _serve_cluster_sim(args, prof, mon, tracer) -> None:
         auto = AutoscalerConfig(interval=1.0, min_replicas=args.replicas,
                                 max_replicas=max(6, 2 * args.replicas),
                                 spawn_delay=1.0)
+    acc = _spec_acceptance(args, cprof)
+    sched_cfg = SchedulerConfig()
+    if args.spec_tokens:
+        sched_cfg = sched_cfg.with_speculation(args.spec_tokens, acc)
+    # a warm profile registry calibrates every replica's *pricing* model
+    # (projections, shedding, autoscaler capacity); execution physics stay
+    # the replica's own analytic model
+    price = (lambda lm: CalibratedLatencyModel(lm, cprof)) \
+        if args.profile_in else None
     res = simulate_cluster(
-        reqs, full_cfg, get_scheduler(args.scheduler), SchedulerConfig(),
+        reqs, full_cfg, get_scheduler(args.scheduler), sched_cfg,
         n_replicas=args.replicas, router=args.router, autoscale=auto,
         prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens,
         preempt=args.preempt, spec_tokens=args.spec_tokens,
-        spec_acceptance=SPEC_ACCEPT_PRIOR if args.spec_tokens else 0.0,
-        profiler=prof, monitor=mon, tracer=tracer)
+        spec_acceptance=acc,
+        profiler=prof, monitor=mon, tracer=tracer, price=price)
     print("cluster:", res.summary())
     for s in res.replica_stats:
         print(f"  replica {s['rid']}: served={s['served']} "
@@ -237,6 +281,14 @@ def main():
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write final metrics (incl. latency quantiles) as "
                          "JSON in the shared benchmark schema")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="save the online cost profile (measured phase-time "
+                         "cells + speculative-acceptance EMA) as a versioned "
+                         "JSON registry after serving")
+    ap.add_argument("--profile-in", default=None, metavar="PATH",
+                    help="warm-start from a saved profile registry: pricing "
+                         "models calibrate against its measured cells and "
+                         "speculation plans at its measured acceptance")
     args = ap.parse_args()
     if args.autoscale and args.paged:
         raise SystemExit("--autoscale needs the simulated cluster path: "
@@ -246,7 +298,20 @@ def main():
         args.paged = True          # cluster sim path honors the flags itself
     args.spec_tokens = args.spec_tokens if args.speculate else 0
 
-    tracer = Tracer() if args.trace else NULL_TRACER
+    # profiling without --trace still needs the span stream: a retain=False
+    # tracer is a pure measurement bus (sinks see every event, nothing is
+    # stored), so long serve runs profile at O(1) memory
+    want_profile = bool(args.profile_in or args.profile_out)
+    if args.trace:
+        tracer = Tracer()
+    elif want_profile:
+        tracer = Tracer(retain=False)
+    else:
+        tracer = NULL_TRACER
+    cprof = CostProfiler.load(args.profile_in, tracer=tracer) \
+        if args.profile_in else CostProfiler(tracer=tracer)
+    if want_profile:
+        tracer.add_sink(cprof.on_event)
 
     if args.chunk_tokens < 0:
         args.chunk_tokens = derive_chunk_tokens(SchedulerConfig(),
@@ -268,9 +333,9 @@ def main():
         pred.fit(toks, lens, epochs=8)
         prof = ResourceProfiler(pred, get_config(args.arch))
         mon = Monitor(prof)
-        _serve_cluster_sim(args, prof, mon, tracer)
+        _serve_cluster_sim(args, prof, mon, tracer, cprof)
         print("monitor:", mon.metrics())
-        _write_artifacts(args, mon, tracer)
+        _write_artifacts(args, mon, tracer, cprof)
         return
 
     params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
@@ -305,7 +370,8 @@ def main():
 
     t0 = time.perf_counter()
     if args.replicas > 1 and args.paged:
-        done = _serve_cluster_live(args, cfg, params, mon, reqs, tracer)
+        done = _serve_cluster_live(args, cfg, params, mon, reqs, tracer,
+                                   cprof)
     elif args.paged:
         # size the block tables for the longest admitted prompt plus the
         # decode budget so any --max-new value is admissible
@@ -325,7 +391,8 @@ def main():
               f"preempt={'on' if pcfg.preempt else 'off'}, "
               f"speculate={pcfg.spec_tokens or 'off'})")
         paged = PagedEngine(cfg, params, pcfg, monitor=mon,
-                            drafter=_make_drafter(args, cfg), tracer=tracer)
+                            drafter=_make_drafter(args, cfg), tracer=tracer,
+                            cost_profiler=cprof)
         res = paged.run_continuous(sorted(reqs, key=lambda r: r.arrival))
         done = res.outputs
         print(f"paged: {res.admission_waves} admission waves, "
@@ -366,8 +433,13 @@ def main():
     total = sum(len(v) for v in done.values())
     print(f"served {len(done)} requests, {total} tokens in {dt:.2f}s "
           f"({total/dt:.1f} tok/s on CPU)")
+    print(f"outputs_digest={_outputs_digest(done)}")
+    if args.spec_tokens and cprof.spec_samples:
+        print(f"measured acceptance EMA: {cprof.spec_acceptance:.3f} "
+              f"({cprof.spec_accepted}/{cprof.spec_drafted} over "
+              f"{cprof.spec_samples} verify passes)")
     print("monitor:", mon.metrics())
-    _write_artifacts(args, mon, tracer, throughput=total / dt)
+    _write_artifacts(args, mon, tracer, cprof, throughput=total / dt)
 
 
 if __name__ == "__main__":

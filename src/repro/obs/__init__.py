@@ -1,11 +1,15 @@
 """Unified tracing & telemetry: request-lifecycle spans, log-bucketed
-latency histograms, Chrome-trace/Perfetto export, and the shared metrics
-JSON schema — the measurement substrate every serving subsystem reports
-through."""
+latency histograms, Chrome-trace/Perfetto export, the shared metrics JSON
+schema, and the online cost profiler + calibrated pricing that close the
+measurement loop back into scheduling decisions."""
+from repro.obs.calibrate import CalibratedLatencyModel  # noqa: F401
 from repro.obs.export import (event_names, export_trace,  # noqa: F401
                               metrics_payload, to_chrome, validate_metrics,
                               validate_trace, write_metrics)
 from repro.obs.hist import Histogram  # noqa: F401
+from repro.obs.profile import (PROFILE_VERSION, CostCell,  # noqa: F401
+                               CostProfiler, batch_bucket, kv_bucket,
+                               token_bucket)
 from repro.obs.trace import (EVENT_NAMES, INSTANT_NAMES,  # noqa: F401
                              NULL_TRACER, ROW_ENGINE, ROW_QUEUE, SPAN_NAMES,
                              LatencyBreakdown, TraceEvent, Tracer,

@@ -1,0 +1,86 @@
+"""Calibrated pricing: analytic roofline × measured multiplicative residual.
+
+The analytic ``LatencyModel`` prices every latency-facing decision
+(SLO-ODBS, ``Replica.projected_finish``, ``capacity_rps``, Holt
+autoscaling, slo_aware shedding) from first principles — flops over an
+``efficiency`` knob, bytes over an ``hbm_bw`` knob — and those constants
+are guesses.  ``CalibratedLatencyModel`` wraps the analytic model and a
+``CostProfiler`` and corrects each prediction with the profiler's measured
+observed/predicted ratio:
+
+    predicted = analytic(op) × correction(op)
+
+where ``correction`` resolves through a three-step fallback chain:
+
+1. the matching cell's ratio EMA, when that cell holds at least
+   ``min_samples`` reference-compared samples (coverage hit);
+2. the phase-wide ratio EMA — a uniform miscalibration (e.g. efficiency
+   off 2× on a compute-bound phase) shows up as a near-constant ratio, so
+   the phase EMA generalizes to operating points execution never visited
+   (projection cohorts, ``capacity_rps`` at full width);
+3. 1.0 — pure analytic fallback when nothing was measured (coverage miss).
+
+A *ratio* correction rather than substituting measured seconds keeps the
+analytic model's shape between bucket centers (log-binned cells would
+otherwise quantize the prediction) and makes a well-calibrated model pass
+through unchanged: ratios sit at 1.0, so calibrated == analytic exactly.
+``cell_hits``/``cell_misses`` count the chain's resolutions for the
+metrics-schema profile block.
+"""
+from __future__ import annotations
+
+from repro.obs.profile import CostProfiler
+
+
+class CalibratedLatencyModel:
+    """Duck-types ``LatencyModel`` (``token_time``/``prefill_time`` plus
+    attribute delegation for everything else: ``peak_flops``,
+    ``efficiency``, ``_stage_flops_token`` …) so it drops into Replica,
+    Router, Autoscaler, SchedulerConfig derivation, and the simulators
+    anywhere the analytic model goes."""
+
+    def __init__(self, analytic, profile: CostProfiler, *,
+                 min_samples: int = 3):
+        self.analytic = analytic
+        self.profile = profile
+        self.min_samples = min_samples
+        self.cell_hits = 0       # priced from a covered cell's ratio
+        self.phase_hits = 0      # fell back to the phase-wide ratio
+        self.cell_misses = 0     # pure analytic (no measurement at all)
+
+    # ------------------------------------------------------------- pricing
+    def _correction(self, phase: str, cell) -> float:
+        if cell is not None and cell.ratio_count >= self.min_samples:
+            self.cell_hits += 1
+            return cell.ratio_ema
+        ratio, n = self.profile.phase_correction(phase)
+        if n >= self.min_samples:
+            self.phase_hits += 1
+            return ratio
+        self.cell_misses += 1
+        return 1.0
+
+    def token_time(self, batch: int, kv_tokens: float,
+                   q_tokens: int = 1) -> float:
+        base = self.analytic.token_time(batch, kv_tokens, q_tokens=q_tokens)
+        cell = self.profile.decode_cell(batch, kv_tokens, q_tokens)
+        return base * self._correction("decode", cell)
+
+    def prefill_time(self, batch: int, in_len: int) -> float:
+        base = self.analytic.prefill_time(batch, in_len)
+        cell = self.profile.prefill_cell(batch, in_len)
+        return base * self._correction("prefill", cell)
+
+    # ----------------------------------------------------------- reporting
+    def coverage_counters(self) -> dict:
+        total = self.cell_hits + self.phase_hits + self.cell_misses
+        return {"cell_hits": self.cell_hits, "phase_hits": self.phase_hits,
+                "cell_misses": self.cell_misses,
+                "covered_frac": round(
+                    (self.cell_hits + self.phase_hits) / total, 4)
+                if total else 0.0}
+
+    # everything else (cfg, efficiency, peak_flops, _stage_flops_token,
+    # _stage_bytes, dmap …) is the analytic model's business
+    def __getattr__(self, name):
+        return getattr(self.analytic, name)

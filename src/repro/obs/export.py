@@ -118,7 +118,7 @@ def event_names(obj: dict) -> set:
 
 # ------------------------------------------------------------- metrics JSON
 
-METRICS_SCHEMA_VERSION = 2
+METRICS_SCHEMA_VERSION = 3
 
 _METRIC_FIELDS = ("latency_s", "p99_latency_s", "throughput",
                   "utilization", "slo_attainment")
@@ -127,12 +127,16 @@ _METRIC_FIELDS = ("latency_s", "p99_latency_s", "throughput",
 def metrics_payload(name: str, *, latency_s=None, p99_latency_s=None,
                     throughput=None, utilization=None, slo_attainment=None,
                     monitor: Optional[dict] = None,
+                    profile: Optional[dict] = None,
                     extra: Optional[dict] = None) -> dict:
     """The shared metrics schema: identical top-level fields whether the
     producer is a benchmark harness (``common.persist``) or a serve run
     (``--metrics-json``).  ``monitor`` carries ``Monitor.metrics()``
     verbatim — including the per-axis histogram quantile blocks — and is
-    ``{}`` for harnesses that run without a monitor."""
+    ``{}`` for harnesses that run without a monitor.  ``profile`` (schema
+    v3) carries ``CostProfiler.metrics()`` — coverage counters, residual
+    quantiles, drift count, measured speculative acceptance — and is
+    ``{}`` for runs that served without the cost profiler."""
     return {
         "bench": name,
         "schema": METRICS_SCHEMA_VERSION,
@@ -142,6 +146,7 @@ def metrics_payload(name: str, *, latency_s=None, p99_latency_s=None,
         "utilization": utilization,
         "slo_attainment": slo_attainment,
         "monitor": monitor or {},
+        "profile": profile or {},
         "extra": extra or {},
     }
 
@@ -165,7 +170,7 @@ def validate_metrics(obj: dict) -> list[str]:
             errs.append(f"missing field {k!r}")
         elif obj[k] is not None and not isinstance(obj[k], (int, float)):
             errs.append(f"field {k!r} must be numeric or null")
-    for k in ("monitor", "extra"):
+    for k in ("monitor", "profile", "extra"):
         if not isinstance(obj.get(k), dict):
             errs.append(f"missing/invalid {k!r}")
     return errs

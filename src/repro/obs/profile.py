@@ -1,0 +1,375 @@
+"""Online cost profiler: measured phase times from the span stream.
+
+UELLM's resource profiler (§4.1) learns **online** from the serving loop;
+until now this repo only did that for output lengths — every latency-facing
+decision (SLO-ODBS, ``Replica.projected_finish``, ``capacity_rps``, Holt
+autoscaling, slo_aware shedding) priced work through the static analytic
+roofline ``LatencyModel``.  ``CostProfiler`` closes the loop:
+
+* it **attaches as a sink** to the ``Tracer`` span stream (``tracer.
+  add_sink(prof.on_event)``) and folds every decode / verify / prefill span
+  into EMA + histogram cells keyed by *binned operating points* —
+  decode/verify by (batch-bucket, kv-bucket, q_tokens), prefill by
+  (batch-bucket, token-bucket) — so a measurement made at one operating
+  point generalizes to its neighborhood without drowning distinct regimes
+  in one average;
+* with a ``reference`` pricing model attached it also maintains
+  predicted-vs-observed **residual ratio** statistics (per-cell and
+  per-phase EMAs plus log-bucketed ratio histograms) — the multiplicative
+  correction ``CalibratedLatencyModel`` applies — and **drift detection**:
+  when a phase's calibration-ratio EMA leaves the ``1 ± drift_tol`` band a
+  ``profile_drift`` instant is emitted back into the trace (once per band
+  crossing, not per sample);
+* it carries the **measured speculative-acceptance EMA** fed by
+  ``PagedEngine._spec_step`` — the live replacement for the static
+  ``SPEC_ACCEPT_PRIOR`` planning constant;
+* profiles persist as a versioned JSON **registry** (``save``/``load``),
+  so offline bench runs warm-start live serving and two serve runs can
+  share one calibration.
+
+Span producers carry the operating point in ``args``: ``batch``/``kv``/
+``q_tokens`` on decode/verify spans, ``tokens`` on prefill spans, and
+``iters`` on the cluster replica's ``batch_decode`` drain span (the sink
+normalizes the drain to per-iteration cost).  Spans without these args are
+ignored — old traces stay consumable.  One engine iteration emits one span
+per *slot* sharing identical (t0, dur); the sink deduplicates those so a
+batch-of-8 decode records one kernel sample, not eight.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.obs.hist import Histogram
+from repro.obs.trace import TraceEvent, Tracer
+
+PROFILE_VERSION = 1
+
+# planning bootstrap for speculative acceptance before any measurement
+# exists (repetitive MLaaS traffic with the n-gram drafter lands 0.4-0.8;
+# the EMA replaces this after the first verify pass)
+SPEC_ACCEPT_BOOTSTRAP = 0.5
+
+
+# ------------------------------------------------------- operating-point bins
+
+def batch_bucket(batch: int) -> int:
+    """Batch-width bin: exact at small widths (1..4, where batching effects
+    change fastest), next power of two above."""
+    b = max(1, int(batch))
+    if b <= 4:
+        return b
+    return 1 << (b - 1).bit_length()
+
+
+def token_bucket(tokens: float) -> int:
+    """Half-octave log2 bin for kv lengths / chunk token counts (factor
+    sqrt(2) wide: fine enough that a cell's samples share a cost regime,
+    coarse enough that projections hit cells execution populated)."""
+    t = float(tokens)
+    if t < 1.0:
+        return 0
+    return 1 + int(2.0 * math.log2(t))
+
+
+kv_bucket = token_bucket      # same binning, named for the decode key
+
+
+# ------------------------------------------------------------------ the cells
+
+@dataclass
+class CostCell:
+    """Measured statistics of one (phase, operating-point) bin."""
+    count: int = 0
+    ema_s: float = 0.0                 # EMA of observed seconds
+    total_s: float = 0.0
+    hist: Histogram = field(default_factory=Histogram)
+    ratio_count: int = 0               # samples with a reference prediction
+    ratio_ema: float = 1.0             # EMA of observed / predicted
+
+    @property
+    def mean_s(self) -> float:
+        return self.total_s / self.count if self.count else float("nan")
+
+
+def _hist_to_json(h: Histogram) -> dict:
+    return {"growth": h.growth, "v_min": h.v_min,
+            "counts": {str(k): v for k, v in h.counts.items()},
+            "n": h.n, "total": h.total,
+            "min_v": None if math.isinf(h.min_v) else h.min_v,
+            "max_v": None if math.isinf(h.max_v) else h.max_v}
+
+
+def _hist_from_json(d: dict) -> Histogram:
+    return Histogram(
+        growth=d["growth"], v_min=d["v_min"],
+        counts={int(k): v for k, v in d["counts"].items()},
+        n=d["n"], total=d["total"],
+        min_v=float("inf") if d["min_v"] is None else d["min_v"],
+        max_v=float("-inf") if d["max_v"] is None else d["max_v"])
+
+
+class CostProfiler:
+    """Online EMA + histogram cells of measured phase times, keyed by
+    binned operating points, with residual/drift tracking against an
+    optional ``reference`` pricing model and a measured speculative-
+    acceptance EMA.  See the module docstring for the full contract."""
+
+    _SPAN_PHASE = {"decode": "decode", "verify": "decode",
+                   "batch_decode": "decode",
+                   "prefill_chunk": "prefill", "batch_prefill": "prefill"}
+
+    def __init__(self, *, alpha: float = 0.25, drift_tol: float = 0.25,
+                 drift_min_samples: int = 8, reference=None,
+                 tracer: Optional[Tracer] = None,
+                 spec_bootstrap: float = SPEC_ACCEPT_BOOTSTRAP):
+        self.alpha = alpha
+        self.drift_tol = drift_tol
+        self.drift_min_samples = drift_min_samples
+        self.reference = reference        # pricing model residuals compare to
+        self.tracer = tracer              # where profile_drift instants land
+        self.cells: dict[tuple, CostCell] = {}
+        self.residual: dict[str, Histogram] = {}      # phase -> ratio hist
+        self.phase_ratio: dict[str, list] = {}        # phase -> [count, ema]
+        self.drift_events = 0
+        self._drift_out: dict[str, bool] = {}         # phase -> out of band?
+        self._last_key: dict[str, tuple] = {}         # phase -> dedupe key
+        # measured speculative acceptance (PagedEngine._spec_step feeds it)
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_samples = 0
+        self._spec_ema = float(spec_bootstrap)
+        self._spec_bootstrap = float(spec_bootstrap)
+
+    # ------------------------------------------------------------- span sink
+    def on_event(self, ev: TraceEvent) -> None:
+        """Tracer-sink entry point: fold one span into the cells.  Ignores
+        instants, spans outside the cost vocabulary, and spans without
+        operating-point args; deduplicates the per-slot copies one engine
+        iteration emits (identical track/t0/dur within a phase)."""
+        if ev.ph != "X":
+            return
+        phase = self._SPAN_PHASE.get(ev.name)
+        if phase is None:
+            return
+        key = (ev.track, round(ev.t0, 9), round(ev.dur, 9))
+        if self._last_key.get(phase) == key:
+            return
+        self._last_key[phase] = key
+        args = ev.args or {}
+        t_end = ev.t0 + ev.dur
+        if phase == "decode":
+            batch, kv = args.get("batch"), args.get("kv")
+            if batch is None or kv is None or ev.dur <= 0:
+                return
+            q = int(args.get("q_tokens", 1))
+            iters = float(args.get("iters", 1.0))
+            if iters <= 0:
+                return
+            self.observe_decode(ev.dur / iters, batch=int(batch),
+                                kv=float(kv), q_tokens=q,
+                                weight=max(1, int(iters)), t=t_end)
+        else:
+            tokens = args.get("tokens")
+            if not tokens or ev.dur <= 0:
+                return
+            self.observe_prefill(ev.dur, batch=int(args.get("batch", 1)),
+                                 tokens=int(tokens), t=t_end)
+
+    # -------------------------------------------------------- direct observe
+    def observe_decode(self, seconds: float, *, batch: int, kv: float,
+                       q_tokens: int = 1, weight: int = 1,
+                       t: Optional[float] = None) -> None:
+        """One measured decode/verify iteration at (batch, kv, q_tokens)."""
+        key = ("decode", batch_bucket(batch), kv_bucket(kv), int(q_tokens))
+        pred = None
+        if self.reference is not None:
+            pred = self.reference.token_time(batch, kv, q_tokens=q_tokens)
+        self._observe(key, "decode", seconds, pred, weight, t)
+
+    def observe_prefill(self, seconds: float, *, batch: int, tokens: int,
+                        weight: int = 1, t: Optional[float] = None) -> None:
+        """One measured prefill call of ``tokens`` tokens at ``batch``."""
+        key = ("prefill", batch_bucket(batch), token_bucket(tokens))
+        pred = None
+        if self.reference is not None:
+            pred = self.reference.prefill_time(batch, tokens)
+        self._observe(key, "prefill", seconds, pred, weight, t)
+
+    def _observe(self, key: tuple, phase: str, obs: float,
+                 pred: Optional[float], weight: int,
+                 t: Optional[float]) -> None:
+        cell = self.cells.get(key)
+        if cell is None:
+            cell = self.cells[key] = CostCell()
+        first = cell.count == 0
+        cell.count += weight
+        cell.total_s += obs * weight
+        cell.ema_s = obs if first \
+            else (1 - self.alpha) * cell.ema_s + self.alpha * obs
+        cell.hist.record(obs)
+        if pred is None or pred <= 0:
+            return
+        ratio = obs / pred
+        cell.ratio_ema = ratio if cell.ratio_count == 0 \
+            else (1 - self.alpha) * cell.ratio_ema + self.alpha * ratio
+        cell.ratio_count += weight
+        self.residual.setdefault(phase, Histogram()).record(ratio)
+        pr = self.phase_ratio.setdefault(phase, [0, 1.0])
+        pr[1] = ratio if pr[0] == 0 \
+            else (1 - self.alpha) * pr[1] + self.alpha * ratio
+        pr[0] += weight
+        self._check_drift(phase, pr, t)
+
+    def _check_drift(self, phase: str, pr: list,
+                     t: Optional[float]) -> None:
+        """Band-crossing drift detection on the phase calibration ratio:
+        emit one ``profile_drift`` instant when the EMA *leaves* the
+        tolerance band (re-arming once it returns), not one per sample."""
+        if pr[0] < self.drift_min_samples:
+            return
+        out = abs(pr[1] - 1.0) > self.drift_tol
+        was_out = self._drift_out.get(phase, False)
+        self._drift_out[phase] = out
+        if out and not was_out:
+            self.drift_events += 1
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "profile_drift", t if t is not None else 0.0,
+                    args={"phase": phase, "ratio": round(pr[1], 4),
+                          "tol": self.drift_tol})
+
+    # -------------------------------------------------- speculative acceptance
+    def observe_acceptance(self, accepted: int, drafted: int) -> None:
+        """One verify pass's acceptance sample (``PagedEngine._spec_step``)."""
+        if drafted <= 0:
+            return
+        self.spec_drafted += drafted
+        self.spec_accepted += accepted
+        ratio = accepted / drafted
+        self._spec_ema = ratio if self.spec_samples == 0 \
+            else (1 - self.alpha) * self._spec_ema + self.alpha * ratio
+        self.spec_samples += 1
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Measured-acceptance EMA; the bootstrap prior until the first
+        verify pass has been observed."""
+        return self._spec_ema if self.spec_samples else self._spec_bootstrap
+
+    # ---------------------------------------------------------------- lookup
+    def decode_cell(self, batch: int, kv: float,
+                    q_tokens: int = 1) -> Optional[CostCell]:
+        return self.cells.get(("decode", batch_bucket(batch),
+                               kv_bucket(kv), int(q_tokens)))
+
+    def prefill_cell(self, batch: int, tokens: float) -> Optional[CostCell]:
+        return self.cells.get(("prefill", batch_bucket(batch),
+                               token_bucket(tokens)))
+
+    def phase_correction(self, phase: str) -> tuple[float, int]:
+        """(calibration-ratio EMA, sample count) for a phase — the global
+        multiplicative correction for operating points no cell covers."""
+        pr = self.phase_ratio.get(phase)
+        return (pr[1], pr[0]) if pr else (1.0, 0)
+
+    # ------------------------------------------------------------- reporting
+    def coverage(self) -> dict:
+        """Per-phase cell and sample counts (the coverage counters the
+        metrics schema's profile block publishes)."""
+        out: dict = {}
+        for (phase, *_), cell in self.cells.items():
+            d = out.setdefault(phase, {"cells": 0, "samples": 0})
+            d["cells"] += 1
+            d["samples"] += cell.count
+        return out
+
+    def metrics(self) -> dict:
+        """The schema-v3 ``profile`` block: coverage, residual quantiles,
+        calibration ratios, drift count, measured acceptance."""
+        out = {
+            "version": PROFILE_VERSION,
+            "coverage": self.coverage(),
+            "cells": len(self.cells),
+            "drift_events": self.drift_events,
+        }
+        if self.residual:
+            out["residual"] = {ph: h.summary()
+                               for ph, h in self.residual.items()}
+            out["calibration_ratio"] = {
+                ph: round(pr[1], 4) for ph, pr in self.phase_ratio.items()}
+        if self.spec_samples:
+            out["spec_acceptance"] = round(self.spec_acceptance, 4)
+            out["spec_samples"] = self.spec_samples
+        return out
+
+    # -------------------------------------------------------------- registry
+    def to_json(self) -> dict:
+        """Versioned profile registry payload (everything ``from_json``
+        needs to reproduce this profiler's predictions exactly)."""
+        return {
+            "profile_version": PROFILE_VERSION,
+            "alpha": self.alpha,
+            "drift_tol": self.drift_tol,
+            "drift_min_samples": self.drift_min_samples,
+            "drift_events": self.drift_events,
+            "cells": [
+                {"key": list(key), "count": c.count, "ema_s": c.ema_s,
+                 "total_s": c.total_s, "ratio_count": c.ratio_count,
+                 "ratio_ema": c.ratio_ema, "hist": _hist_to_json(c.hist)}
+                for key, c in sorted(self.cells.items())],
+            "residual": {ph: _hist_to_json(h)
+                         for ph, h in self.residual.items()},
+            "phase_ratio": {ph: list(pr)
+                            for ph, pr in self.phase_ratio.items()},
+            "spec": {"drafted": self.spec_drafted,
+                     "accepted": self.spec_accepted,
+                     "samples": self.spec_samples,
+                     "ema": self._spec_ema,
+                     "bootstrap": self._spec_bootstrap},
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict, *, reference=None,
+                  tracer: Optional[Tracer] = None) -> "CostProfiler":
+        v = obj.get("profile_version")
+        if v != PROFILE_VERSION:
+            raise ValueError(f"unsupported profile_version {v!r} "
+                             f"(this build reads {PROFILE_VERSION})")
+        prof = cls(alpha=obj["alpha"], drift_tol=obj["drift_tol"],
+                   drift_min_samples=obj["drift_min_samples"],
+                   reference=reference, tracer=tracer,
+                   spec_bootstrap=obj["spec"]["bootstrap"])
+        prof.drift_events = obj.get("drift_events", 0)
+        for c in obj["cells"]:
+            cell = CostCell(count=c["count"], ema_s=c["ema_s"],
+                            total_s=c["total_s"],
+                            hist=_hist_from_json(c["hist"]),
+                            ratio_count=c["ratio_count"],
+                            ratio_ema=c["ratio_ema"])
+            prof.cells[tuple(c["key"])] = cell
+        prof.residual = {ph: _hist_from_json(h)
+                         for ph, h in obj["residual"].items()}
+        prof.phase_ratio = {ph: list(pr)
+                            for ph, pr in obj["phase_ratio"].items()}
+        for ph, pr in prof.phase_ratio.items():
+            prof._drift_out[ph] = pr[0] >= prof.drift_min_samples \
+                and abs(pr[1] - 1.0) > prof.drift_tol
+        sp = obj["spec"]
+        prof.spec_drafted = sp["drafted"]
+        prof.spec_accepted = sp["accepted"]
+        prof.spec_samples = sp["samples"]
+        prof._spec_ema = sp["ema"]
+        return prof
+
+    def save(self, path) -> None:
+        pathlib.Path(path).write_text(json.dumps(self.to_json(), indent=1))
+
+    @classmethod
+    def load(cls, path, *, reference=None,
+             tracer: Optional[Tracer] = None) -> "CostProfiler":
+        return cls.from_json(json.loads(pathlib.Path(path).read_text()),
+                             reference=reference, tracer=tracer)

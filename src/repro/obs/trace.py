@@ -69,7 +69,7 @@ SPAN_NAMES = frozenset({
 })
 INSTANT_NAMES = frozenset({
     "admitted", "admission_reject", "preempt", "cow_fork", "finish",
-    "shed", "route", "scale_up", "scale_down",
+    "shed", "route", "scale_up", "scale_down", "profile_drift",
 })
 EVENT_NAMES = SPAN_NAMES | INSTANT_NAMES
 
@@ -90,27 +90,46 @@ class TraceEvent:
 class Tracer:
     """Collects TraceEvents; a disabled tracer drops everything at the call
     boundary so instrumented code needs no branches of its own (hot loops
-    may still guard args-dict construction behind ``tracer.enabled``)."""
+    may still guard args-dict construction behind ``tracer.enabled``).
 
-    def __init__(self, enabled: bool = True):
+    ``sinks`` are callbacks fed every event as it is emitted — the online
+    cost profiler (``obs.profile.CostProfiler``) attaches here to learn
+    measured phase times from the span stream.  ``retain=False`` turns the
+    tracer into a pure measurement bus: sinks still see every event but
+    nothing is stored, so profiling a long serve run costs O(1) memory."""
+
+    def __init__(self, enabled: bool = True, retain: bool = True):
         self.enabled = enabled
+        self.retain = retain
         self.events: list[TraceEvent] = []
+        self.sinks: list = []
 
     def __bool__(self) -> bool:
         return self.enabled
+
+    def add_sink(self, sink) -> None:
+        """Register a callback invoked with each emitted TraceEvent."""
+        self.sinks.append(sink)
 
     def span(self, name: str, t0: float, t1: float, *, track: int = 0,
              row: int = ROW_ENGINE, args: Optional[dict] = None) -> None:
         if not self.enabled:
             return
-        self.events.append(TraceEvent(name, "X", t0, max(0.0, t1 - t0),
-                                      track, row, args))
+        ev = TraceEvent(name, "X", t0, max(0.0, t1 - t0), track, row, args)
+        if self.retain:
+            self.events.append(ev)
+        for sink in self.sinks:
+            sink(ev)
 
     def instant(self, name: str, t: float, *, track: int = 0,
                 row: int = ROW_ENGINE, args: Optional[dict] = None) -> None:
         if not self.enabled:
             return
-        self.events.append(TraceEvent(name, "i", t, 0.0, track, row, args))
+        ev = TraceEvent(name, "i", t, 0.0, track, row, args)
+        if self.retain:
+            self.events.append(ev)
+        for sink in self.sinks:
+            sink(ev)
 
     def clear(self) -> None:
         self.events.clear()

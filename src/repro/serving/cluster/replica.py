@@ -79,7 +79,7 @@ class Replica:
                  chunk_tokens: int = 0, preempt: bool = False,
                  spec_tokens: int = 0, spec_acceptance: float = 0.0,
                  spawned_at: float = 0.0, engine=None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None, price_model=None):
         self.rid = rid
         self.model_cfg = model_cfg
         model_mem = model_mem or model_cfg.param_count() * 2.0
@@ -88,6 +88,13 @@ class Replica:
             raise RuntimeError(
                 f"replica {rid}: deployment infeasible on its partition")
         self.lm = LatencyModel(model_cfg, nodes, latency, self.dmap)
+        # pricing/belief model: every load *projection* (drain, backlog,
+        # projected_finish, capacity_rps — hence slo_aware shedding and
+        # autoscaler capacity) prices through ``price`` while *execution*
+        # stays on the analytic physics ``lm``.  Defaults to the physics;
+        # a ``CalibratedLatencyModel`` (or a deliberately miscalibrated
+        # belief, in tests) slots in without touching ground truth.
+        self.price = price_model if price_model is not None else self.lm
         self.max_batch = max_batch
         self.block_size = block_size
         self.n_blocks = n_blocks
@@ -164,15 +171,19 @@ class Replica:
     def free_blocks(self) -> int:
         return max(0, self.n_blocks - self.projected_blocks)
 
-    def _decode_seconds(self, w: int, out: float, kv: float) -> float:
+    def _decode_seconds(self, w: int, out: float, kv: float,
+                        lm=None) -> float:
         """Decode-phase seconds for ``out`` tokens at batch width ``w``:
         with speculation each iteration is a K+1-wide verify pass emitting
         ``spec_speedup(K, acceptance)`` expected tokens — the projection
         must price the *measured* operating point, or slo_aware routing
         sheds requests a speculating engine would finish in time (and
-        conversely over-admits when acceptance collapses)."""
+        conversely over-admits when acceptance collapses).  Prices on the
+        belief model unless ``lm`` pins a specific one (execution passes
+        the physics ``self.lm``)."""
         from repro.core.scheduler import spec_speedup
-        t_iter = self.lm.token_time(w, kv, q_tokens=self.spec_tokens + 1)
+        model = lm if lm is not None else self.price
+        t_iter = model.token_time(w, kv, q_tokens=self.spec_tokens + 1)
         iters = out / spec_speedup(self.spec_tokens, self.spec_acceptance)
         return iters * t_iter
 
@@ -191,10 +202,10 @@ class Replica:
         out = max((r.predicted_output_len or r.sched_output_len)
                   for r in chunk)
         kv = max(r.input_len for r in chunk) + out / 2
-        t_pre = self.lm.prefill_time(w, in_net)
+        t_pre = self.price.prefill_time(w, in_net)
         if self.chunk_tokens > 0:
             n_chunks = -(-in_net // self.chunk_tokens)
-            t_pre += (n_chunks - 1) * self.lm.token_time(w, in_net / 2)
+            t_pre += (n_chunks - 1) * self.price.token_time(w, in_net / 2)
         return t_pre + self._decode_seconds(w, out, kv)
 
     def projected_drain(self) -> float:
@@ -234,7 +245,7 @@ class Replica:
         """Sustainable request rate at full batch width (autoscaler's
         per-replica capacity denominator; speculation raises it)."""
         w = self.max_batch
-        t = self.lm.prefill_time(w, mean_in) \
+        t = self.price.prefill_time(w, mean_in) \
             + self._decode_seconds(w, mean_out, mean_in + mean_out / 2)
         return w / t if t > 0 else float("inf")
 
@@ -301,14 +312,19 @@ class Replica:
         t_cursor = now + t_pre
         remaining = sorted(b.requests, key=lambda r: r.true_output_len)
         step_start = 0
+        dec_steps = 0
+        kv_wsum = 0.0
         for r in remaining:
             steps = r.true_output_len - step_start
             if steps > 0:
-                # same speculation-aware pricing as the projections — the
-                # simulated execution must deliver the speedup the routing
-                # signals promised, or slo_aware admits on optimism
-                t_cursor += self._decode_seconds(
-                    n, steps, in_len + step_start + steps / 2)
+                # speculation-aware like the projections, but *execution*
+                # runs on the physics model self.lm — a miscalibrated
+                # belief must change decisions, never ground truth
+                kv_seg = in_len + step_start + steps / 2
+                t_cursor += self._decode_seconds(n, steps, kv_seg,
+                                                 lm=self.lm)
+                dec_steps += steps
+                kv_wsum += steps * kv_seg
                 step_start = r.true_output_len
             r.start_time = now
             r.first_token_time = now + t_pre
@@ -332,13 +348,22 @@ class Replica:
             if monitor is not None:
                 monitor.observe(r)
         if self.tracer.enabled:
+            from repro.core.scheduler import spec_speedup
             self.tracer.span("batch_prefill", now, now + t_pre,
                              track=self.rid,
                              args={"batch": n, "tokens": pre_len})
+            # kv/iters/q_tokens let the profiler sink normalize this
+            # whole-drain span to per-iteration decode cost at the
+            # batch's steps-weighted mean operating point
+            iters = dec_steps / spec_speedup(self.spec_tokens,
+                                             self.spec_acceptance)
             self.tracer.span("batch_decode", now + t_pre, t_cursor,
                              track=self.rid,
                              args={"batch": n,
-                                   "tokens": b.true_padded_output})
+                                   "tokens": b.true_padded_output,
+                                   "kv": kv_wsum / max(1, dec_steps),
+                                   "iters": iters,
+                                   "q_tokens": self.spec_tokens + 1})
         st = self.stats
         st.batches += 1
         st.served += n

@@ -284,6 +284,7 @@ class PagedEngine:
                  drafter=None,
                  tracer: Optional[Tracer] = None,
                  track: int = 0,
+                 cost_profiler=None,
                  dtype=jnp.float32):
         ok, why = api.paged_compatible(cfg)
         if not ok:
@@ -293,6 +294,10 @@ class PagedEngine:
         self.pcfg = pcfg
         self.plan = plan
         self.monitor = monitor
+        # online cost profiler (obs.profile.CostProfiler): receives the
+        # measured speculative-acceptance samples directly (span-side cost
+        # learning attaches to the tracer, not here)
+        self.cost_profiler = cost_profiler
         # lifecycle tracing: a disabled tracer is a no-op at every call, so
         # the engine holds one unconditionally; ``track`` is the replica id
         # this engine's events land on (chrome pid)
@@ -763,6 +768,10 @@ class PagedEngine:
             st.kv_len[slot] += n_emit
             res.drafted_tokens += k_eff
             res.accepted_tokens += j
+            if self.cost_profiler is not None and k_eff > 0:
+                # measured acceptance: the live signal that retires the
+                # static planning prior in launch/serve.py
+                self.cost_profiler.observe_acceptance(j, k_eff)
             res.spec_rolled_blocks += st.truncate_blocks(
                 slot, int(st.kv_len[slot]), bs)
             prev = self._last_emit.get(slot)
@@ -778,7 +787,9 @@ class PagedEngine:
                     ts0 - self._serve_t0, now - self._serve_t0,
                     track=self.track, row=slot_row(slot),
                     args={"rid": r.rid, "drafted": k_eff, "accepted": j,
-                          "emitted": n_emit})
+                          "emitted": n_emit, "batch": len(decoding),
+                          "kv": float(np.mean(kv[decoding])),
+                          "q_tokens": t_w})
 
     # ------------------------------------------------------------------ serve
     def run_continuous(self, requests: list, *,
@@ -976,7 +987,10 @@ class PagedEngine:
                         "decode", td0 - self._serve_t0,
                         now - self._serve_t0, track=self.track,
                         row=slot_row(slot),
-                        args={"rid": r.rid, "token": int(nxt[slot])})
+                        args={"rid": r.rid, "token": int(nxt[slot]),
+                              "batch": len(decoding),
+                              "kv": float(np.mean(kv[decoding])),
+                              "q_tokens": 1})
         jax.block_until_ready(st.pools)
         res.decode_s = time.perf_counter() - t_total - res.prefill_s
         res.steps = steps

@@ -421,6 +421,7 @@ def simulate_continuous(
     spec_acceptance: float = 0.0,
     tracer: Optional[Tracer] = None,
     track: int = 0,
+    latency_model=None,
 ) -> ContinuousSimResult:
     """Iteration-level continuous-batching simulation on one replica — the
     analytic twin of ``PagedEngine.run_continuous``.
@@ -449,16 +450,22 @@ def simulate_continuous(
 
     ``tracer`` records the same span schema as the live engine (queued /
     prefill_chunk / decode / verify / preempt / finish on the same
-    queue/slot rows), so a simulated and a live timeline diff directly."""
+    queue/slot rows), so a simulated and a live timeline diff directly.
+    ``latency_model`` overrides the internally-built analytic model —
+    e.g. a ``CalibratedLatencyModel`` warm-started from a profile
+    registry, or a deliberately perturbed model in calibration tests."""
     from repro.core.scheduler import spec_speedup as _speedup
     tracer = tracer if tracer is not None else NULL_TRACER
     if nodes is None:
         nodes, latency = paper_cluster()
     model_mem = model_mem or model_cfg.param_count() * 2.0
-    dmap = deploy(model_mem, model_cfg.n_layers, nodes, latency)
-    if not dmap.path:
-        raise RuntimeError("deployment infeasible")
-    lm = LatencyModel(model_cfg, nodes, latency, dmap)
+    if latency_model is not None:
+        lm = latency_model
+    else:
+        dmap = deploy(model_mem, model_cfg.n_layers, nodes, latency)
+        if not dmap.path:
+            raise RuntimeError("deployment infeasible")
+        lm = LatencyModel(model_cfg, nodes, latency, dmap)
 
     reqs = sorted(requests, key=lambda r: r.arrival)
     if profiler is not None:
@@ -614,7 +621,9 @@ def simulate_continuous(
             dec_name = "verify" if spec_tokens > 0 else "decode"
             for e in decoding:
                 tracer.span(dec_name, t_iter0 + t_pre, t, track=track,
-                            row=slot_row(e.slot), args={"rid": e.r.rid})
+                            row=slot_row(e.slot),
+                            args={"rid": e.r.rid, "batch": len(decoding),
+                                  "kv": kv, "q_tokens": spec_tokens + 1})
         if completed is not None and completed.out_done == 0:
             # first token out of prefill; a recompute completion (out_done
             # carried over from before eviction) restores the resume token
@@ -797,6 +806,7 @@ def simulate_cluster(
     spec_tokens: int = 0,
     spec_acceptance: float = 0.0,
     tracer: Optional[Tracer] = None,
+    price: Optional[Callable] = None,
 ) -> ClusterSimResult:
     """Discrete-event simulation of a replicated cluster: arrivals are
     routed on landing (``router``: a policy name, RouterConfig, or Router),
@@ -819,6 +829,13 @@ def simulate_cluster(
     ``spec_tokens``/``spec_acceptance`` likewise describe engine-side
     speculative decoding: replicas price decode at the expected
     tokens-per-verify-iteration of that operating point.
+
+    ``price`` is a factory ``analytic_lm -> pricing model`` applied to
+    each replica's own LatencyModel: projections, capacity, and shedding
+    decisions use the returned model while *execution* keeps the analytic
+    physics — how a ``CalibratedLatencyModel`` (or a deliberately
+    miscalibrated belief, in tests) is threaded through the whole
+    routing/autoscaling stack without touching ground truth.
     """
     from repro.serving.cluster import (Autoscaler, Replica, Router,
                                        RouterConfig)
@@ -851,6 +868,8 @@ def simulate_cluster(
                       preempt=preempt, spec_tokens=spec_tokens,
                       spec_acceptance=spec_acceptance, spawned_at=now,
                       tracer=tracer)
+        if price is not None:
+            rep.price = price(rep.lm)
         rep.partition = pi
         replicas.append(rep)
         return rep

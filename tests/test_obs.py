@@ -83,6 +83,38 @@ def test_histogram_merge_exact_and_summary():
     assert tiny.quantile(0.5) <= tiny.v_min
 
 
+def test_histogram_edge_cases():
+    """Zero and negative samples clamp into bucket 0 (a skewed clock must
+    never throw), an empty histogram reports nan quantiles/mean and a bare
+    {"count": 0} summary, and merging with an empty histogram is the
+    identity in both directions."""
+    import math
+    h = Histogram()
+    h.record(0.0)
+    h.record(-3.5)
+    assert h.n == 2 and h.counts == {0: 2}
+    assert h.min_v == 0.0 and h.max_v == 0.0
+    assert h.quantile(0.5) == 0.0          # clamped to the observed range
+    assert h.total == 0.0 and h.mean == 0.0
+
+    empty = Histogram()
+    assert empty.summary() == {"count": 0}
+    assert math.isnan(empty.quantile(0.5)) and math.isnan(empty.mean)
+
+    filled = Histogram()
+    filled.record_many([0.01, 0.1, 1.0])
+    before = (dict(filled.counts), filled.n, filled.total,
+              filled.min_v, filled.max_v)
+    filled.merge(Histogram())              # empty into filled: no-op
+    assert (dict(filled.counts), filled.n, filled.total,
+            filled.min_v, filled.max_v) == before
+    receiver = Histogram()
+    receiver.merge(filled)                 # filled into empty: copies
+    assert receiver.counts == filled.counts and receiver.n == filled.n
+    assert receiver.quantile(0.95) == filled.quantile(0.95)
+    assert receiver.summary() == filled.summary()
+
+
 # ------------------------------------------------------- span invariants
 
 def test_span_vocabulary_and_nesting_invariants():

@@ -1,0 +1,389 @@
+"""Online cost profiler + calibrated pricing: span-sink cell collection
+with per-iteration dedup, residual ratios and band-crossing drift
+detection, the CalibratedLatencyModel correction chain (cell -> phase ->
+analytic), the versioned profile registry round-trip, the measured
+speculative-acceptance EMA, the Replica execution/belief split, and the
+schema-v3 metrics profile block."""
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import get_scheduler
+from repro.core.scheduler import SchedulerConfig, spec_speedup
+from repro.core.types import Request
+from repro.obs import (CalibratedLatencyModel, CostProfiler, Tracer,
+                       batch_bucket, check_invariants, metrics_payload,
+                       token_bucket, validate_metrics)
+from repro.serving.cluster import Replica
+from repro.serving.simulator import LatencyModel, paper_cluster
+
+CFG = get_config("chatglm2-6b")
+
+
+def _lm():
+    nodes, lat = paper_cluster()
+    from repro.core.deployer import helr
+    dmap = helr(CFG.param_count() * 2.0, CFG.n_layers, nodes, lat)
+    return LatencyModel(CFG, nodes, lat, dmap)
+
+
+def _miscal(lm, factor=0.5):
+    """The demo miscalibration: efficiency off 2x.  Decode at small batch
+    is memory-bound (insensitive), prefill is compute-bound (doubles)."""
+    return dataclasses.replace(lm, efficiency=lm.efficiency * factor)
+
+
+def _feed(prof, tr, lm, n=40, seed=0):
+    """Pump measured (ground-truth) spans through the tracer into the
+    profiler, covering a spread of operating points."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for _ in range(n):
+        b = int(rng.choice([1, 2, 4, 8]))
+        kv = float(rng.choice([64, 128, 256, 512]))
+        d = lm.token_time(b, kv)
+        tr.span("decode", t, t + d, row=2,
+                args={"batch": b, "kv": kv, "q_tokens": 1})
+        t += d
+        pl = int(rng.choice([32, 64, 128, 256]))
+        dp = lm.prefill_time(b, pl)
+        tr.span("batch_prefill", t, t + dp, args={"batch": b, "tokens": pl})
+        t += dp
+    return t
+
+
+# ---------------------------------------------------------------- bucketing
+
+def test_operating_point_buckets():
+    """Small batches stay exact (batching effects change fastest there),
+    larger ones round to powers of two; token buckets are half-octave."""
+    assert [batch_bucket(b) for b in (1, 2, 3, 4)] == [1, 2, 3, 4]
+    assert batch_bucket(5) == batch_bucket(8) == 8
+    assert batch_bucket(9) == 16
+    assert token_bucket(0.5) == 0
+    assert token_bucket(64) != token_bucket(128)     # octave apart: distinct
+    assert token_bucket(100) == token_bucket(110)    # within half-octave
+
+
+# ----------------------------------------------------------------- the sink
+
+def test_sink_collects_cells_and_dedupes_slot_copies():
+    """One engine iteration emits one span per *slot* sharing (t0, dur);
+    the sink must record one kernel sample, not batch-many."""
+    prof = CostProfiler()
+    tr = Tracer(retain=False)
+    tr.add_sink(prof.on_event)
+    # a batch-of-4 decode iteration: 4 per-slot spans, identical interval
+    for slot in range(4):
+        tr.span("decode", 1.0, 1.01, row=2 + slot,
+                args={"batch": 4, "kv": 128.0, "q_tokens": 1})
+    cell = prof.decode_cell(4, 128.0)
+    assert cell is not None and cell.count == 1
+    assert cell.ema_s == pytest.approx(0.01)
+    # a later iteration at the same point is a new sample
+    tr.span("decode", 2.0, 2.02, row=2, args={"batch": 4, "kv": 128.0})
+    assert prof.decode_cell(4, 128.0).count == 2
+    # retain=False: pure measurement bus, nothing stored
+    assert tr.events == []
+    # spans without operating-point args (old producers) are ignored
+    tr.span("decode", 3.0, 3.01, args={"rid": 1})
+    assert sum(c.count for c in prof.cells.values()) == 2
+    # instants and non-cost spans are ignored too
+    tr.instant("finish", 4.0)
+    tr.span("queued", 0.0, 5.0, args={"batch": 1, "kv": 1.0})
+    assert sum(c.count for c in prof.cells.values()) == 2
+
+
+def test_batch_decode_drain_normalizes_per_iteration():
+    """The cluster replica's whole-drain batch_decode span carries iters;
+    the sink must divide down to per-iteration cost (weighted count)."""
+    prof = CostProfiler()
+    tr = Tracer()
+    tr.add_sink(prof.on_event)
+    tr.span("batch_decode", 0.0, 1.0,
+            args={"batch": 8, "kv": 200.0, "q_tokens": 1, "iters": 50.0})
+    cell = prof.decode_cell(8, 200.0)
+    assert cell.ema_s == pytest.approx(1.0 / 50.0)
+    assert cell.count == 50
+
+
+# -------------------------------------------------------- residuals & drift
+
+def test_residual_ratio_and_drift_instant():
+    """Against a 2x-efficiency-miscalibrated reference, the compute-bound
+    prefill phase shows ratio ~0.5 and crosses the drift band exactly once
+    (transition-triggered, not per-sample); the profile_drift instant lands
+    back in the trace and passes the structural invariants."""
+    lm = _lm()
+    bad = _miscal(lm)
+    tr = Tracer()
+    prof = CostProfiler(reference=bad, tracer=tr, drift_tol=0.25,
+                        drift_min_samples=4)
+    tr.add_sink(prof.on_event)
+    _feed(prof, tr, lm, n=30)
+    ratio, n = prof.phase_correction("prefill")
+    assert n >= 30 and ratio == pytest.approx(0.5, rel=0.05)
+    # decode at these operating points is memory-bound: efficiency barely
+    # moves it, so its calibration ratio stays in-band
+    dratio, _ = prof.phase_correction("decode")
+    assert abs(dratio - 1.0) < 0.25
+    drifts = [e for e in tr.events if e.name == "profile_drift"]
+    assert len(drifts) == 1 and prof.drift_events == 1
+    assert drifts[0].args["phase"] == "prefill"
+    assert check_invariants(tr.events) == []
+    m = prof.metrics()
+    assert m["residual"]["prefill"]["p50"] == pytest.approx(0.5, rel=0.1)
+    assert m["coverage"]["prefill"]["samples"] >= 30
+    assert m["drift_events"] == 1
+
+
+def test_drift_rearms_after_band_reentry():
+    """Drift is a band-crossing detector: once the ratio EMA returns
+    in-band, the next excursion fires again."""
+    lm = _lm()
+    prof = CostProfiler(reference=lm, tracer=Tracer(), drift_tol=0.2,
+                        drift_min_samples=2, alpha=0.9)
+    pl = 128
+    pred = lm.prefill_time(1, pl)
+    for _ in range(4):                       # far out of band
+        prof.observe_prefill(pred * 2.0, batch=1, tokens=pl)
+    assert prof.drift_events == 1
+    for _ in range(6):                       # back in band
+        prof.observe_prefill(pred, batch=1, tokens=pl)
+    assert prof.drift_events == 1
+    for _ in range(4):                       # out again -> second event
+        prof.observe_prefill(pred * 2.0, batch=1, tokens=pl)
+    assert prof.drift_events == 2
+
+
+# -------------------------------------------------------------- calibration
+
+def test_calibration_recovers_miscalibrated_predictions():
+    """CalibratedLatencyModel over a 2x-miscalibrated analytic model must
+    return to ground truth on covered points AND on uncovered ones via the
+    phase-wide ratio (a uniform miscalibration generalizes); a
+    well-calibrated model passes through exactly (correction 1.0)."""
+    lm = _lm()
+    bad = _miscal(lm)
+    tr = Tracer(retain=False)
+    prof = CostProfiler(reference=bad, tracer=tr)
+    tr.add_sink(prof.on_event)
+    _feed(prof, tr, lm, n=40)
+    for _ in range(3):      # make (4, 256) a definitely-covered cell
+        prof.observe_prefill(lm.prefill_time(4, 256), batch=4, tokens=256)
+    cal = CalibratedLatencyModel(bad, prof)
+    # covered operating point: cell-ratio correction
+    assert cal.prefill_time(4, 256) == pytest.approx(lm.prefill_time(4, 256),
+                                                     rel=0.05)
+    # uncovered point (batch 64 never executed): phase-ratio fallback
+    assert cal.prefill_time(64, 300) == pytest.approx(
+        lm.prefill_time(64, 300), rel=0.05)
+    cc = cal.coverage_counters()
+    assert cc["cell_hits"] >= 1 and cc["covered_frac"] > 0
+    # an *empty* profile prices pure-analytic (correction exactly 1.0)
+    virgin = CalibratedLatencyModel(bad, CostProfiler())
+    assert virgin.token_time(4, 256) == bad.token_time(4, 256)
+    assert virgin.coverage_counters()["cell_misses"] == 1
+    # attribute delegation: everything else is the analytic model's
+    assert cal.peak_flops == bad.peak_flops
+    assert cal.efficiency == bad.efficiency
+
+
+def test_well_calibrated_model_is_a_fixed_point():
+    """Measured == predicted -> every ratio is 1.0 -> calibrated == analytic
+    bit-for-bit, so turning calibration on never perturbs a good model."""
+    lm = _lm()
+    tr = Tracer(retain=False)
+    prof = CostProfiler(reference=lm, tracer=tr)
+    tr.add_sink(prof.on_event)
+    _feed(prof, tr, lm, n=20)
+    cal = CalibratedLatencyModel(lm, prof)
+    for b, kv in ((1, 64), (4, 256), (8, 512), (32, 1000)):
+        assert cal.token_time(b, kv) == pytest.approx(lm.token_time(b, kv))
+        assert cal.prefill_time(b, kv) == pytest.approx(
+            lm.prefill_time(b, int(kv)))
+
+
+# ----------------------------------------------------------------- registry
+
+def test_profile_registry_round_trip_identical_predictions():
+    lm = _lm()
+    bad = _miscal(lm)
+    tr = Tracer(retain=False)
+    prof = CostProfiler(reference=bad, tracer=tr)
+    tr.add_sink(prof.on_event)
+    _feed(prof, tr, lm, n=25)
+    prof.observe_acceptance(3, 4)
+    blob = json.dumps(prof.to_json())
+    prof2 = CostProfiler.from_json(json.loads(blob), reference=bad)
+    cal1, cal2 = CalibratedLatencyModel(bad, prof), \
+        CalibratedLatencyModel(bad, prof2)
+    for b, kv in ((1, 64), (4, 256), (8, 512), (64, 300), (2, 100)):
+        assert cal1.token_time(b, kv) == cal2.token_time(b, kv)
+        assert cal1.prefill_time(b, int(kv)) == cal2.prefill_time(b, int(kv))
+    assert prof2.spec_acceptance == prof.spec_acceptance
+    assert prof2.metrics() == prof.metrics()
+    # second generation of the registry is byte-stable
+    assert json.dumps(prof2.to_json()) == blob
+    with pytest.raises(ValueError):
+        CostProfiler.from_json({"profile_version": 999})
+
+
+def test_registry_file_save_load(tmp_path):
+    prof = CostProfiler()
+    prof.observe_decode(0.01, batch=4, kv=128)
+    p = tmp_path / "prof.json"
+    prof.save(p)
+    back = CostProfiler.load(p)
+    assert back.decode_cell(4, 128).count == 1
+    assert back.decode_cell(4, 128).ema_s == pytest.approx(0.01)
+
+
+# ----------------------------------------------------- acceptance EMA
+
+def test_spec_acceptance_ema_and_bootstrap():
+    prof = CostProfiler()
+    assert prof.spec_acceptance == 0.5          # bootstrap prior
+    prof.observe_acceptance(4, 4)
+    assert prof.spec_acceptance == 1.0
+    for _ in range(20):
+        prof.observe_acceptance(1, 4)
+    assert prof.spec_acceptance == pytest.approx(0.25, abs=0.05)
+    prof.observe_acceptance(0, 0)               # zero-draft pass: ignored
+    assert prof.spec_samples == 21
+    # speedup pricing consumes the EMA via SchedulerConfig.with_speculation
+    cfg = SchedulerConfig().with_speculation(4, prof.spec_acceptance)
+    assert cfg.spec_speedup == pytest.approx(
+        spec_speedup(4, prof.spec_acceptance))
+    assert SchedulerConfig().spec_speedup == 1.0
+
+
+# ------------------------------------------- replica execution/belief split
+
+def _req(rid, *, in_len=64, out_len=32, slo=30.0, arrival=0.0):
+    toks = list(range(100, 100 + in_len))
+    r = Request(rid=rid, tokens=toks, input_len=len(toks), slo=slo,
+                arrival=arrival, true_output_len=out_len)
+    r.predicted_output_len = out_len
+    return r
+
+
+def test_replica_price_model_changes_beliefs_not_execution():
+    """A miscalibrated pricing model must move every projection (drain,
+    finish, capacity) but leave executed batch timings — ground truth —
+    untouched."""
+    def mk(price=False):
+        nodes, lat = paper_cluster()
+        rep = Replica(0, CFG, nodes, lat)
+        if price:
+            rep.price = _miscal(rep.lm)
+        for i in range(4):
+            rep.enqueue(_req(i), 0.0)
+        return rep
+
+    honest, deluded = mk(), mk(price=True)
+    assert deluded.projected_drain() > honest.projected_drain()
+    probe = _req(99, slo=5.0)
+    assert deluded.projected_finish(probe, 0.0) \
+        > honest.projected_finish(probe, 0.0)
+    assert deluded.capacity_rps() < honest.capacity_rps()
+    # execution is physics: identical finish times either way
+    dh = honest.start_batch(0.0, get_scheduler("slo-odbs"),
+                            SchedulerConfig())
+    dd = deluded.start_batch(0.0, get_scheduler("slo-odbs"),
+                             SchedulerConfig())
+    assert dh == dd
+
+
+def test_simulate_continuous_latency_model_override():
+    """The latency_model override reaches the iteration loop: a slower
+    model stretches the makespan of an otherwise identical run."""
+    from repro.serving import simulate_continuous
+    lm = _lm()
+
+    def mk():
+        reqs = [_req(i, in_len=48, out_len=8, arrival=0.0) for i in range(4)]
+        for r in reqs:
+            r.predicted_output_len = r.true_output_len
+        return reqs
+
+    base = simulate_continuous(mk(), CFG, max_batch=4, max_new=8,
+                               latency_model=lm)
+    slow = simulate_continuous(mk(), CFG, max_batch=4, max_new=8,
+                               latency_model=_miscal(lm))
+    assert slow.makespan > base.makespan
+    assert base.emitted_tokens == slow.emitted_tokens
+
+
+def test_simulator_spans_feed_profiler_coverage():
+    """simulate_continuous spans carry operating-point args: a profiler
+    sink on the tracer builds decode AND prefill coverage, and attaching
+    it never changes the simulation (pure observer)."""
+    from repro.serving import simulate_continuous
+
+    def mk():
+        rng = np.random.default_rng(5)
+        reqs = [_req(i, in_len=int(rng.integers(32, 128)),
+                     out_len=int(rng.integers(4, 16)), arrival=0.1 * i)
+                for i in range(8)]
+        for r in reqs:
+            r.predicted_output_len = r.true_output_len
+        return reqs
+
+    kw = dict(max_batch=4, max_new=16, chunk_tokens=32)
+    prof = CostProfiler()
+    tr = Tracer(retain=False)
+    tr.add_sink(prof.on_event)
+    observed = simulate_continuous(mk(), CFG, tracer=tr, **kw)
+    plain = simulate_continuous(mk(), CFG, **kw)
+    assert observed.makespan == plain.makespan
+    assert [(r.rid, r.finish_time) for r in observed.requests] \
+        == [(r.rid, r.finish_time) for r in plain.requests]
+    cov = prof.coverage()
+    assert cov["decode"]["samples"] > 0 and cov["prefill"]["samples"] > 0
+
+
+# ------------------------------------------------------------ metrics schema
+
+def test_metrics_schema_v3_profile_block():
+    prof = CostProfiler()
+    prof.observe_decode(0.01, batch=4, kv=128)
+    p = metrics_payload("x", latency_s=1.0, profile=prof.metrics())
+    assert p["schema"] == 3
+    assert validate_metrics(p) == []
+    assert p["profile"]["coverage"]["decode"]["samples"] == 1
+    # a v2 payload (no profile block) no longer validates
+    v2 = {k: v for k, v in metrics_payload("x").items() if k != "profile"}
+    v2["schema"] = 2
+    assert validate_metrics(v2) != []
+    # profile must be a dict when present
+    bad = metrics_payload("x")
+    bad["profile"] = 3
+    assert validate_metrics(bad) != []
+
+
+def test_monitor_publishes_length_prediction_confusion():
+    """Per-bucket precision and the (pred -> true) confusion matrix land in
+    Monitor.metrics() so aggregate accuracy stops hiding which bucket the
+    predictor bleeds on."""
+    from repro.core import LengthPredictor, Monitor, ResourceProfiler
+    from repro.core.profiler import PredictorConfig
+    cfg = get_config("smollm-135m").reduced()
+    pred = LengthPredictor(PredictorConfig(vocab=cfg.vocab_size), seed=0)
+    mon = Monitor(ResourceProfiler(pred, cfg), update_on_miss=False)
+    buckets = pred.length_to_bucket([4, 50])
+    for i, true in enumerate((4, 4, 50)):
+        r = _req(i, in_len=6, out_len=true)
+        r.predicted_bucket = int(buckets[0])       # always predict "short"
+        mon.observe(r)
+    m = mon.metrics()
+    lp = m["length_prediction"]
+    assert lp["accuracy"] == pytest.approx(2 / 3, abs=0.01)
+    key = str(int(buckets[0]))
+    assert lp["per_bucket_precision"][key] == pytest.approx(2 / 3, abs=0.01)
+    assert sum(lp["confusion"].values()) == 3
+    assert lp["confusion"][f"{int(buckets[0])}->{int(buckets[1])}"] == 1
