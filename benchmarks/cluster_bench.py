@@ -28,6 +28,19 @@ Three claims, enforced with assertions so regressions fail ``benchmarks.run``:
   autoscaler's replica-seconds over-spend.  The profiler must also flag
   the miscalibration itself (``profile_drift``: predicted-vs-observed
   ratio EMA leaves the tolerance band).
+* **Tail-aware heterogeneity** — on a fleet where one replica's hardware
+  is honestly 2x slower but the control plane believes all replicas are
+  identical-fast, per-replica quantile pricing (each replica corrected by
+  its *own* tail ratio, ``Replica.tail`` on p95) holds at least the SLO
+  attainment of a *shared mean*-corrected profile (the fleet average
+  under-prices the slow replica and over-prices the fast ones), and the
+  profiler attributes every drift event to the slow replica alone.
+* **Windowed decay** — after a mid-run replica slowdown, a half-life
+  profiler's per-replica ratio converges to a freshly measured truth
+  within a bounded number of post-slowdown samples (decay retires the
+  stale regime), while the cumulative-mean profiler stays stuck between
+  regimes — and the decayed profile flags the slowdown as drift on the
+  right replica.
 """
 from __future__ import annotations
 
@@ -46,6 +59,9 @@ from repro.serving.cluster import RouterConfig
 
 N_REPLICAS = 3
 MISCAL_FACTOR = 0.5       # pricing model believes the hardware is 2x slower
+SLOW_REPLICA = 2          # heterogeneous fleet: this replica runs 2x slower
+SLOW_FACTOR = 0.5         # honest physics: its devices lose half their perf
+PRICING_Q = 0.95          # tail pricing quantile for shed/admit decisions
 
 
 def _route_workload():
@@ -53,6 +69,18 @@ def _route_workload():
     return gen_shared_prefix_requests(SharedPrefixConfig(
         n_requests=236, n_templates=18, prefix_len=96, suffix_mean=3.0,
         turns=4, arrival_rate=22.0, slo_lo=4.0, slo_hi=40.0,
+        output_base=48.0, seed=3))
+
+
+def _hetero_workload():
+    """The heterogeneous-fleet regime: same conversation shape as the
+    routing workload but pushed harder (30 req/s) with SLOs tight enough
+    (2-10 s) that a request queued on the 2x-slower replica actually
+    misses — under the loose routing SLOs the slow replica meets its
+    deadlines anyway and mispricing it is free."""
+    return gen_shared_prefix_requests(SharedPrefixConfig(
+        n_requests=236, n_templates=18, prefix_len=96, suffix_mean=3.0,
+        turns=4, arrival_rate=30.0, slo_lo=2.0, slo_hi=10.0,
         output_base=48.0, seed=3))
 
 
@@ -64,11 +92,24 @@ def _burst_workload():
 
 
 def _run(reqs, cfg, *, router, n_replicas=N_REPLICAS, autoscale=None,
-         price=None, tracer=None):
+         price=None, tail_price=None, partitions=None, tracer=None):
     return simulate_cluster(
         [copy.deepcopy(r) for r in reqs], cfg, get_scheduler("slo-odbs"),
         SchedulerConfig(), n_replicas=n_replicas, router=router,
-        autoscale=autoscale, price=price, tracer=tracer)
+        autoscale=autoscale, price=price, tail_price=tail_price,
+        partitions=partitions, tracer=tracer)
+
+
+def _slow_partitions(n=N_REPLICAS, slow=SLOW_REPLICA, factor=SLOW_FACTOR):
+    """n identical paper_cluster partitions except one whose devices
+    honestly lose ``1 - factor`` of their performance — the heterogeneous
+    fleet the control plane does not know about."""
+    from repro.serving.simulator import DeviceNode, replicated_cluster
+    parts = replicated_cluster(n)
+    nodes, lat = parts[slow]
+    parts[slow] = ([DeviceNode(d.node_id, d.memory, d.performance * factor,
+                               d.name) for d in nodes], lat)
+    return parts
 
 
 def _miscal(lm):
@@ -199,6 +240,101 @@ def run() -> dict:
             "calibrated autoscaler lost SLO attainment vs anchor "
             f"({au_cal['slo_attainment']} vs {au['slo_attainment']})")
 
+    # -------------------------- heterogeneous fleet: per-replica tail pricing
+    # One replica's hardware honestly runs 2x slower; the control plane's
+    # belief is a single fast model for the whole fleet.  A measurement
+    # pass learns per-replica profiles, then the same workload runs with
+    # (A) the shared fleet-mean correction vs (B) per-replica corrections
+    # with p95 tail pricing on the shed/admit path.
+    het_reqs = _hetero_workload()
+    het_rc = RouterConfig(policy="slo_aware", shed_slack=1.0)
+    het_parts = _slow_partitions()
+    state: dict = {}
+    het_tr = Tracer(retain=False)
+    het_prof = CostProfiler(tracer=het_tr)
+    het_tr.add_sink(het_prof.on_event)
+
+    def uniform_belief(lm, rid):
+        # replica 0 spawns first on a fast partition: its analytic model
+        # is the fleet-wide (wrong for the slow replica) belief
+        state.setdefault("belief", lm)
+        if het_prof.reference is None:
+            het_prof.reference = state["belief"]
+        return state["belief"]
+
+    het_mis = _run(het_reqs, cfg, router=het_rc,
+                   partitions=het_parts, price=uniform_belief,
+                   tracer=het_tr).summary()
+    belief = state["belief"]
+    het_drift = het_prof.drift_by_replica()
+    if set(het_drift) != {SLOW_REPLICA}:
+        raise AssertionError(
+            "drift not attributed to the slow replica alone "
+            f"(by_replica={het_drift}, slow={SLOW_REPLICA})")
+    het_a = _run(het_reqs, cfg, router=het_rc,
+                 partitions=het_parts,
+                 price=lambda lm: CalibratedLatencyModel(belief, het_prof)
+                 ).summary()
+    het_b = _run(het_reqs, cfg, router=het_rc,
+                 partitions=het_parts,
+                 price=lambda lm, rid: CalibratedLatencyModel(
+                     belief, het_prof, replica=rid),
+                 tail_price=lambda lm, rid: CalibratedLatencyModel(
+                     belief, het_prof, replica=rid, quantile=PRICING_Q)
+                 ).summary()
+    if het_b["slo_attainment"] < het_a["slo_attainment"]:
+        raise AssertionError(
+            "per-replica tail pricing lost SLO attainment vs the shared "
+            f"mean profile ({het_b['slo_attainment']} vs "
+            f"{het_a['slo_attainment']})")
+
+    # ------------------------------ windowed decay: mid-run replica slowdown
+    # Two profilers watch the same span stream: half-life decay vs
+    # cumulative mean.  Two healthy passes bake in ratio~1.0 history, then
+    # one replica's hardware degrades 2x.  A third profiler that only sees
+    # the degraded pass defines the fresh truth.
+    fast_parts = _slow_partitions(factor=1.0)
+    # prefix caching skips most prefills, so the slow replica only sees a
+    # handful of prefill spans per pass: a short half-life (4 samples)
+    # keeps "re-learns within a bounded sample count" honest
+    p_decay = CostProfiler(reference=belief, half_life=4)
+    p_stale = CostProfiler(reference=belief)
+    tr1 = Tracer(retain=False)
+    tr1.add_sink(p_decay.on_event)
+    tr1.add_sink(p_stale.on_event)
+    for _ in range(2):
+        _run(reqs, cfg, router="round_robin", partitions=fast_parts,
+             tracer=tr1)
+    p_fresh = CostProfiler(reference=belief)
+    tr2 = Tracer(retain=False)
+    for sink in (p_decay.on_event, p_stale.on_event, p_fresh.on_event):
+        tr2.add_sink(sink)
+    for _ in range(2):
+        _run(reqs, cfg, router="round_robin", partitions=het_parts,
+             tracer=tr2)
+    r_fresh, n_fresh = p_fresh.phase_correction("prefill",
+                                                replica=SLOW_REPLICA)
+    r_decay, _ = p_decay.phase_correction("prefill", replica=SLOW_REPLICA)
+    r_stale, _ = p_stale.phase_correction("prefill", replica=SLOW_REPLICA)
+    if n_fresh < 1:
+        raise AssertionError("fresh profiler saw no slow-replica prefill")
+    decay_err = abs(r_decay - r_fresh) / r_fresh
+    stale_err = abs(r_stale - r_fresh) / r_fresh
+    if decay_err > 0.15:
+        raise AssertionError(
+            f"decayed profile did not converge after the slowdown "
+            f"(ratio {r_decay:.3f} vs fresh {r_fresh:.3f}, "
+            f"err {decay_err:.3f})")
+    if stale_err < 0.15:
+        raise AssertionError(
+            f"cumulative-mean profile unexpectedly converged "
+            f"(ratio {r_stale:.3f} vs fresh {r_fresh:.3f}, "
+            f"err {stale_err:.3f})")
+    if p_decay.drift_by_replica().get(SLOW_REPLICA, 0) < 1:
+        raise AssertionError(
+            "decayed profiler did not flag the slowdown as drift on the "
+            f"slow replica (by_replica={p_decay.drift_by_replica()})")
+
     prof_metrics = prof.metrics()
     out = {"router_ablation": rows,
            "autoscaler": {"static": st, "auto": au},
@@ -219,6 +355,29 @@ def run() -> dict:
                    ph: h.get("p50")
                    for ph, h in prof_metrics.get("residual", {}).items()},
            },
+           "heterogeneous": {
+               "uniform_belief": {"attainment": het_mis["slo_attainment"],
+                                  "shed": het_mis["shed"]},
+               "shared_mean": {"attainment": het_a["slo_attainment"],
+                               "shed": het_a["shed"]},
+               "per_replica_tail": {"attainment": het_b["slo_attainment"],
+                                    "shed": het_b["shed"],
+                                    "quantile": PRICING_Q},
+               "drift_by_replica": {str(r): n
+                                    for r, n in het_drift.items()},
+               "slow_replica_ratio": het_prof.metrics()["replicas"][
+                   str(SLOW_REPLICA)]["calibration_ratio"],
+           },
+           "decay": {
+               "fresh_ratio": round(r_fresh, 4),
+               "decayed_ratio": round(r_decay, 4),
+               "stale_ratio": round(r_stale, 4),
+               "decayed_err": round(decay_err, 4),
+               "stale_err": round(stale_err, 4),
+               "half_life": p_decay.half_life,
+               "slow_drift": p_decay.drift_by_replica().get(
+                   SLOW_REPLICA, 0),
+           },
            "claims": {
                "affinity_vs_rr_attainment":
                    f"{aff['slo_attainment']} vs {rr['slo_attainment']}",
@@ -232,6 +391,10 @@ def run() -> dict:
                    (au_mis["replica_seconds"] - au_cal["replica_seconds"])
                    / max(au_mis["replica_seconds"] - au["replica_seconds"],
                          1e-9), 4),
+               "tail_vs_shared_mean_attainment":
+                   f"{het_b['slo_attainment']} vs {het_a['slo_attainment']}",
+               "decay_vs_stale_err":
+                   f"{round(decay_err, 4)} vs {round(stale_err, 4)}",
            }}
     emit("cluster_bench", out)
     persist("cluster",
@@ -258,4 +421,12 @@ def run() -> dict:
             f"drift={prof.drift_events};"
             f"auto_rep_s={au['replica_seconds']}->"
             f"{au_mis['replica_seconds']}->{au_cal['replica_seconds']}")
+    csv_row("cluster_tail_hetero", 0.0,
+            f"attain_uniform={het_mis['slo_attainment']};"
+            f"attain_shared_mean={het_a['slo_attainment']};"
+            f"attain_tail={het_b['slo_attainment']};"
+            f"drift_slow={het_drift.get(SLOW_REPLICA, 0)}")
+    csv_row("cluster_decay", 0.0,
+            f"fresh={round(r_fresh, 4)};decayed={round(r_decay, 4)};"
+            f"stale={round(r_stale, 4)};half_life={p_decay.half_life}")
     return out

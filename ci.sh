@@ -124,6 +124,7 @@ assert need <= names, need - names
 metrics = json.load(open("/tmp/m.json"))
 errs = validate_metrics(metrics)
 assert not errs, errs
+assert metrics["schema"] >= 4, metrics["schema"]   # v4: per-replica drift
 mon = metrics["monitor"]
 for key in ("queue_wait", "ttft", "itl", "e2e"):
     assert {"p50", "p95", "p99"} <= set(mon[key]), key
@@ -158,7 +159,43 @@ for key, ca in a.cells.items():
     cb = b.cells[key]
     assert ca.ema_s == cb.ema_s and ca.mean_s == cb.mean_s \
         and ca.ratio_ema == cb.ratio_ema, key
-print(f"profile smoke: {len(a.cells)} cells round-trip identical, "
+# v2 registries carry per-replica sub-profiles; they must survive the
+# round trip cell-identical too (serve runs on replica 0)
+assert set(a.replica_profiles) == set(b.replica_profiles)
+for rid, sub in a.replica_profiles.items():
+    for key, ca in sub.cells.items():
+        cb = b.replica_profiles[rid].cells[key]
+        assert ca.ema_s == cb.ema_s and ca.ratio_ema == cb.ratio_ema, \
+            (rid, key)
+# a legacy flat (v1) registry still loads — as a fleet-only profile —
+# and any other version is refused with a clear error
+fleet = a.to_json()["fleet"]
+v1 = {"profile_version": 1, "alpha": a.alpha, "drift_tol": a.drift_tol,
+      "drift_min_samples": a.drift_min_samples, "drift_events": 1,
+      "cells": [{"key": c["key"], "count": c["count"],
+                 "ema_s": c["ema_s"], "total_s": c["total_s"],
+                 "hist": c["hist"], "ratio_count": c["ratio_count"],
+                 "ratio_ema": (c["ratio_num"] / c["ratio_den"])
+                 if c["ratio_den"] else 0.0}
+                for c in fleet["cells"]],
+      "residual": fleet["residual"],
+      "phase_ratio": {ph: [pr[0], pr[1] / pr[2] if pr[2] else 0.0]
+                      for ph, pr in fleet["phase_ratio"].items()},
+      "spec": {"drafted": 0, "accepted": 0, "samples": 0,
+               "ema": 0.5, "bootstrap": 0.5}}
+old = CostProfiler.from_json(json.loads(json.dumps(v1)))
+assert old.replica_profiles == {}, "v1 import must be fleet-only"
+assert len(old.cells) == len(a.cells)
+assert old.drift_events == 1
+try:
+    CostProfiler.from_json({"profile_version": 99})
+except ValueError as e:
+    assert "profile_version" in str(e), e
+else:
+    raise AssertionError("unknown profile_version was not refused")
+print(f"profile smoke: {len(a.cells)} cells "
+      f"({len(a.replica_profiles)} replica sub-profiles) round-trip "
+      f"identical, v1 loads fleet-only, v99 refused, "
       f"coverage={json.dumps(cov)} (token-identical serve)")
 PY
 }
@@ -213,5 +250,7 @@ interleave_smoke
 spec_smoke
 cluster_smoke
 traced_smoke
+profile_smoke
+validate_artifacts
 
 echo "ci.sh: all green"

@@ -71,6 +71,13 @@ class MonitorStats:
     cluster_util_mean_sum: float = 0.0        # sum of per-snapshot means
     scale_up_events: int = 0
     scale_down_events: int = 0
+    # --- calibration drift (fed by CostProfiler.monitor hook): band
+    # crossings of a replica's observed/predicted phase ratio, attributed
+    # per (replica, phase) so the dashboard shows *which* replica's
+    # hardware stopped matching its pricing model ---
+    profile_drift_events: int = 0
+    drift_by_replica: dict = field(default_factory=dict)  # rid -> count
+    drift_by_phase: dict = field(default_factory=dict)    # phase -> count
 
     @property
     def bucket_accuracy(self) -> float:
@@ -231,6 +238,15 @@ class Monitor:
         st.slo_observed += 1
         st.slo_violations += 1
 
+    def observe_drift(self, replica: int, phase: str) -> None:
+        """One calibration-drift band crossing, attributed to the replica
+        and phase it fired on (``CostProfiler`` calls this when its
+        ``monitor`` hook is set)."""
+        st = self.stats
+        st.profile_drift_events += 1
+        st.drift_by_replica[replica] = st.drift_by_replica.get(replica, 0) + 1
+        st.drift_by_phase[phase] = st.drift_by_phase.get(phase, 0) + 1
+
     def observe_scale(self, direction: int, n: int = 1) -> None:
         """Autoscaler event: ``direction`` > 0 adds replicas, < 0 drains."""
         if direction > 0:
@@ -303,6 +319,13 @@ class Monitor:
             out["cluster_util_mean"] = round(st.cluster_util_mean, 4)
             out["scale_up_events"] = st.scale_up_events
             out["scale_down_events"] = st.scale_down_events
+        if st.profile_drift_events:
+            out["profile_drift"] = {
+                "events": st.profile_drift_events,
+                "by_replica": {str(r): c for r, c in
+                               sorted(st.drift_by_replica.items())},
+                "by_phase": dict(sorted(st.drift_by_phase.items())),
+            }
         if st.bucket_confusion:
             # per-bucket precision: of requests *predicted* into bucket b,
             # the fraction whose true length landed there too

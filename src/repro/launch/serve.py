@@ -22,7 +22,10 @@ token-identical; the cluster projections price the *measured* acceptance
 EMA — warm-started from ``--profile-in``, bootstrap 0.5 before the first
 verify pass).  ``--profile-out``/``--profile-in`` persist and reload the
 online cost profile (measured phase-time cells, residuals, acceptance) as
-a versioned JSON registry, calibrating every pricing model it reaches.
+a versioned JSON registry, calibrating every pricing model it reaches —
+per replica, with ``--pricing-quantile Q`` switching SLO decisions onto a
+tail ratio and ``--profile-half-life N`` bounding the profile's memory so
+re-provisioned replicas re-learn.
 
 ``--replicas N`` lifts serving to the cluster layer (serving/cluster):
 requests are routed by ``--router`` across N replicas.  With ``--paged``
@@ -89,13 +92,29 @@ def _outputs_digest(done: dict) -> str:
     return hashlib.sha1(blob.encode()).hexdigest()[:12]
 
 
+def _pricing_counters(cal_models) -> dict:
+    """Aggregate coverage counters across every ``CalibratedLatencyModel``
+    the run priced through (one per replica on the cluster paths)."""
+    agg = {"cell_hits": 0, "phase_hits": 0, "cell_misses": 0}
+    for m in cal_models:
+        c = m.coverage_counters()
+        for k in agg:
+            agg[k] += c[k]
+    total = sum(agg.values())
+    agg["covered_frac"] = round(
+        (agg["cell_hits"] + agg["phase_hits"]) / total, 4) if total else 0.0
+    return agg
+
+
 def _write_artifacts(args, mon, tracer, cprof, *, latency_s=None,
                      p99_latency_s=None, throughput=None,
-                     utilization=None) -> None:
+                     utilization=None, cal_models=()) -> None:
     """Export the request-lifecycle trace (``--trace``, Chrome/Perfetto JSON)
     and the shared metrics payload (``--metrics-json`` — same schema the
     benchmarks persist).  Latency quantiles default to the monitor's e2e
-    histogram when the caller has no direct measurement."""
+    histogram when the caller has no direct measurement.  Profiled runs
+    also report how calibrated pricing resolved (coverage counters) and
+    which replicas drifted — previously they ended silently."""
     st = mon.stats
     if latency_s is None and st.e2e.n:
         latency_s = st.e2e.total / st.e2e.n
@@ -104,22 +123,38 @@ def _write_artifacts(args, mon, tracer, cprof, *, latency_s=None,
     if args.trace:
         obj = export_trace(tracer, args.trace)
         print(f"trace: {len(obj['traceEvents'])} events -> {args.trace}")
+    profile_block = cprof.metrics()
+    if cal_models:
+        profile_block["pricing"] = _pricing_counters(cal_models)
     if args.metrics_json:
         payload = metrics_payload(
             "serve", latency_s=latency_s, p99_latency_s=p99_latency_s,
             throughput=throughput, utilization=utilization,
             slo_attainment=st.slo_attainment if st.slo_observed else None,
-            monitor=mon.metrics(), profile=cprof.metrics())
+            monitor=mon.metrics(), profile=profile_block)
         write_metrics(args.metrics_json, payload)
         print(f"metrics -> {args.metrics_json}")
+    if args.profile_in or args.profile_out:
+        if cal_models:
+            pc = profile_block["pricing"]
+            print(f"calibration: cell_hits={pc['cell_hits']} "
+                  f"phase_hits={pc['phase_hits']} "
+                  f"cell_misses={pc['cell_misses']} "
+                  f"covered_frac={pc['covered_frac']}")
+        drift = cprof.drift_by_replica()
+        by_rep = " by_replica=" + json.dumps(
+            {str(r): n for r, n in drift.items()}) if drift else ""
+        print(f"drift: {cprof.drift_events} events{by_rep}")
     if args.profile_out:
         cprof.save(args.profile_out)
         cov = {p: c["samples"] for p, c in cprof.coverage().items()}
-        print(f"profile: {len(cprof.cells)} cells, samples {cov} "
+        print(f"profile: {len(cprof.cells)} cells, samples {cov}, "
+              f"{len(cprof.replica_profiles)} replica sub-profiles "
               f"-> {args.profile_out}")
 
 
-def _serve_cluster_live(args, cfg, params, mon, reqs, tracer, cprof) -> dict:
+def _serve_cluster_live(args, cfg, params, mon, reqs, tracer, cprof,
+                        cal_models) -> dict:
     """Route requests across N real PagedEngine-backed replicas, then serve
     each replica's share live (per-replica pool + prefix cache)."""
     max_prompt = max(len(r.tokens) for r in reqs)
@@ -146,7 +181,16 @@ def _serve_cluster_live(args, cfg, params, mon, reqs, tracer, cprof) -> dict:
                                cost_profiler=cprof),
             tracer=tracer)
         if args.profile_in:
-            rep.price = CalibratedLatencyModel(rep.lm, cprof)
+            # each replica prices from its own sub-profile (fleet-aggregate
+            # fallback); the tail model adds quantile pricing for the
+            # SLO-facing projections when --pricing-quantile is set
+            rep.price = CalibratedLatencyModel(rep.lm, cprof, replica=i)
+            cal_models.append(rep.price)
+            if args.pricing_quantile:
+                rep.tail = CalibratedLatencyModel(
+                    rep.lm, cprof, replica=i,
+                    quantile=args.pricing_quantile)
+                cal_models.append(rep.tail)
         replicas.append(rep)
     for r in sorted(reqs, key=lambda q: q.arrival):
         rep = router.dispatch(r, replicas, r.arrival)
@@ -176,7 +220,7 @@ def _serve_cluster_live(args, cfg, params, mon, reqs, tracer, cprof) -> dict:
     return done
 
 
-def _serve_cluster_sim(args, prof, mon, tracer, cprof) -> None:
+def _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models) -> None:
     """Cluster-scale path: LatencyModel-backed replicas on per-replica HELR
     deployments, driven by the discrete-event simulator."""
     full_cfg = get_config(args.arch)
@@ -201,17 +245,30 @@ def _serve_cluster_sim(args, prof, mon, tracer, cprof) -> None:
     if args.spec_tokens:
         sched_cfg = sched_cfg.with_speculation(args.spec_tokens, acc)
     # a warm profile registry calibrates every replica's *pricing* model
-    # (projections, shedding, autoscaler capacity); execution physics stay
-    # the replica's own analytic model
-    price = (lambda lm: CalibratedLatencyModel(lm, cprof)) \
-        if args.profile_in else None
+    # (projections, shedding, autoscaler capacity) from its own
+    # sub-profile; execution physics stay the replica's own analytic
+    # model.  --pricing-quantile adds a tail model for the SLO-facing
+    # projections (projected_finish, capacity_rps)
+    price = tail_price = None
+    if args.profile_in:
+        def price(lm, rid):
+            m = CalibratedLatencyModel(lm, cprof, replica=rid)
+            cal_models.append(m)
+            return m
+        if args.pricing_quantile:
+            def tail_price(lm, rid):
+                m = CalibratedLatencyModel(lm, cprof, replica=rid,
+                                           quantile=args.pricing_quantile)
+                cal_models.append(m)
+                return m
     res = simulate_cluster(
         reqs, full_cfg, get_scheduler(args.scheduler), sched_cfg,
         n_replicas=args.replicas, router=args.router, autoscale=auto,
         prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens,
         preempt=args.preempt, spec_tokens=args.spec_tokens,
         spec_acceptance=acc,
-        profiler=prof, monitor=mon, tracer=tracer, price=price)
+        profiler=prof, monitor=mon, tracer=tracer, price=price,
+        tail_price=tail_price)
     print("cluster:", res.summary())
     for s in res.replica_stats:
         print(f"  replica {s['rid']}: served={s['served']} "
@@ -289,7 +346,24 @@ def main():
                     help="warm-start from a saved profile registry: pricing "
                          "models calibrate against its measured cells and "
                          "speculation plans at its measured acceptance")
+    ap.add_argument("--pricing-quantile", type=float, default=None,
+                    metavar="Q",
+                    help="price SLO decisions (slo_aware shed/admit, "
+                         "autoscaler capacity) at this quantile of the "
+                         "measured observed/predicted ratio instead of its "
+                         "mean (e.g. 0.95; needs --profile-in; throughput "
+                         "projections stay mean-priced)")
+    ap.add_argument("--profile-half-life", type=int, default=0,
+                    metavar="N",
+                    help="decay the profile's calibration statistics with "
+                         "this sample half-life (rotating histograms, "
+                         "bounded memory) so a throttled/migrated replica "
+                         "re-learns; 0 = never forget.  Ignored with "
+                         "--profile-in (the registry's setting wins)")
     args = ap.parse_args()
+    if args.pricing_quantile is not None \
+            and not 0.0 < args.pricing_quantile <= 1.0:
+        raise SystemExit("--pricing-quantile must be in (0, 1]")
     if args.autoscale and args.paged:
         raise SystemExit("--autoscale needs the simulated cluster path: "
                          "drop --paged (elasticity has no live-engine mode)")
@@ -309,9 +383,11 @@ def main():
     else:
         tracer = NULL_TRACER
     cprof = CostProfiler.load(args.profile_in, tracer=tracer) \
-        if args.profile_in else CostProfiler(tracer=tracer)
+        if args.profile_in else CostProfiler(
+            tracer=tracer, half_life=args.profile_half_life or None)
     if want_profile:
         tracer.add_sink(cprof.on_event)
+    cal_models: list = []          # CalibratedLatencyModels the run priced by
 
     if args.chunk_tokens < 0:
         args.chunk_tokens = derive_chunk_tokens(SchedulerConfig(),
@@ -333,9 +409,10 @@ def main():
         pred.fit(toks, lens, epochs=8)
         prof = ResourceProfiler(pred, get_config(args.arch))
         mon = Monitor(prof)
-        _serve_cluster_sim(args, prof, mon, tracer, cprof)
+        cprof.monitor = mon            # drift attribution lands in metrics
+        _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models)
         print("monitor:", mon.metrics())
-        _write_artifacts(args, mon, tracer, cprof)
+        _write_artifacts(args, mon, tracer, cprof, cal_models=cal_models)
         return
 
     params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
@@ -366,12 +443,13 @@ def main():
     pred.fit(toks, lens, epochs=8)
     prof = ResourceProfiler(pred, cfg)
     mon = Monitor(prof)
+    cprof.monitor = mon                # drift attribution lands in metrics
     prof.profile(reqs)
 
     t0 = time.perf_counter()
     if args.replicas > 1 and args.paged:
         done = _serve_cluster_live(args, cfg, params, mon, reqs, tracer,
-                                   cprof)
+                                   cprof, cal_models)
     elif args.paged:
         # size the block tables for the longest admitted prompt plus the
         # decode budget so any --max-new value is admissible
@@ -439,7 +517,8 @@ def main():
               f"({cprof.spec_accepted}/{cprof.spec_drafted} over "
               f"{cprof.spec_samples} verify passes)")
     print("monitor:", mon.metrics())
-    _write_artifacts(args, mon, tracer, cprof, throughput=total / dt)
+    _write_artifacts(args, mon, tracer, cprof, throughput=total / dt,
+                     cal_models=cal_models)
 
 
 if __name__ == "__main__":

@@ -6,10 +6,10 @@ from repro.obs.calibrate import CalibratedLatencyModel  # noqa: F401
 from repro.obs.export import (event_names, export_trace,  # noqa: F401
                               metrics_payload, to_chrome, validate_metrics,
                               validate_trace, write_metrics)
-from repro.obs.hist import Histogram  # noqa: F401
+from repro.obs.hist import Histogram, RotatingHistogram  # noqa: F401
 from repro.obs.profile import (PROFILE_VERSION, CostCell,  # noqa: F401
-                               CostProfiler, batch_bucket, kv_bucket,
-                               token_bucket)
+                               CostProfiler, SubProfile, batch_bucket,
+                               kv_bucket, token_bucket)
 from repro.obs.trace import (EVENT_NAMES, INSTANT_NAMES,  # noqa: F401
                              NULL_TRACER, ROW_ENGINE, ROW_QUEUE, SPAN_NAMES,
                              LatencyBreakdown, TraceEvent, Tracer,

@@ -10,15 +10,27 @@ observed/predicted ratio:
 
     predicted = analytic(op) × correction(op)
 
-where ``correction`` resolves through a three-step fallback chain:
+where ``correction`` resolves through a fallback chain, most-specific
+scope first:
 
-1. the matching cell's ratio EMA, when that cell holds at least
+1. the matching cell's measured ratio in the model's *replica*
+   sub-profile (when ``replica`` is set), then the replica's phase-wide
+   ratio — a heterogeneous fleet prices each replica from its own
+   hardware's evidence;
+2. the matching *fleet* cell's ratio, when that cell holds at least
    ``min_samples`` reference-compared samples (coverage hit);
-2. the phase-wide ratio EMA — a uniform miscalibration (e.g. efficiency
+3. the fleet phase-wide ratio — a uniform miscalibration (e.g. efficiency
    off 2× on a compute-bound phase) shows up as a near-constant ratio, so
-   the phase EMA generalizes to operating points execution never visited
+   the phase ratio generalizes to operating points execution never visited
    (projection cohorts, ``capacity_rps`` at full width);
-3. 1.0 — pure analytic fallback when nothing was measured (coverage miss).
+4. 1.0 — pure analytic fallback when nothing was measured (coverage miss).
+
+With ``quantile=q`` the correction at each step is the *q-quantile* of the
+observed/predicted ratio histogram instead of its mean — tail pricing for
+SLO decisions (shed/admit, ``projected_finish``, autoscaler capacity),
+where guaranteeing a p99-gated SLO off a mean ratio systematically
+under-prices the slow tail.  Mean pricing (``quantile=None``) remains the
+default for throughput estimates.
 
 A *ratio* correction rather than substituting measured seconds keeps the
 analytic model's shape between bucket centers (log-binned cells would
@@ -28,6 +40,8 @@ through unchanged: ratios sit at 1.0, so calibrated == analytic exactly.
 metrics-schema profile block.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 from repro.obs.profile import CostProfiler
 
@@ -40,45 +54,89 @@ class CalibratedLatencyModel:
     anywhere the analytic model goes."""
 
     def __init__(self, analytic, profile: CostProfiler, *,
-                 min_samples: int = 3):
+                 min_samples: int = 3, quantile: Optional[float] = None,
+                 replica: Optional[int] = None):
         self.analytic = analytic
         self.profile = profile
         self.min_samples = min_samples
+        self.quantile = quantile          # None = mean ratio; q = tail ratio
+        self.replica = replica            # None = fleet-aggregate pricing
         self.cell_hits = 0       # priced from a covered cell's ratio
-        self.phase_hits = 0      # fell back to the phase-wide ratio
+        self.phase_hits = 0      # fell back to a phase-wide ratio
         self.cell_misses = 0     # pure analytic (no measurement at all)
 
     # ------------------------------------------------------------- pricing
-    def _correction(self, phase: str, cell) -> float:
-        if cell is not None and cell.ratio_count >= self.min_samples:
+    def _cell_ratio(self, cell) -> Optional[float]:
+        """A covered cell's correction, or None below ``min_samples``.
+        Quantile pricing reads the cell's ratio histogram; a cell restored
+        from a legacy registry (no histogram) degrades to its mean."""
+        if cell is None or cell.ratio_count < self.min_samples:
+            return None
+        if self.quantile is not None and cell.ratio_hist.n:
+            return cell.ratio_hist.quantile(self.quantile)
+        return cell.ratio_ema
+
+    def _phase_ratio(self, phase: str,
+                     replica: Optional[int]) -> Optional[float]:
+        ratio, n = self.profile.phase_correction(
+            phase, replica=replica, quantile=self.quantile)
+        return ratio if n >= self.min_samples else None
+
+    def _correction(self, phase: str, cells: tuple) -> float:
+        """Resolve the fallback chain: replica cell → replica phase →
+        fleet cell → fleet phase → 1.0 (``cells`` is (replica, fleet),
+        the replica entry None for fleet-scoped models)."""
+        cell_rep, cell_fleet = cells
+        if self.replica is not None:
+            r = self._cell_ratio(cell_rep)
+            if r is not None:
+                self.cell_hits += 1
+                return r
+            r = self._phase_ratio(phase, self.replica)
+            if r is not None:
+                self.phase_hits += 1
+                return r
+        r = self._cell_ratio(cell_fleet)
+        if r is not None:
             self.cell_hits += 1
-            return cell.ratio_ema
-        ratio, n = self.profile.phase_correction(phase)
-        if n >= self.min_samples:
+            return r
+        r = self._phase_ratio(phase, None)
+        if r is not None:
             self.phase_hits += 1
-            return ratio
+            return r
         self.cell_misses += 1
         return 1.0
 
     def token_time(self, batch: int, kv_tokens: float,
                    q_tokens: int = 1) -> float:
         base = self.analytic.token_time(batch, kv_tokens, q_tokens=q_tokens)
-        cell = self.profile.decode_cell(batch, kv_tokens, q_tokens)
-        return base * self._correction("decode", cell)
+        cells = (self.profile.decode_cell(batch, kv_tokens, q_tokens,
+                                          replica=self.replica)
+                 if self.replica is not None else None,
+                 self.profile.decode_cell(batch, kv_tokens, q_tokens))
+        return base * self._correction("decode", cells)
 
     def prefill_time(self, batch: int, in_len: int) -> float:
         base = self.analytic.prefill_time(batch, in_len)
-        cell = self.profile.prefill_cell(batch, in_len)
-        return base * self._correction("prefill", cell)
+        cells = (self.profile.prefill_cell(batch, in_len,
+                                           replica=self.replica)
+                 if self.replica is not None else None,
+                 self.profile.prefill_cell(batch, in_len))
+        return base * self._correction("prefill", cells)
 
     # ----------------------------------------------------------- reporting
     def coverage_counters(self) -> dict:
         total = self.cell_hits + self.phase_hits + self.cell_misses
-        return {"cell_hits": self.cell_hits, "phase_hits": self.phase_hits,
-                "cell_misses": self.cell_misses,
-                "covered_frac": round(
-                    (self.cell_hits + self.phase_hits) / total, 4)
-                if total else 0.0}
+        out = {"cell_hits": self.cell_hits, "phase_hits": self.phase_hits,
+               "cell_misses": self.cell_misses,
+               "covered_frac": round(
+                   (self.cell_hits + self.phase_hits) / total, 4)
+               if total else 0.0}
+        if self.quantile is not None:
+            out["quantile"] = self.quantile
+        if self.replica is not None:
+            out["replica"] = self.replica
+        return out
 
     # everything else (cfg, efficiency, peak_flops, _stage_flops_token,
     # _stage_bytes, dmap …) is the analytic model's business

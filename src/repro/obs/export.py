@@ -118,7 +118,11 @@ def event_names(obj: dict) -> set:
 
 # ------------------------------------------------------------- metrics JSON
 
-METRICS_SCHEMA_VERSION = 3
+METRICS_SCHEMA_VERSION = 4
+# oldest schema validate_metrics still accepts: v3 payloads differ from v4
+# only inside the profile block (v4 adds per-replica drift attribution and
+# pricing coverage counters), so existing artifacts stay readable
+METRICS_SCHEMA_MIN = 3
 
 _METRIC_FIELDS = ("latency_s", "p99_latency_s", "throughput",
                   "utilization", "slo_attainment")
@@ -133,10 +137,12 @@ def metrics_payload(name: str, *, latency_s=None, p99_latency_s=None,
     producer is a benchmark harness (``common.persist``) or a serve run
     (``--metrics-json``).  ``monitor`` carries ``Monitor.metrics()``
     verbatim — including the per-axis histogram quantile blocks — and is
-    ``{}`` for harnesses that run without a monitor.  ``profile`` (schema
-    v3) carries ``CostProfiler.metrics()`` — coverage counters, residual
-    quantiles, drift count, measured speculative acceptance — and is
-    ``{}`` for runs that served without the cost profiler."""
+    ``{}`` for harnesses that run without a monitor.  ``profile`` carries
+    ``CostProfiler.metrics()`` — coverage counters, residual quantiles,
+    drift counts (schema v4: attributed per replica, plus optional
+    ``pricing`` coverage counters from the run's calibrated models), and
+    measured speculative acceptance — and is ``{}`` for runs that served
+    without the cost profiler."""
     return {
         "bench": name,
         "schema": METRICS_SCHEMA_VERSION,
@@ -163,8 +169,8 @@ def validate_metrics(obj: dict) -> list[str]:
     if not isinstance(obj.get("bench"), str):
         errs.append("missing/invalid 'bench'")
     if not isinstance(obj.get("schema"), int) \
-            or obj.get("schema", 0) < METRICS_SCHEMA_VERSION:
-        errs.append(f"schema must be an int >= {METRICS_SCHEMA_VERSION}")
+            or obj.get("schema", 0) < METRICS_SCHEMA_MIN:
+        errs.append(f"schema must be an int >= {METRICS_SCHEMA_MIN}")
     for k in _METRIC_FIELDS:
         if k not in obj:
             errs.append(f"missing field {k!r}")

@@ -37,11 +37,16 @@ class Histogram:
     min_v: float = float("inf")
     max_v: float = float("-inf")
 
+    def __post_init__(self):
+        # cached 1/log(growth): record() sits on the profiler's span hot
+        # path, where the repeated log of a constant is measurable
+        self._ilg = 1.0 / math.log(self.growth)
+
     # ------------------------------------------------------------- recording
     def _bucket(self, v: float) -> int:
         if v <= self.v_min:
             return 0
-        return 1 + int(math.log(v / self.v_min) / math.log(self.growth))
+        return 1 + int(math.log(v / self.v_min) * self._ilg)
 
     def _rep(self, idx: int) -> float:
         """Representative value of a bucket: geometric midpoint of its
@@ -52,13 +57,33 @@ class Histogram:
         return lo * math.sqrt(self.growth)
 
     def record(self, v: float) -> None:
-        v = max(0.0, float(v))
-        idx = self._bucket(v)
-        self.counts[idx] = self.counts.get(idx, 0) + 1
+        v = float(v)
+        if v < 0.0:
+            v = 0.0
+        # _bucket inlined: this is the profiler's per-span hot path
+        idx = 0 if v <= self.v_min \
+            else 1 + int(math.log(v / self.v_min) * self._ilg)
+        c = self.counts
+        c[idx] = c.get(idx, 0) + 1
         self.n += 1
         self.total += v
-        self.min_v = min(self.min_v, v)
-        self.max_v = max(self.max_v, v)
+        if v < self.min_v:
+            self.min_v = v
+        if v > self.max_v:
+            self.max_v = v
+
+    def record_idx(self, idx: int, v: float) -> None:
+        """``record()`` for a caller that already bucketed ``v`` (the
+        profiler folds one sample into several identically-bucketed
+        histograms and computes the log once)."""
+        c = self.counts
+        c[idx] = c.get(idx, 0) + 1
+        self.n += 1
+        self.total += v
+        if v < self.min_v:
+            self.min_v = v
+        if v > self.max_v:
+            self.max_v = v
 
     def record_many(self, vs) -> None:
         for v in vs:
@@ -116,4 +141,93 @@ class Histogram:
     @property
     def rel_error_bound(self) -> float:
         """Guaranteed worst-case relative quantile error."""
+        return math.sqrt(self.growth) - 1.0
+
+
+class RotatingHistogram:
+    """Two-window rotating histogram: a ``Histogram`` with bounded memory.
+
+    A plain ``Histogram`` never forgets, so a replica that was throttled,
+    migrated, or re-provisioned keeps averaging new behaviour against its
+    entire stale history.  ``RotatingHistogram`` keeps two fixed-capacity
+    windows — ``active`` (currently filling) and ``previous`` (the last
+    full window) — and reports every statistic over their **exact
+    bucket-wise merge**.  When ``active`` reaches ``window`` samples it
+    rotates into ``previous`` and a fresh window starts, so:
+
+    * at most ``2 * window`` samples ever influence a quantile, and any
+      individual sample's influence is gone after at most ``2 * window``
+      subsequent samples;
+    * the merged view keeps the plain histogram's ~4.5% relative quantile
+      error bound — rotation discards old samples, it never re-buckets.
+    """
+
+    def __init__(self, window: int = 256, *, growth: float = DEFAULT_GROWTH,
+                 v_min: float = DEFAULT_V_MIN, active: Histogram = None,
+                 previous: Histogram = None):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.window = int(window)
+        self.growth = growth
+        self.v_min = v_min
+        self.active = active if active is not None \
+            else Histogram(growth=growth, v_min=v_min)
+        self.previous = previous if previous is not None \
+            else Histogram(growth=growth, v_min=v_min)
+
+    # ------------------------------------------------------------- recording
+    def record(self, v: float) -> None:
+        self.active.record(v)
+        if self.active.n >= self.window:
+            self.previous = self.active
+            self.active = Histogram(growth=self.growth, v_min=self.v_min)
+
+    def record_idx(self, idx: int, v: float) -> None:
+        a = self.active
+        a.record_idx(idx, v)
+        if a.n >= self.window:
+            self.previous = a
+            self.active = Histogram(growth=self.growth, v_min=self.v_min)
+
+    def record_many(self, vs) -> None:
+        for v in vs:
+            self.record(v)
+
+    # ------------------------------------------------------------- reporting
+    def merged(self) -> Histogram:
+        """Exact bucket-wise merge of both windows (the retained view all
+        statistics report over)."""
+        m = Histogram(growth=self.growth, v_min=self.v_min)
+        m.merge(self.previous)
+        m.merge(self.active)
+        return m
+
+    @property
+    def n(self) -> int:
+        return self.previous.n + self.active.n
+
+    @property
+    def total(self) -> float:
+        return self.previous.total + self.active.total
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else float("nan")
+
+    @property
+    def min_v(self) -> float:
+        return min(self.previous.min_v, self.active.min_v)
+
+    @property
+    def max_v(self) -> float:
+        return max(self.previous.max_v, self.active.max_v)
+
+    def quantile(self, q: float) -> float:
+        return self.merged().quantile(q)
+
+    def summary(self, *, digits: int = 6) -> dict:
+        return self.merged().summary(digits=digits)
+
+    @property
+    def rel_error_bound(self) -> float:
         return math.sqrt(self.growth) - 1.0

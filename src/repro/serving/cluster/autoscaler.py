@@ -76,7 +76,14 @@ class ScaleEvent:
 
 
 class Autoscaler:
-    """Periodic controller mapping forecast load to a replica count."""
+    """Periodic controller mapping forecast load to a replica count.
+
+    ``capacity_rps`` comes from ``Replica.capacity_rps``, which prices
+    through the replica's *tail* model — by default the mean belief, or a
+    quantile-``CalibratedLatencyModel`` when tail pricing is configured,
+    so SLO-backed provisioning headroom reflects the measured slow tail
+    rather than the average.  ``set_capacity`` lets a caller refresh the
+    denominator as online calibration sharpens it mid-run."""
 
     def __init__(self, cfg: AutoscalerConfig, capacity_rps: float):
         if capacity_rps <= 0:
@@ -86,6 +93,13 @@ class Autoscaler:
         self.forecaster = ArrivalForecaster(cfg.level_alpha, cfg.trend_beta)
         self.events: list[ScaleEvent] = []
         self._low_streak = 0
+
+    def set_capacity(self, capacity_rps: float) -> None:
+        """Replace the per-replica capacity estimate (online recalibration;
+        forecaster state and hysteresis streaks are preserved)."""
+        if capacity_rps <= 0:
+            raise ValueError("capacity_rps must be positive")
+        self.capacity = capacity_rps
 
     def desired_replicas(self, forecast_rps: float,
                          queued: int = 0) -> int:

@@ -79,7 +79,8 @@ class Replica:
                  chunk_tokens: int = 0, preempt: bool = False,
                  spec_tokens: int = 0, spec_acceptance: float = 0.0,
                  spawned_at: float = 0.0, engine=None,
-                 tracer: Optional[Tracer] = None, price_model=None):
+                 tracer: Optional[Tracer] = None, price_model=None,
+                 tail_model=None):
         self.rid = rid
         self.model_cfg = model_cfg
         model_mem = model_mem or model_cfg.param_count() * 2.0
@@ -95,6 +96,12 @@ class Replica:
         # a ``CalibratedLatencyModel`` (or a deliberately miscalibrated
         # belief, in tests) slots in without touching ground truth.
         self.price = price_model if price_model is not None else self.lm
+        # tail/SLO pricing model: ``projected_finish`` (hence slo_aware
+        # shed/admit) and ``capacity_rps`` price through ``tail`` — by
+        # default it follows ``price`` (mean pricing), but a quantile
+        # ``CalibratedLatencyModel`` slots in so p99-gated decisions price
+        # a tail ratio while throughput projections stay on the mean
+        self._tail = tail_model
         self.max_batch = max_batch
         self.block_size = block_size
         self.n_blocks = n_blocks
@@ -123,6 +130,16 @@ class Replica:
         # (one Perfetto process per replica); disabled tracer = no-op
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._qstart: dict[int, float] = {}      # rid -> enqueue time
+
+    @property
+    def tail(self):
+        """SLO-decision pricing model: ``tail_model`` when set, else
+        whatever ``price`` currently is (mean pricing by default)."""
+        return self._tail if self._tail is not None else self.price
+
+    @tail.setter
+    def tail(self, model) -> None:
+        self._tail = model
 
     # ------------------------------------------------------------- liveness
     @property
@@ -187,7 +204,7 @@ class Replica:
         iters = out / spec_speedup(self.spec_tokens, self.spec_acceptance)
         return iters * t_iter
 
-    def _chunk_time(self, chunk: list[Request]) -> float:
+    def _chunk_time(self, chunk: list[Request], model=None) -> float:
         """Service time of one batch-width chunk: prefill on the longest
         *uncached* prompt + decode to the longest predicted output.  With
         engine-side chunked prefill (``chunk_tokens``) every extra prefill
@@ -195,18 +212,20 @@ class Replica:
         table, so the projection prices roughly one decode-iteration of
         cache traffic per additional chunk — interleaving trades a little
         throughput for bounded inter-token stalls, and load signals must
-        not pretend it is free."""
+        not pretend it is free.  Prices on the belief ``price`` unless
+        ``model`` pins one (SLO paths pass ``self.tail``)."""
+        m = model if model is not None else self.price
         w = len(chunk)
         in_net = max(max(1, self._net_prefill.get(r.rid, r.input_len))
                      for r in chunk)
         out = max((r.predicted_output_len or r.sched_output_len)
                   for r in chunk)
         kv = max(r.input_len for r in chunk) + out / 2
-        t_pre = self.price.prefill_time(w, in_net)
+        t_pre = m.prefill_time(w, in_net)
         if self.chunk_tokens > 0:
             n_chunks = -(-in_net // self.chunk_tokens)
-            t_pre += (n_chunks - 1) * self.price.token_time(w, in_net / 2)
-        return t_pre + self._decode_seconds(w, out, kv)
+            t_pre += (n_chunks - 1) * m.token_time(w, in_net / 2)
+        return t_pre + self._decode_seconds(w, out, kv, lm=m)
 
     def projected_drain(self) -> float:
         """Seconds to clear the queue, batched at engine width."""
@@ -230,23 +249,33 @@ class Replica:
         their capacity, so only the busy tail attributable to the
         tighter-or-equal share of the running batch still blocks ``r`` —
         without this the router sheds tight requests the engine could in
-        fact serve by preempting."""
+        fact serve by preempting.
+
+        Prices on ``self.tail``: an SLO commitment made off a mean ratio
+        under-prices the slow tail, so shed/admit reads the (optionally
+        quantile-calibrated) tail model."""
         cohort = [q for q in self.queue if q.slo <= r.slo] + [r]
         t = max(0.0, self.busy_until - now)
         if self.preempt and t > 0 and self.inflight_slos:
             tighter = sum(1 for s in self.inflight_slos if s <= r.slo)
             t *= tighter / len(self.inflight_slos)
         for i in range(0, len(cohort), self.max_batch):
-            t += self._chunk_time(cohort[i:i + self.max_batch])
+            t += self._chunk_time(cohort[i:i + self.max_batch],
+                                  model=self.tail)
         return now + t
 
     def capacity_rps(self, mean_in: float = 64.0,
                      mean_out: float = 64.0) -> float:
         """Sustainable request rate at full batch width (autoscaler's
-        per-replica capacity denominator; speculation raises it)."""
+        per-replica capacity denominator; speculation raises it).  Prices
+        on ``self.tail`` so a capacity that backs an SLO-gated scaling
+        decision can be tail-calibrated; with no tail model configured
+        this is the mean belief, exactly as before."""
+        m = self.tail
         w = self.max_batch
-        t = self.price.prefill_time(w, mean_in) \
-            + self._decode_seconds(w, mean_out, mean_in + mean_out / 2)
+        t = m.prefill_time(w, mean_in) \
+            + self._decode_seconds(w, mean_out, mean_in + mean_out / 2,
+                                   lm=m)
         return w / t if t > 0 else float("inf")
 
     # ------------------------------------------------------------- dispatch

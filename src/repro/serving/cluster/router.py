@@ -17,7 +17,10 @@ UELLM's signals — PAPERS.md):
 * ``slo_aware``       — earliest-projected-finish among replicas that can
   still meet the request's deadline; when none can, the request is **shed**
   at admission (counted as an SLO violation) instead of poisoning every
-  queue behind it.
+  queue behind it.  ``projected_finish`` prices through each replica's
+  *tail* model — per-replica and quantile-calibrated when configured
+  (``Replica.tail``) — because an admit decision backing a p99-gated SLO
+  off a fleet-mean ratio systematically under-prices slow replicas.
 
 ``Router.dispatch`` only *selects*; the caller enqueues, so live-engine and
 simulated paths share the policy code.
@@ -104,6 +107,9 @@ class Router:
     def _slo_aware(self, r: Request, alive: list[Replica],
                    now: float) -> Optional[Replica]:
         deadline = r.arrival + r.slo + self.cfg.shed_slack
+        # projected_finish is tail-priced (Replica.tail): heterogeneous
+        # fleets rank replicas by their own calibrated cost, not a shared
+        # mean, so the slow replica stops winning ties it cannot honor
         ranked = sorted(((rep.projected_finish(r, now), rep.rid, rep)
                          for rep in alive))
         finish, _, rep = ranked[0]

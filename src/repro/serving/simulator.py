@@ -18,6 +18,7 @@ makespan) — the simulator's analogue of nvidia-smi utilization.
 from __future__ import annotations
 
 import heapq
+import inspect
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -78,6 +79,18 @@ class LatencyModel:
         kv_bytes = 2.0 * 2.0 * kv * c.n_kv_heads * c.head_dim_eff * batch
         return layers * (per_layer_w + kv_bytes)
 
+    def _active_path(self) -> list:
+        """Cached [(device, layers)] of occupied pipeline stages: the
+        online profiler prices a reference prediction per measured span,
+        so token_time/prefill_time are on a hot path and must not rebuild
+        this list per call.  DeviceMaps are never mutated after deploy."""
+        p = self.__dict__.get("_path_cache")
+        if p is None:
+            p = [(d, self.dmap.layers[d]) for d in self.dmap.path
+                 if self.dmap.layers.get(d, 0) > 0]
+            self.__dict__["_path_cache"] = p
+        return p
+
     def token_time(self, batch: int, kv: int, q_tokens: int = 1) -> float:
         """One decode iteration for the whole batch (pipeline stages execute
         sequentially per token — paper Observation #1).  ``q_tokens > 1``
@@ -86,28 +99,26 @@ class LatencyModel:
         sweep — exactly why collapsing K decode steps into one verify pass
         wins on the memory-bound decode roofline."""
         t = 0.0
-        path = [d for d in self.dmap.path if self.dmap.layers.get(d, 0) > 0]
-        for idx, dev in enumerate(path):
-            nl = self.dmap.layers[dev]
+        path = self._active_path()
+        for idx, (dev, nl) in enumerate(path):
             t_comp = self._stage_flops_token(nl, kv) * batch * q_tokens \
                 / (self.nodes[dev].performance * self.efficiency)
             t_mem = self._stage_bytes(nl, batch, kv) / self.hbm_bw
             t += max(t_comp, t_mem)
             if idx + 1 < len(path):
-                t += self.latency[dev][path[idx + 1]]
+                t += self.latency[dev][path[idx + 1][0]]
         return t
 
     def prefill_time(self, batch: int, in_len: int) -> float:
         t = 0.0
-        path = [d for d in self.dmap.path if self.dmap.layers.get(d, 0) > 0]
-        for idx, dev in enumerate(path):
-            nl = self.dmap.layers[dev]
+        path = self._active_path()
+        for idx, (dev, nl) in enumerate(path):
             fl = self._stage_flops_token(nl, in_len / 2) * batch * in_len
             t_comp = fl / (self.nodes[dev].performance * self.efficiency)
             t_mem = self._stage_bytes(nl, batch, in_len) / self.hbm_bw
             t += max(t_comp, t_mem)
             if idx + 1 < len(path):
-                t += self.latency[dev][path[idx + 1]]
+                t += self.latency[dev][path[idx + 1][0]]
         return t
 
     @property
@@ -783,6 +794,21 @@ class ClusterSimResult:
         }
 
 
+def _call_price_factory(factory: Callable, lm, rid: int):
+    """Invoke a pricing-model factory with the arity it declares: legacy
+    one-parameter factories get the replica's analytic model; two-parameter
+    factories also get the replica id (per-replica calibrated pricing)."""
+    try:
+        params = [p for p in inspect.signature(factory).parameters.values()
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD,
+                                p.VAR_POSITIONAL)]
+        two = any(p.kind == p.VAR_POSITIONAL for p in params) \
+            or len(params) >= 2
+    except (TypeError, ValueError):     # builtins/partials w/o signature
+        two = False
+    return factory(lm, rid) if two else factory(lm)
+
+
 def simulate_cluster(
     requests: list[Request],
     model_cfg: ModelConfig,
@@ -807,6 +833,7 @@ def simulate_cluster(
     spec_acceptance: float = 0.0,
     tracer: Optional[Tracer] = None,
     price: Optional[Callable] = None,
+    tail_price: Optional[Callable] = None,
 ) -> ClusterSimResult:
     """Discrete-event simulation of a replicated cluster: arrivals are
     routed on landing (``router``: a policy name, RouterConfig, or Router),
@@ -830,12 +857,19 @@ def simulate_cluster(
     speculative decoding: replicas price decode at the expected
     tokens-per-verify-iteration of that operating point.
 
-    ``price`` is a factory ``analytic_lm -> pricing model`` applied to
-    each replica's own LatencyModel: projections, capacity, and shedding
+    ``price`` is a factory ``analytic_lm -> pricing model`` (or
+    ``(analytic_lm, rid) -> model`` — two-parameter factories also get the
+    replica id, for per-replica calibrated pricing) applied to each
+    replica's own LatencyModel: projections, capacity, and shedding
     decisions use the returned model while *execution* keeps the analytic
     physics — how a ``CalibratedLatencyModel`` (or a deliberately
     miscalibrated belief, in tests) is threaded through the whole
     routing/autoscaling stack without touching ground truth.
+    ``tail_price`` is the same kind of factory for the replica's *tail*
+    model: ``projected_finish`` (slo_aware shed/admit) and
+    ``capacity_rps`` (autoscaler) price through it, so SLO-gated
+    decisions can run on a quantile-calibrated model while throughput
+    projections stay on the mean ``price``.
     """
     from repro.serving.cluster import (Autoscaler, Replica, Router,
                                        RouterConfig)
@@ -869,7 +903,9 @@ def simulate_cluster(
                       spec_acceptance=spec_acceptance, spawned_at=now,
                       tracer=tracer)
         if price is not None:
-            rep.price = price(rep.lm)
+            rep.price = _call_price_factory(price, rep.lm, idx)
+        if tail_price is not None:
+            rep.tail = _call_price_factory(tail_price, rep.lm, idx)
         rep.partition = pi
         replicas.append(rep)
         return rep
@@ -886,6 +922,8 @@ def simulate_cluster(
         reqs_in = [r.input_len for r in requests] or [64]
         reqs_out = [r.predicted_output_len or r.true_output_len
                     for r in requests] or [64]
+        # capacity prices through replica 0's tail model: the mean belief
+        # by default, the quantile-calibrated one when tail_price is set
         autoscaler = Autoscaler(
             autoscale, replicas[0].capacity_rps(float(np.mean(reqs_in)),
                                                 float(np.mean(reqs_out))))

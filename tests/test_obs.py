@@ -10,8 +10,9 @@ import pytest
 from repro.configs import get_config
 from repro.core.types import Request
 from repro.obs import (EVENT_NAMES, INSTANT_NAMES, NULL_TRACER, SPAN_NAMES,
-                       Histogram, LatencyBreakdown, Tracer, check_invariants,
-                       export_trace, metrics_payload, slot_row, to_chrome,
+                       Histogram, LatencyBreakdown, RotatingHistogram,
+                       Tracer, check_invariants, export_trace,
+                       metrics_payload, slot_row, to_chrome,
                        validate_metrics, validate_trace)
 
 BS = 8
@@ -113,6 +114,71 @@ def test_histogram_edge_cases():
     assert receiver.counts == filled.counts and receiver.n == filled.n
     assert receiver.quantile(0.95) == filled.quantile(0.95)
     assert receiver.summary() == filled.summary()
+
+
+def test_histogram_quantile_monotone_in_q():
+    """q1 <= q2 implies quantile(q1) <= quantile(q2), including the exact
+    0.0/1.0 extremes and repeated q values."""
+    rng = np.random.default_rng(7)
+    h = Histogram()
+    h.record_many(rng.lognormal(-2.0, 1.0, 2000))
+    grid = [0.0, 0.01, 0.1, 0.25, 0.5, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0]
+    vals = [h.quantile(q) for q in grid]
+    assert vals == sorted(vals)
+
+
+def test_rotating_histogram_window_retention_and_quantiles():
+    """The two-window rotation retains exactly the last (W + n mod W)
+    samples once a window has completed; merged quantiles stay within the
+    bucket error bound of the retained suffix's order statistics."""
+    W = 64
+    rng = np.random.default_rng(11)
+    xs = rng.lognormal(-3.0, 1.2, 300)
+    rh = RotatingHistogram(window=W)
+    for v in xs:
+        rh.record(v)
+    # 300 = 4*64 + 44: previous holds samples 193..256, active the last 44
+    retained = xs[4 * W - W:]
+    assert rh.n == len(retained) == W + 300 % W
+    m = rh.merged()
+    srt = np.sort(retained)
+    for q in (0.1, 0.5, 0.9, 0.95):
+        true = srt[int(q * (m.n - 1))]
+        assert abs(m.quantile(q) - true) \
+            <= m.rel_error_bound * true + 1e-12, q
+    assert rh.quantile(0.5) == m.quantile(0.5)     # facade reads merged
+    # a burst is fully forgotten after <= 2W subsequent samples
+    spike = RotatingHistogram(window=W)
+    for _ in range(W):
+        spike.record(100.0)
+    for _ in range(2 * W):
+        spike.record(0.01)
+    assert spike.max_v == pytest.approx(0.01)
+    assert spike.quantile(1.0) == pytest.approx(0.01)
+
+
+def test_rotating_histogram_merge_exact_across_rotation():
+    """merged() is bucket-exact: identical counts to a fresh Histogram
+    over the retained suffix, so nothing is approximated at the seam."""
+    W = 32
+    rng = np.random.default_rng(13)
+    xs = rng.exponential(0.2, 3 * W + 5)
+    rh = RotatingHistogram(window=W)
+    for v in xs:
+        rh.record(v)
+    fresh = Histogram()
+    fresh.record_many(xs[2 * W:])                  # the retained suffix
+    m = rh.merged()
+    assert m.counts == fresh.counts
+    assert m.n == fresh.n and m.total == pytest.approx(fresh.total)
+    assert m.summary() == fresh.summary()
+    # degenerate window=1: previous is always just the last full sample
+    tiny = RotatingHistogram(window=1)
+    tiny.record(5.0)
+    tiny.record(7.0)
+    assert tiny.n >= 1 and tiny.quantile(1.0) == pytest.approx(7.0)
+    with pytest.raises(ValueError):
+        RotatingHistogram(window=0)
 
 
 # ------------------------------------------------------- span invariants

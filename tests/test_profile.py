@@ -3,7 +3,7 @@ with per-iteration dedup, residual ratios and band-crossing drift
 detection, the CalibratedLatencyModel correction chain (cell -> phase ->
 analytic), the versioned profile registry round-trip, the measured
 speculative-acceptance EMA, the Replica execution/belief split, and the
-schema-v3 metrics profile block."""
+schema-v4 metrics profile block."""
 import dataclasses
 import json
 import math
@@ -142,11 +142,13 @@ def test_residual_ratio_and_drift_instant():
 
 
 def test_drift_rearms_after_band_reentry():
-    """Drift is a band-crossing detector: once the ratio EMA returns
-    in-band, the next excursion fires again."""
+    """Drift is a band-crossing detector: once the decayed ratio mean
+    returns in-band, the next excursion fires again.  A short half-life
+    makes the windowed mean track the latest regime fast enough to
+    re-enter the band between excursions."""
     lm = _lm()
     prof = CostProfiler(reference=lm, tracer=Tracer(), drift_tol=0.2,
-                        drift_min_samples=2, alpha=0.9)
+                        drift_min_samples=2, half_life=1)
     pl = 128
     pred = lm.prefill_time(1, pl)
     for _ in range(4):                       # far out of band
@@ -349,13 +351,17 @@ def test_simulator_spans_feed_profiler_coverage():
 
 # ------------------------------------------------------------ metrics schema
 
-def test_metrics_schema_v3_profile_block():
+def test_metrics_schema_v4_profile_block():
     prof = CostProfiler()
     prof.observe_decode(0.01, batch=4, kv=128)
     p = metrics_payload("x", latency_s=1.0, profile=prof.metrics())
-    assert p["schema"] == 3
+    assert p["schema"] == 4
     assert validate_metrics(p) == []
     assert p["profile"]["coverage"]["decode"]["samples"] == 1
+    # a v3 payload (pre per-replica attribution) still validates
+    v3 = metrics_payload("x")
+    v3["schema"] = 3
+    assert validate_metrics(v3) == []
     # a v2 payload (no profile block) no longer validates
     v2 = {k: v for k, v in metrics_payload("x").items() if k != "profile"}
     v2["schema"] = 2
@@ -387,3 +393,192 @@ def test_monitor_publishes_length_prediction_confusion():
     assert lp["per_bucket_precision"][key] == pytest.approx(2 / 3, abs=0.01)
     assert sum(lp["confusion"].values()) == 3
     assert lp["confusion"][f"{int(buckets[0])}->{int(buckets[1])}"] == 1
+
+
+# -------------------- per-replica profiles, quantile pricing, decay
+
+def test_per_replica_cells_and_fleet_fallback():
+    """Cells are keyed by the span's replica: a slow replica's 2x ratio
+    never leaks into the fast replica's cell, the fleet aggregate pools
+    both, and a replica the profiler has never seen prices through the
+    fleet aggregate (not 1.0)."""
+    lm = _lm()
+    prof = CostProfiler(reference=lm)
+    b, pl = 2, 128
+    pred = lm.prefill_time(b, pl)
+    for _ in range(10):
+        prof.observe_prefill(pred, batch=b, tokens=pl, replica=0)
+        prof.observe_prefill(pred * 2.0, batch=b, tokens=pl, replica=1)
+    assert prof.prefill_cell(b, pl, replica=0).ratio_ema \
+        == pytest.approx(1.0)
+    assert prof.prefill_cell(b, pl, replica=1).ratio_ema \
+        == pytest.approx(2.0)
+    assert prof.prefill_cell(b, pl).ratio_ema == pytest.approx(1.5)
+    fast = CalibratedLatencyModel(lm, prof, replica=0)
+    slow = CalibratedLatencyModel(lm, prof, replica=1)
+    assert slow.prefill_time(b, pl) \
+        == pytest.approx(2.0 * fast.prefill_time(b, pl))
+    # unseen replica -> fleet aggregate
+    ghost = CalibratedLatencyModel(lm, prof, replica=7)
+    assert ghost.prefill_time(b, pl) \
+        == pytest.approx(1.5 * lm.prefill_time(b, pl))
+    rc = prof.replica_coverage()
+    assert set(rc) == {0, 1}
+    assert rc[1]["prefill"]["samples"] == 10
+    m = prof.metrics()
+    assert m["replicas"]["1"]["calibration_ratio"]["prefill"] \
+        == pytest.approx(2.0)
+
+
+def test_quantile_pricing_prices_the_tail():
+    """A mostly-calibrated cell with a heavy slow tail: the mean
+    correction barely moves, p95 prices near the tail, and quantile
+    pricing is monotone in q."""
+    lm = _lm()
+    prof = CostProfiler(reference=lm)
+    b, pl = 2, 128
+    pred = lm.prefill_time(b, pl)
+    for i in range(20):
+        r = 3.0 if i % 10 == 9 else 1.0          # 2/20 samples 3x slow
+        prof.observe_prefill(pred * r, batch=b, tokens=pl)
+    mean_cal = CalibratedLatencyModel(lm, prof)
+    tail_cal = CalibratedLatencyModel(lm, prof, quantile=0.95)
+    assert mean_cal.prefill_time(b, pl) == pytest.approx(1.2 * pred)
+    assert tail_cal.prefill_time(b, pl) \
+        == pytest.approx(3.0 * pred, rel=0.06)   # hist bucket resolution
+    qs = [CalibratedLatencyModel(lm, prof, quantile=q).prefill_time(b, pl)
+          for q in (0.5, 0.9, 0.95, 0.99)]
+    assert qs == sorted(qs)
+    assert tail_cal.coverage_counters()["quantile"] == 0.95
+
+
+def test_drift_attributed_to_the_offending_replica():
+    """Two replicas share one tracer: only the out-of-band replica's
+    sub-profile fires drift, and the instant carries that replica on its
+    own track."""
+    lm = _lm()
+    tr = Tracer()
+    prof = CostProfiler(reference=lm, tracer=tr, drift_tol=0.25,
+                        drift_min_samples=4)
+    tr.add_sink(prof.on_event)
+    b, pl = 2, 128
+    pred = lm.prefill_time(b, pl)
+    t = 0.0
+    for _ in range(10):
+        tr.span("batch_prefill", t, t + pred, track=0,
+                args={"batch": b, "tokens": pl})
+        t += pred
+        tr.span("batch_prefill", t, t + pred * 2.0, track=1,
+                args={"batch": b, "tokens": pl})
+        t += pred * 2.0
+    assert prof.drift_by_replica() == {1: 1}
+    assert prof.drift_events == 1
+    drifts = [e for e in tr.events if e.name == "profile_drift"]
+    assert len(drifts) == 1
+    assert drifts[0].track == 1 and drifts[0].args["replica"] == 1
+    assert drifts[0].args["phase"] == "prefill"
+    assert check_invariants(tr.events) == []
+
+
+def test_drift_reaches_monitor_metrics():
+    """The profiler's monitor hook lands per-replica, per-phase drift
+    counts in Monitor.metrics()."""
+    from repro.core import LengthPredictor, Monitor, ResourceProfiler
+    from repro.core.profiler import PredictorConfig
+    cfg = get_config("smollm-135m").reduced()
+    pred = LengthPredictor(PredictorConfig(vocab=cfg.vocab_size), seed=0)
+    mon = Monitor(ResourceProfiler(pred, cfg))
+    lm = _lm()
+    prof = CostProfiler(reference=lm, drift_min_samples=2, monitor=mon)
+    p = lm.prefill_time(1, 128)
+    for _ in range(4):
+        prof.observe_prefill(p * 2.0, batch=1, tokens=128, replica=3)
+    m = mon.metrics()["profile_drift"]
+    assert m["events"] == 1
+    assert m["by_replica"] == {"3": 1}
+    assert m["by_phase"] == {"prefill": 1}
+
+
+def test_decay_tracks_regime_change_cumulative_stays_stale():
+    """After a mid-life slowdown (ratio 1.0 -> 2.0), the half-life
+    profiler's phase ratio converges to the new regime within ~4
+    half-lives of samples while the cumulative-mean profiler is stuck
+    between regimes forever."""
+    lm = _lm()
+    decayed = CostProfiler(reference=lm, half_life=8)
+    stale = CostProfiler(reference=lm)
+    p = lm.prefill_time(2, 128)
+    for prof in (decayed, stale):
+        for _ in range(30):
+            prof.observe_prefill(p, batch=2, tokens=128)
+        for _ in range(30):
+            prof.observe_prefill(p * 2.0, batch=2, tokens=128)
+    r_decay, _ = decayed.phase_correction("prefill")
+    r_stale, _ = stale.phase_correction("prefill")
+    assert r_decay == pytest.approx(2.0, rel=0.08)
+    assert r_stale == pytest.approx(1.5, rel=0.02)
+    assert decayed.metrics()["half_life"] == 8
+
+
+def test_registry_v2_round_trip_per_replica_and_decay(tmp_path):
+    """Per-replica sub-profiles and rotating (decayed) histograms survive
+    save/load cell-identically, including quantile pricing."""
+    lm = _lm()
+    prof = CostProfiler(reference=lm, half_life=8)
+    p = lm.prefill_time(2, 128)
+    for _ in range(12):
+        prof.observe_prefill(p, batch=2, tokens=128, replica=0)
+        prof.observe_prefill(p * 2.0, batch=2, tokens=128, replica=1)
+    f = tmp_path / "prof.json"
+    prof.save(f)
+    back = CostProfiler.load(f, reference=lm)
+    assert back.half_life == 8
+    for rid in (0, 1):
+        a = prof.prefill_cell(2, 128, replica=rid)
+        b = back.prefill_cell(2, 128, replica=rid)
+        assert b.ratio_ema == a.ratio_ema
+        assert b.ratio_hist.quantile(0.95) == a.ratio_hist.quantile(0.95)
+    assert back.metrics() == prof.metrics()
+    assert json.dumps(back.to_json()) == json.dumps(prof.to_json())
+    c1 = CalibratedLatencyModel(lm, prof, replica=1, quantile=0.95)
+    c2 = CalibratedLatencyModel(lm, back, replica=1, quantile=0.95)
+    assert c1.prefill_time(2, 128) == c2.prefill_time(2, 128)
+
+
+def test_v1_registry_loads_as_fleet_only():
+    """Legacy flat (v1) registries still load: cells land in the fleet
+    aggregate, per-replica lookups fall back, quantile pricing degrades
+    to the mean (no ratio histograms existed), and imported drift counts
+    survive.  Unknown versions are refused with a clear error."""
+    lm = _lm()
+    src = CostProfiler(reference=lm)
+    p = lm.prefill_time(2, 128)
+    for _ in range(6):
+        src.observe_prefill(p * 1.5, batch=2, tokens=128)
+    sub = src.to_json()["fleet"]
+    v1 = {
+        "profile_version": 1, "alpha": 0.25, "drift_tol": 0.25,
+        "drift_min_samples": 8, "drift_events": 2,
+        "cells": [{"key": c["key"], "count": c["count"],
+                   "ema_s": c["ema_s"], "total_s": c["total_s"],
+                   "hist": c["hist"], "ratio_count": c["ratio_count"],
+                   "ratio_ema": c["ratio_num"] / c["ratio_den"]}
+                  for c in sub["cells"]],
+        "residual": sub["residual"],
+        "phase_ratio": {ph: [pr[0], pr[1] / pr[2]]
+                        for ph, pr in sub["phase_ratio"].items()},
+        "spec": {"drafted": 0, "accepted": 0, "samples": 0,
+                 "ema": 0.5, "bootstrap": 0.5},
+    }
+    back = CostProfiler.from_json(json.loads(json.dumps(v1)), reference=lm)
+    assert back.replica_profiles == {}
+    assert back.prefill_cell(2, 128).ratio_ema == pytest.approx(1.5)
+    assert back.drift_events == 2
+    # per-replica lookup falls back to the imported fleet cells
+    cal = CalibratedLatencyModel(lm, back, replica=0)
+    assert cal.prefill_time(2, 128) == pytest.approx(1.5 * p)
+    # quantile pricing degrades to the mean: v1 had no ratio histograms
+    qcal = CalibratedLatencyModel(lm, back, replica=0, quantile=0.95)
+    assert qcal.prefill_time(2, 128) == pytest.approx(1.5 * p)
+    with pytest.raises(ValueError, match="profile_version"):
+        CostProfiler.from_json({"profile_version": 99})
