@@ -2,7 +2,7 @@
 provisioning + closed-loop cost calibration (EXPERIMENTS.md §Perf design
 record, §Observability calibration).
 
-Three claims, enforced with assertions so regressions fail ``benchmarks.run``:
+The claims, enforced with assertions so regressions fail ``benchmarks.run``:
 
 * **Routing** — at equal replica count on a multi-turn shared-prefix
   workload, ``prefix_affinity`` and ``slo_aware`` beat ``round_robin`` on
@@ -41,6 +41,15 @@ Three claims, enforced with assertions so regressions fail ``benchmarks.run``:
   stale regime), while the cumulative-mean profiler stays stuck between
   regimes — and the decayed profile flags the slowdown as drift on the
   right replica.
+* **Mixed-model fleet** — on a two-model trace over per-model pools,
+  model-aware routing (slo_aware within the compatible pool, per-tier
+  shedding) beats model-blind round-robin — which pays a forwarding
+  bounce per misroute — on overall and interactive-tier attainment; and
+  under phase-shifted per-pool demand the joint allocator (shared budget
+  split by marginal SLO-attainment value, with an idle_patience
+  availability floor and the model-swap action) matches independent
+  per-pool autoscalers on attainment while spending strictly fewer
+  replica-seconds.
 """
 from __future__ import annotations
 
@@ -51,10 +60,13 @@ from benchmarks.common import csv_row, emit, persist
 from repro.configs import get_config
 from repro.core import get_scheduler
 from repro.core.scheduler import SchedulerConfig
-from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
-                                 gen_requests, gen_shared_prefix_requests)
+from repro.data.workload import (MixedWorkloadConfig, SharedPrefixConfig,
+                                 WorkloadConfig, gen_mixed_requests,
+                                 gen_requests, gen_shared_prefix_requests,
+                                 merge_request_streams)
 from repro.obs import CalibratedLatencyModel, CostProfiler, Tracer
-from repro.serving import AutoscalerConfig, simulate_cluster
+from repro.serving import (AutoscalerConfig, FleetAutoscalerConfig,
+                           ModelPoolSpec, simulate_cluster)
 from repro.serving.cluster import RouterConfig
 
 N_REPLICAS = 3
@@ -92,12 +104,14 @@ def _burst_workload():
 
 
 def _run(reqs, cfg, *, router, n_replicas=N_REPLICAS, autoscale=None,
-         price=None, tail_price=None, partitions=None, tracer=None):
+         price=None, tail_price=None, partitions=None, tracer=None,
+         pools=None):
     return simulate_cluster(
         [copy.deepcopy(r) for r in reqs], cfg, get_scheduler("slo-odbs"),
         SchedulerConfig(), n_replicas=n_replicas, router=router,
         autoscale=autoscale, price=price, tail_price=tail_price,
-        partitions=partitions, tracer=tracer)
+        partitions=partitions, tracer=tracer,
+        pools=[copy.deepcopy(p) for p in pools] if pools else None)
 
 
 def _slow_partitions(n=N_REPLICAS, slow=SLOW_REPLICA, factor=SLOW_FACTOR):
@@ -335,6 +349,92 @@ def run() -> dict:
             "decayed profiler did not flag the slowdown as drift on the "
             f"slow replica (by_replica={p_decay.drift_by_replica()})")
 
+    # --------------------------------------------------- mixed-model fleet
+    # Two heterogeneous-fleet claims (EXPERIMENTS.md §Perf mixed fleet):
+    #
+    # (a) On a two-model mixed trace over per-model pools, the model-aware
+    #     stack (slo_aware routing inside the compatible pool, per-tier
+    #     shedding) beats model-blind round-robin — which pays a
+    #     forwarding bounce on every misroute — on overall AND
+    #     interactive-tier SLO attainment.  Pure model-awareness
+    #     (round_robin vs round_robin) must not lose either.
+    mixed = gen_mixed_requests(MixedWorkloadConfig(
+        models=(("chatglm2-6b", 0.6), ("qwen2-1.5b", 0.4)),
+        tiers=(("interactive", 3.0, 10.0), ("batch", 20.0, 60.0)),
+        n_requests=260, arrival_rate=14.0, seed=11))
+    fpools = [ModelPoolSpec("chatglm2-6b", replicas=2),
+              ModelPoolSpec("qwen2-1.5b", replicas=2)]
+    fl_aware = _run(mixed, cfg, pools=fpools,
+                    router=RouterConfig(policy="slo_aware",
+                                        shed_slack=2.0)).summary()
+    fl_rr = _run(mixed, cfg, pools=fpools,
+                 router=RouterConfig(policy="round_robin")).summary()
+    fl_blind = _run(mixed, cfg, pools=fpools,
+                    router=RouterConfig(policy="round_robin",
+                                        model_aware=False)).summary()
+    if not (fl_aware["slo_attainment"] > fl_blind["slo_attainment"]
+            and fl_aware["by_tier"]["interactive"]
+            > fl_blind["by_tier"]["interactive"]):
+        raise AssertionError(
+            f"model-aware routing did not beat model-blind round-robin "
+            f"({fl_aware['slo_attainment']} vs "
+            f"{fl_blind['slo_attainment']}; interactive "
+            f"{fl_aware['by_tier']['interactive']} vs "
+            f"{fl_blind['by_tier']['interactive']})")
+    if fl_rr["slo_attainment"] < fl_blind["slo_attainment"]:
+        raise AssertionError(
+            f"model-aware round-robin lost to blind round-robin "
+            f"({fl_rr['slo_attainment']} vs {fl_blind['slo_attainment']})")
+    if fl_blind["router"].get("misroutes", 0) < 1:
+        raise AssertionError("blind router never misrouted — the "
+                             "forwarding ablation measured nothing")
+
+    # (b) Phase-shifted demand across pools plus one registered-but-dormant
+    #     pool: the joint allocator (shared budget split by marginal
+    #     SLO-attainment value, idle_patience availability floor, swap
+    #     action) matches independent per-pool autoscalers on attainment
+    #     while spending strictly fewer replica-seconds — independent
+    #     controllers each hold peak capacity for their own pool and keep
+    #     the dormant pool's floor forever.
+    def _fleet_phase(models, weights, t0, seed, n):
+        return gen_mixed_requests(MixedWorkloadConfig(
+            models=models,
+            tiers=(("interactive", 4.0, 12.0), ("batch", 20.0, 60.0)),
+            tier_weights=weights, n_requests=n, arrival_rate=9.0,
+            t0=t0, seed=seed))
+
+    tier_w = {"chatglm2-6b": (0.8, 0.2), "qwen2-1.5b": (0.2, 0.8)}
+    phased = merge_request_streams(
+        _fleet_phase((("chatglm2-6b", 0.8), ("qwen2-1.5b", 0.2)),
+                     tier_w, 0.0, 5, 170),
+        _fleet_phase((("chatglm2-6b", 0.2), ("qwen2-1.5b", 0.8)),
+                     tier_w, 20.0, 6, 170))
+    ppools = [ModelPoolSpec("chatglm2-6b", replicas=1),
+              ModelPoolSpec("qwen2-1.5b", replicas=1),
+              ModelPoolSpec("smollm-135m", replicas=1)]
+    fl_joint_res = _run(phased, cfg, router="least_loaded", pools=ppools,
+                        autoscale=FleetAutoscalerConfig(
+                            interval=1.0, budget=6, min_per_pool=1,
+                            idle_patience=4, spawn_delay=1.0,
+                            swap_delay=2.5, down_patience=3))
+    fl_joint = fl_joint_res.summary()
+    fl_indep = _run(phased, cfg, router="least_loaded", pools=ppools,
+                    autoscale=AutoscalerConfig(
+                        interval=1.0, min_replicas=1, max_replicas=4,
+                        spawn_delay=1.0, down_patience=3)).summary()
+    if fl_joint["replica_seconds"] >= fl_indep["replica_seconds"]:
+        raise AssertionError(
+            f"joint allocation did not save replica-seconds "
+            f"({fl_joint['replica_seconds']} vs "
+            f"{fl_indep['replica_seconds']})")
+    if fl_joint["slo_attainment"] < fl_indep["slo_attainment"]:
+        raise AssertionError(
+            f"joint allocation paid attainment for the savings "
+            f"({fl_joint['slo_attainment']} vs "
+            f"{fl_indep['slo_attainment']})")
+    fl_swaps = sum(1 for e in fl_joint_res.scale_events
+                   if getattr(e, "swap", False))
+
     prof_metrics = prof.metrics()
     out = {"router_ablation": rows,
            "autoscaler": {"static": st, "auto": au},
@@ -378,6 +478,34 @@ def run() -> dict:
                "slow_drift": p_decay.drift_by_replica().get(
                    SLOW_REPLICA, 0),
            },
+           "fleet": {
+               "routing": {
+                   "aware_slo": {"attainment": fl_aware["slo_attainment"],
+                                 "by_tier": fl_aware["by_tier"],
+                                 "by_model": fl_aware["by_model"],
+                                 "shed": fl_aware["shed"]},
+                   "aware_rr": {"attainment": fl_rr["slo_attainment"],
+                                "by_tier": fl_rr["by_tier"]},
+                   "blind_rr": {"attainment": fl_blind["slo_attainment"],
+                                "by_tier": fl_blind["by_tier"],
+                                "misroutes":
+                                    fl_blind["router"].get("misroutes", 0)},
+               },
+               "scaling": {
+                   "joint": {"attainment": fl_joint["slo_attainment"],
+                             "replica_seconds":
+                                 fl_joint["replica_seconds"],
+                             "by_tier": fl_joint["by_tier"],
+                             "peak_replicas": fl_joint["peak_replicas"],
+                             "swap_events": fl_swaps},
+                   "independent": {"attainment": fl_indep["slo_attainment"],
+                                   "replica_seconds":
+                                       fl_indep["replica_seconds"],
+                                   "by_tier": fl_indep["by_tier"],
+                                   "peak_replicas":
+                                       fl_indep["peak_replicas"]},
+               },
+           },
            "claims": {
                "affinity_vs_rr_attainment":
                    f"{aff['slo_attainment']} vs {rr['slo_attainment']}",
@@ -395,6 +523,12 @@ def run() -> dict:
                    f"{het_b['slo_attainment']} vs {het_a['slo_attainment']}",
                "decay_vs_stale_err":
                    f"{round(decay_err, 4)} vs {round(stale_err, 4)}",
+               "fleet_aware_vs_blind_attainment":
+                   f"{fl_aware['slo_attainment']} vs "
+                   f"{fl_blind['slo_attainment']}",
+               "fleet_joint_replica_seconds_saved": round(
+                   1 - fl_joint["replica_seconds"]
+                   / fl_indep["replica_seconds"], 4),
            }}
     emit("cluster_bench", out)
     persist("cluster",
@@ -429,4 +563,11 @@ def run() -> dict:
     csv_row("cluster_decay", 0.0,
             f"fresh={round(r_fresh, 4)};decayed={round(r_decay, 4)};"
             f"stale={round(r_stale, 4)};half_life={p_decay.half_life}")
+    csv_row("cluster_fleet", 0.0,
+            f"attain_aware={fl_aware['slo_attainment']};"
+            f"attain_blind={fl_blind['slo_attainment']};"
+            f"misroutes={fl_blind['router'].get('misroutes', 0)};"
+            f"joint_rep_s={fl_joint['replica_seconds']};"
+            f"indep_rep_s={fl_indep['replica_seconds']};"
+            f"swaps={fl_swaps}")
     return out

@@ -106,6 +106,33 @@ print("cluster smoke:", res.summary())
 PY
 }
 
+fleet_smoke() {
+    echo "== fleet smoke (2 models x 2 tiers, model-aware routing, v5 metrics) =="
+    python -m repro.launch.serve --arch chatglm2-6b \
+        --models "chatglm2-6b:0.6,qwen2-1.5b:0.4" --requests 32 \
+        --replicas 2 --router slo_aware --fleet joint \
+        --metrics-json /tmp/fleet_m.json > /dev/null
+    python - <<'PY'
+import json
+from repro.obs.export import METRICS_SCHEMA_VERSION, validate_metrics
+
+m = json.load(open("/tmp/fleet_m.json"))
+errs = validate_metrics(m)
+assert not errs, errs
+assert m["schema"] == METRICS_SCHEMA_VERSION == 5, m["schema"]
+by_key = m["monitor"].get("slo_by_key", {})
+models = {k for k in by_key if k.startswith("model:")}
+tiers = {k for k in by_key if k.startswith("tier:")}
+assert {"model:chatglm2-6b", "model:qwen2-1.5b"} <= models, by_key
+assert tiers, by_key
+for k, blk in by_key.items():
+    assert {"observed", "violations", "attainment"} <= set(blk), (k, blk)
+print(f"fleet smoke: per-model attainment "
+      f"{ {k: by_key[k]['attainment'] for k in sorted(models)} }, "
+      f"tiers { {k: by_key[k]['attainment'] for k in sorted(tiers)} }")
+PY
+}
+
 traced_smoke() {
     echo "== traced smoke (serve.py --paged --trace/--metrics-json) =="
     python -m repro.launch.serve --paged --preempt --speculate \
@@ -235,6 +262,7 @@ fi
 if [[ "${1:-}" == "cluster" ]]; then
     python -m pytest -q "${CLUSTER_TESTS[@]}"
     cluster_smoke
+    fleet_smoke
     exit 0
 fi
 
@@ -249,6 +277,7 @@ python -m pytest -q "${KERNEL_TESTS[@]}"
 interleave_smoke
 spec_smoke
 cluster_smoke
+fleet_smoke
 traced_smoke
 profile_smoke
 validate_artifacts

@@ -58,6 +58,11 @@ class MonitorStats:
     slo_observed: int = 0          # finished (or shed) requests with a deadline
     slo_violations: int = 0        # missed deadlines, shed requests included
     shed_requests: int = 0         # router admission-shed (never served)
+    # segmented SLO counters: key -> [observed, violations].  Keys come from
+    # the ``key=`` dimension of observe/observe_shed, or automatically from
+    # a request's model/tier tags ("model:<id>" / "tier:<name>") — per-model
+    # attainment is first-class in metrics(), not recomputed by benches
+    slo_by_key: dict = field(default_factory=dict)
     # --- cluster gauges (accumulated over every snapshot of the run, not
     # last-writer-wins: the peak and mean are what capacity planning reads,
     # and the final sample of a drained cluster is always zeros) ---
@@ -133,8 +138,32 @@ class Monitor:
         self.update_on_miss = update_on_miss
         self.stats = MonitorStats()
 
-    def observe(self, req: Request) -> None:
-        """Called by the engine/simulator when a request finishes."""
+    @staticmethod
+    def _slo_keys(req: Request, key) -> list:
+        """Segmentation keys for SLO counters: an explicit ``key`` (a
+        string or an iterable of strings) wins; otherwise the request's
+        model/tier tags segment automatically."""
+        if key is not None:
+            return [key] if isinstance(key, str) else list(key)
+        keys = []
+        m = getattr(req, "model", "")
+        if m:
+            keys.append(f"model:{m}")
+        tr = getattr(req, "tier", "")
+        if tr:
+            keys.append(f"tier:{tr}")
+        return keys
+
+    def _slo_segment(self, req: Request, key, violated: bool) -> None:
+        for k in self._slo_keys(req, key):
+            cell = self.stats.slo_by_key.setdefault(k, [0, 0])
+            cell[0] += 1
+            cell[1] += bool(violated)
+
+    def observe(self, req: Request, key=None) -> None:
+        """Called by the engine/simulator when a request finishes.  ``key``
+        optionally segments the SLO counters (model, tier, ...); without it
+        a tagged request segments by its own model/tier."""
         pred = req.predicted_output_len or 0
         true = req.true_output_len
         st = self.stats
@@ -143,6 +172,7 @@ class Monitor:
         if met is not None:
             st.slo_observed += 1
             st.slo_violations += not met
+            self._slo_segment(req, key, not met)
         # latency histograms: prefer the serving path's per-phase breakdown
         # (obs.trace.LatencyBreakdown); fall back to the request stamps
         lat = req.latency
@@ -230,13 +260,14 @@ class Monitor:
             st.prefill_stall.record(stall_s)
         st.itl.record_many(itl)
 
-    def observe_shed(self, req: Request) -> None:
+    def observe_shed(self, req: Request, key=None) -> None:
         """A request the router refused (no replica could meet its SLO):
         counted as an SLO violation — shedding is not a free pass."""
         st = self.stats
         st.shed_requests += 1
         st.slo_observed += 1
         st.slo_violations += 1
+        self._slo_segment(req, key, True)
 
     def observe_drift(self, replica: int, phase: str) -> None:
         """One calibration-drift band crossing, attributed to the replica
@@ -309,6 +340,11 @@ class Monitor:
             out["slo_violations"] = st.slo_violations
             out["slo_attainment"] = round(st.slo_attainment, 4)
             out["shed_requests"] = st.shed_requests
+        if st.slo_by_key:
+            out["slo_by_key"] = {
+                k: {"observed": o, "violations": v,
+                    "attainment": round(1.0 - v / o, 4) if o else 1.0}
+                for k, (o, v) in sorted(st.slo_by_key.items())}
         if st.cluster_snapshots or st.cluster_replicas:
             out["cluster_replicas"] = st.cluster_replicas
             out["cluster_queue_depths"] = st.cluster_queue_depths

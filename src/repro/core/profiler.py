@@ -128,19 +128,35 @@ class LengthPredictor:
         pred = np.argmax(np.asarray(self._logits(self.params, toks, mask)), -1)
         return float((pred == self.length_to_bucket(lens)).mean())
 
+    def _pad_tokens(self, rows: list) -> jnp.ndarray:
+        """Zero-pad token rows to the next power-of-two length so repeated
+        calls reuse a handful of compiled shapes instead of recompiling the
+        jitted fns once per distinct prompt length (padding is masked out,
+        so logits are unchanged)."""
+        n = max(1, max(len(r) for r in rows))
+        p = 8
+        while p < n:
+            p *= 2
+        toks = np.zeros((len(rows), p), np.int32)
+        for i, r in enumerate(rows):
+            toks[i, :len(r)] = np.asarray(r, np.int32)
+        return jnp.asarray(toks % self.cfg.vocab)
+
     # ----------------------------------------------------------------- online
     def online_update(self, tokens: list[int], true_len: int):
         """One SGD step on a mispredicted request (backend monitor feedback)."""
-        toks = jnp.asarray(np.asarray(tokens, np.int32)[None, :] % self.cfg.vocab)
+        toks = self._pad_tokens([tokens])
         mask = (toks > 0).astype(jnp.float32)
         label = jnp.asarray(self.length_to_bucket([true_len]))
-        g = jax.grad(self._loss)(self.params, toks, mask, label)
+        if not hasattr(self, "_grad"):
+            self._grad = jax.jit(jax.grad(self._loss))
+        g = self._grad(self.params, toks, mask, label)
         self.params = jax.tree.map(
             lambda p, gi: p - self.cfg.online_lr * gi, self.params, g)
 
     # ---------------------------------------------------------------- predict
     def predict(self, tokens: list[int]) -> tuple[int, int]:
-        toks = jnp.asarray(np.asarray(tokens, np.int32)[None, :] % self.cfg.vocab)
+        toks = self._pad_tokens([tokens])
         mask = (toks > 0).astype(jnp.float32)
         b = int(np.argmax(np.asarray(self._logits(self.params, toks, mask))))
         return b, int(self.buckets[b])
@@ -149,7 +165,10 @@ class LengthPredictor:
         if not requests:
             return
         max_len = max(r.input_len for r in requests)
-        toks = np.zeros((len(requests), max_len), np.int32)
+        pad = 8
+        while pad < max_len:
+            pad *= 2
+        toks = np.zeros((len(requests), pad), np.int32)
         for i, r in enumerate(requests):
             toks[i, :r.input_len] = r.tokens
         toksj = jnp.asarray(toks % self.cfg.vocab)

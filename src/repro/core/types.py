@@ -27,6 +27,9 @@ class Request:
     # per-phase latency attribution (obs.trace.LatencyBreakdown), attached
     # by the serving path at finish so SLO violations decompose by phase
     breakdown: Optional[object] = None
+    # --- heterogeneous fleet (empty = legacy single-model run) ---
+    model: str = ""                     # arch id the request must be served by
+    tier: str = ""                      # SLO tier label ("interactive", "batch", ...)
 
     @property
     def latency(self) -> Optional[float]:

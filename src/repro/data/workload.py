@@ -8,7 +8,7 @@ length predictor must *learn* this (it is not told the rule).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -180,6 +180,95 @@ def gen_shared_prefix_requests(cfg: SharedPrefixConfig) -> list[Request]:
             contexts[conv] = prompt + rng.integers(
                 0, cfg.vocab, cfg.answer_len).tolist()
     return reqs
+
+
+@dataclass
+class MixedWorkloadConfig:
+    """Mixed-model MLaaS trace (UELLM's actual setting; SageServe traces):
+    one merged arrival stream whose requests are tagged with a ``model``
+    (per-model traffic mix) and an SLO ``tier`` (per-model tier skew).
+
+    ``models`` is ``((arch_id, traffic_weight), ...)``; ``tiers`` is
+    ``((name, slo_lo, slo_hi), ...)``.  ``tier_weights`` optionally skews
+    the tier draw per model (``{arch_id: (w_tier0, w_tier1, ...)}``) —
+    e.g. a small chat model mostly "interactive", a large summarizer
+    mostly "batch".  Request shapes reuse the Alpaca-like marker scheme of
+    ``WorkloadConfig`` so length predictors keep working unchanged.
+    """
+    models: tuple = (("chatglm2-6b", 0.5), ("qwen2-1.5b", 0.5))
+    tiers: tuple = (("interactive", 2.0, 12.0), ("batch", 30.0, 120.0))
+    tier_weights: dict = field(default_factory=dict)
+    n_requests: int = 256
+    arrival_rate: float = 8.0
+    t0: float = 0.0                    # arrival offset (phase-shifted mixes)
+    vocab: int = 1024
+    marker_tokens: int = 32
+    input_mean: float = 4.5
+    input_sigma: float = 0.6
+    output_base: float = 32.0
+    output_max: int = 1024
+    length_noise: float = 0.1
+    marker_frac: float = 0.35
+    seed: int = 0
+    # --- arrival process (same knobs as WorkloadConfig) ---
+    arrival_pattern: str = "poisson"
+    burst_factor: float = 5.0
+    burst_mean_s: float = 4.0
+    quiet_mean_s: float = 12.0
+    quiet_factor: float = 0.25
+    diurnal_period: float = 60.0
+    diurnal_amplitude: float = 0.8
+
+
+def gen_mixed_requests(cfg: MixedWorkloadConfig) -> list[Request]:
+    """Requests tagged (model, tier) with tier-skewed SLOs, merged arrivals."""
+    if not cfg.models:
+        raise ValueError("MixedWorkloadConfig.models must be non-empty")
+    if not cfg.tiers:
+        raise ValueError("MixedWorkloadConfig.tiers must be non-empty")
+    rng = np.random.default_rng(cfg.seed)
+    arrivals = _cfg_arrivals(rng, cfg)
+    names = [m for m, _ in cfg.models]
+    mw = np.asarray([w for _, w in cfg.models], float)
+    mw = mw / mw.sum()
+    tier_w = {}
+    for m in names:
+        w = np.asarray(cfg.tier_weights.get(m, [1.0] * len(cfg.tiers)), float)
+        if len(w) != len(cfg.tiers):
+            raise ValueError(f"tier_weights[{m!r}] needs {len(cfg.tiers)} "
+                             f"entries, got {len(w)}")
+        tier_w[m] = w / w.sum()
+    reqs = []
+    for i in range(cfg.n_requests):
+        model = names[int(rng.choice(len(names), p=mw))]
+        tname, slo_lo, slo_hi = cfg.tiers[int(rng.choice(len(cfg.tiers),
+                                                         p=tier_w[model]))]
+        in_len = int(np.clip(rng.lognormal(cfg.input_mean, cfg.input_sigma),
+                             8, 512))
+        verbosity = rng.uniform(0.0, 1.0)
+        n_markers = int(round(verbosity * cfg.marker_frac * in_len))
+        toks = rng.integers(cfg.marker_tokens, cfg.vocab, size=in_len)
+        marker_pos = rng.choice(in_len, size=n_markers, replace=False)
+        toks[marker_pos] = rng.integers(0, cfg.marker_tokens, size=n_markers)
+        out_len = int(np.clip(
+            cfg.output_base * np.exp(2.5 * verbosity)
+            * rng.lognormal(0.0, cfg.length_noise),
+            1, cfg.output_max))
+        reqs.append(Request(
+            rid=i, tokens=toks.tolist(), input_len=in_len,
+            slo=float(rng.uniform(slo_lo, slo_hi)),
+            arrival=float(cfg.t0 + arrivals[i]), true_output_len=out_len,
+            model=model, tier=tname))
+    return reqs
+
+
+def merge_request_streams(*streams: list[Request]) -> list[Request]:
+    """Interleave tagged streams by arrival time and re-number rids — the
+    composition primitive for phase-shifted multi-model traces."""
+    merged = sorted((r for s in streams for r in s), key=lambda r: r.arrival)
+    for i, r in enumerate(merged):
+        r.rid = i
+    return merged
 
 
 def train_pairs(cfg: WorkloadConfig, n: int, seed: int = 1):

@@ -34,6 +34,11 @@ the routed shares are served live; otherwise the replicas are
 LatencyModel-backed simulated engines on per-replica HELR deployments —
 the cluster-scale path, which ``--autoscale`` extends with the
 forecast-driven elastic replica set (``--workload bursty`` exercises it).
+``--models`` turns the simulated cluster into a heterogeneous MLaaS
+fleet: a mixed-model, tier-skewed trace is served by per-model replica
+pools with model-aware routing, and ``--fleet`` picks between one joint
+allocator over the shared replica budget (marginal SLO value, model-swap
+actions) and independent per-pool autoscalers.
 
 On a TPU pod this runs under the production mesh with the HELR-mesh plan;
 on CPU (--reduced) it serves the reduced config end-to-end.
@@ -53,7 +58,8 @@ from repro.core import (LengthPredictor, Monitor, ResourceProfiler,
                         SchedulerConfig, derive_chunk_tokens, get_scheduler,
                         helr_mesh)
 from repro.core.profiler import PredictorConfig
-from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
+from repro.data.workload import (MixedWorkloadConfig, SharedPrefixConfig,
+                                 WorkloadConfig, gen_mixed_requests,
                                  gen_requests, gen_shared_prefix_requests,
                                  train_pairs)
 from repro.models import api
@@ -61,10 +67,25 @@ from repro.obs.calibrate import CalibratedLatencyModel
 from repro.obs.export import export_trace, metrics_payload, write_metrics
 from repro.obs.profile import CostProfiler
 from repro.obs.trace import NULL_TRACER, Tracer
-from repro.serving import (AutoscalerConfig, EngineConfig, InferenceEngine,
-                           PagedEngine, PagedEngineConfig, Replica, Router,
-                           RouterConfig, get_drafter, paper_cluster,
-                           simulate_cluster)
+from repro.serving import (AutoscalerConfig, EngineConfig,
+                           FleetAutoscalerConfig, InferenceEngine,
+                           ModelPoolSpec, PagedEngine, PagedEngineConfig,
+                           Replica, Router, RouterConfig, get_drafter,
+                           paper_cluster, simulate_cluster)
+
+
+def _parse_model_mix(spec: str) -> list:
+    """``"arch[:weight],arch[:weight]"`` -> ``[(arch, weight), ...]``."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, w = part.partition(":")
+        out.append((name.strip(), float(w) if w else 1.0))
+    if not out:
+        raise SystemExit("--models: empty model list")
+    return out
 
 
 def _make_drafter(args, cfg):
@@ -144,13 +165,22 @@ def _write_artifacts(args, mon, tracer, cprof, *, latency_s=None,
         drift = cprof.drift_by_replica()
         by_rep = " by_replica=" + json.dumps(
             {str(r): n for r, n in drift.items()}) if drift else ""
-        print(f"drift: {cprof.drift_events} events{by_rep}")
+        mdrift = cprof.drift_by_model()
+        by_model = " by_model=" + json.dumps(mdrift) if mdrift else ""
+        print(f"drift: {cprof.drift_events} events{by_rep}{by_model}")
+        mcov = cprof.model_coverage()
+        if mcov:
+            cov = {m: {p: c["samples"] for p, c in d.items()}
+                   for m, d in mcov.items()}
+            print(f"model coverage: {json.dumps(cov)}")
     if args.profile_out:
         cprof.save(args.profile_out)
         cov = {p: c["samples"] for p, c in cprof.coverage().items()}
+        subs = f"{len(cprof.replica_profiles)} replica"
+        if cprof.model_profiles:
+            subs += f" + {len(cprof.model_profiles)} model"
         print(f"profile: {len(cprof.cells)} cells, samples {cov}, "
-              f"{len(cprof.replica_profiles)} replica sub-profiles "
-              f"-> {args.profile_out}")
+              f"{subs} sub-profiles -> {args.profile_out}")
 
 
 def _serve_cluster_live(args, cfg, params, mon, reqs, tracer, cprof,
@@ -225,21 +255,41 @@ def _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models) -> None:
     deployments, driven by the discrete-event simulator."""
     full_cfg = get_config(args.arch)
     n = max(args.requests, 128)
-    if args.workload == "shared-prefix":
+    pattern = args.workload if args.workload in ("bursty", "diurnal") \
+        else "poisson"
+    pools = None
+    if args.models:
+        # heterogeneous fleet: model-tagged, tier-skewed mixed trace and
+        # one replica pool per model over the shared partition budget
+        mix = _parse_model_mix(args.models)
+        reqs = gen_mixed_requests(MixedWorkloadConfig(
+            models=tuple(mix), n_requests=n, arrival_rate=16.0,
+            arrival_pattern=pattern, seed=0))
+        per = max(1, args.replicas // len(mix))
+        pools = [ModelPoolSpec(m, replicas=per, weight=w) for m, w in mix]
+    elif args.workload == "shared-prefix":
         reqs = gen_shared_prefix_requests(SharedPrefixConfig(
             n_requests=n, n_templates=max(4, n // 12), prefix_len=96,
             turns=4, arrival_rate=16.0, slo_lo=8.0, slo_hi=60.0, seed=0))
     else:
-        pattern = args.workload if args.workload in ("bursty", "diurnal") \
-            else "poisson"
         reqs = gen_requests(WorkloadConfig(
             n_requests=n, arrival_rate=16.0, arrival_pattern=pattern,
             slo_lo=8.0, slo_hi=60.0, seed=0))
     auto = None
     if args.autoscale:
-        auto = AutoscalerConfig(interval=1.0, min_replicas=args.replicas,
-                                max_replicas=max(6, 2 * args.replicas),
-                                spawn_delay=1.0)
+        if pools is not None and args.fleet == "joint":
+            auto = FleetAutoscalerConfig(
+                interval=1.0, budget=max(6, 2 * args.replicas),
+                min_per_pool=1, spawn_delay=1.0)
+        elif pools is not None:
+            # replicated per pool by the simulator: independent autoscalers
+            auto = AutoscalerConfig(
+                interval=1.0, min_replicas=max(1, per),
+                max_replicas=max(3, args.replicas), spawn_delay=1.0)
+        else:
+            auto = AutoscalerConfig(interval=1.0, min_replicas=args.replicas,
+                                    max_replicas=max(6, 2 * args.replicas),
+                                    spawn_delay=1.0)
     acc = _spec_acceptance(args, cprof)
     sched_cfg = SchedulerConfig()
     if args.spec_tokens:
@@ -250,7 +300,21 @@ def _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models) -> None:
     # model.  --pricing-quantile adds a tail model for the SLO-facing
     # projections (projected_finish, capacity_rps)
     price = tail_price = None
-    if args.profile_in:
+    if args.profile_in and pools is not None:
+        # fleet pricing: each replica calibrates from its own sub-profile,
+        # falling back to its model's pool aggregate before the fleet view
+        def price(lm, rid, model):
+            m = CalibratedLatencyModel(lm, cprof, replica=rid, model=model)
+            cal_models.append(m)
+            return m
+        if args.pricing_quantile:
+            def tail_price(lm, rid, model):
+                m = CalibratedLatencyModel(lm, cprof, replica=rid,
+                                           model=model,
+                                           quantile=args.pricing_quantile)
+                cal_models.append(m)
+                return m
+    elif args.profile_in:
         def price(lm, rid):
             m = CalibratedLatencyModel(lm, cprof, replica=rid)
             cal_models.append(m)
@@ -263,7 +327,8 @@ def _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models) -> None:
                 return m
     res = simulate_cluster(
         reqs, full_cfg, get_scheduler(args.scheduler), sched_cfg,
-        n_replicas=args.replicas, router=args.router, autoscale=auto,
+        n_replicas=args.replicas, pools=pools, router=args.router,
+        autoscale=auto,
         prefix_cache=args.prefix_cache, chunk_tokens=args.chunk_tokens,
         preempt=args.preempt, spec_tokens=args.spec_tokens,
         spec_acceptance=acc,
@@ -271,7 +336,8 @@ def _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models) -> None:
         tail_price=tail_price)
     print("cluster:", res.summary())
     for s in res.replica_stats:
-        print(f"  replica {s['rid']}: served={s['served']} "
+        tag = f" model={s['model']}" if pools is not None else ""
+        print(f"  replica {s['rid']}:{tag} served={s['served']} "
               f"util={s['utilization']} queue_prefill={s['prefill_tokens']} "
               f"saved={s['prefill_tokens_saved']}")
 
@@ -322,6 +388,19 @@ def main():
                          "bursty/diurnal: arrival patterns for --autoscale")
     ap.add_argument("--replicas", type=int, default=1,
                     help="cluster serving: replicas behind the router")
+    ap.add_argument("--models", default=None, metavar="SPEC",
+                    help="heterogeneous fleet on the simulated cluster: "
+                         "comma list of arch[:weight] (e.g. "
+                         "'chatglm2-6b:0.6,qwen2-1.5b:0.4').  Requests "
+                         "arrive tagged with a model and an SLO tier, "
+                         "replicas form per-model pools, and routing is "
+                         "model-aware")
+    ap.add_argument("--fleet", default="joint",
+                    choices=["joint", "independent"],
+                    help="with --models --autoscale: one joint allocator "
+                         "over the shared replica budget (marginal SLO "
+                         "value, model-swap actions) or independent "
+                         "per-pool autoscalers")
     ap.add_argument("--router", default="round_robin",
                     choices=["round_robin", "least_loaded", "prefix_affinity",
                              "slo_aware"],
@@ -367,8 +446,12 @@ def main():
     if args.autoscale and args.paged:
         raise SystemExit("--autoscale needs the simulated cluster path: "
                          "drop --paged (elasticity has no live-engine mode)")
+    if args.models and args.paged:
+        raise SystemExit("--models needs the simulated cluster path: "
+                         "drop --paged (the heterogeneous fleet has no "
+                         "live-engine mode)")
     if (args.prefix_cache or args.speculate) \
-            and not (args.replicas > 1 or args.autoscale):
+            and not (args.replicas > 1 or args.autoscale or args.models):
         args.paged = True          # cluster sim path honors the flags itself
     args.spec_tokens = args.spec_tokens if args.speculate else 0
 
@@ -402,7 +485,8 @@ def main():
           f"(plan for production mesh: "
           f"{helr_mesh(get_config(args.arch), SHAPES['decode_32k']).name})")
 
-    if (args.replicas > 1 or args.autoscale) and not args.paged:
+    if (args.replicas > 1 or args.autoscale or args.models) \
+            and not args.paged:
         # cluster-scale path: simulated replicas, no model weights needed
         pred = LengthPredictor(PredictorConfig(), seed=0)
         toks, lens = train_pairs(WorkloadConfig(), 256, seed=1)

@@ -13,17 +13,21 @@ observed/predicted ratio:
 where ``correction`` resolves through a fallback chain, most-specific
 scope first:
 
-1. the matching cell's measured ratio in the model's *replica*
-   sub-profile (when ``replica`` is set), then the replica's phase-wide
-   ratio — a heterogeneous fleet prices each replica from its own
-   hardware's evidence;
-2. the matching *fleet* cell's ratio, when that cell holds at least
+1. the matching cell's measured ratio in the *replica* sub-profile (when
+   ``replica`` is set), then the replica's phase-wide ratio — a
+   heterogeneous fleet prices each replica from its own hardware's
+   evidence;
+2. the matching cell in the *model's* pool aggregate (when ``model`` is
+   set), then the model's phase-wide ratio — a fresh replica of model M
+   inherits M's pool evidence instead of being polluted by other models'
+   cost curves;
+3. the matching *fleet* cell's ratio, when that cell holds at least
    ``min_samples`` reference-compared samples (coverage hit);
-3. the fleet phase-wide ratio — a uniform miscalibration (e.g. efficiency
+4. the fleet phase-wide ratio — a uniform miscalibration (e.g. efficiency
    off 2× on a compute-bound phase) shows up as a near-constant ratio, so
    the phase ratio generalizes to operating points execution never visited
    (projection cohorts, ``capacity_rps`` at full width);
-4. 1.0 — pure analytic fallback when nothing was measured (coverage miss).
+5. 1.0 — pure analytic fallback when nothing was measured (coverage miss).
 
 With ``quantile=q`` the correction at each step is the *q-quantile* of the
 observed/predicted ratio histogram instead of its mean — tail pricing for
@@ -55,12 +59,14 @@ class CalibratedLatencyModel:
 
     def __init__(self, analytic, profile: CostProfiler, *,
                  min_samples: int = 3, quantile: Optional[float] = None,
-                 replica: Optional[int] = None):
+                 replica: Optional[int] = None,
+                 model: Optional[str] = None):
         self.analytic = analytic
         self.profile = profile
         self.min_samples = min_samples
         self.quantile = quantile          # None = mean ratio; q = tail ratio
         self.replica = replica            # None = fleet-aggregate pricing
+        self.model = model or None        # pool-aggregate fallback scope
         self.cell_hits = 0       # priced from a covered cell's ratio
         self.phase_hits = 0      # fell back to a phase-wide ratio
         self.cell_misses = 0     # pure analytic (no measurement at all)
@@ -76,23 +82,33 @@ class CalibratedLatencyModel:
             return cell.ratio_hist.quantile(self.quantile)
         return cell.ratio_ema
 
-    def _phase_ratio(self, phase: str,
-                     replica: Optional[int]) -> Optional[float]:
+    def _phase_ratio(self, phase: str, replica: Optional[int],
+                     model: Optional[str] = None) -> Optional[float]:
         ratio, n = self.profile.phase_correction(
-            phase, replica=replica, quantile=self.quantile)
+            phase, replica=replica, model=model, quantile=self.quantile)
         return ratio if n >= self.min_samples else None
 
     def _correction(self, phase: str, cells: tuple) -> float:
         """Resolve the fallback chain: replica cell → replica phase →
-        fleet cell → fleet phase → 1.0 (``cells`` is (replica, fleet),
-        the replica entry None for fleet-scoped models)."""
-        cell_rep, cell_fleet = cells
+        model cell → model phase → fleet cell → fleet phase → 1.0
+        (``cells`` is (replica, model, fleet); the replica/model entries
+        are None for wider-scoped models)."""
+        cell_rep, cell_model, cell_fleet = cells
         if self.replica is not None:
             r = self._cell_ratio(cell_rep)
             if r is not None:
                 self.cell_hits += 1
                 return r
             r = self._phase_ratio(phase, self.replica)
+            if r is not None:
+                self.phase_hits += 1
+                return r
+        if self.model is not None:
+            r = self._cell_ratio(cell_model)
+            if r is not None:
+                self.cell_hits += 1
+                return r
+            r = self._phase_ratio(phase, None, self.model)
             if r is not None:
                 self.phase_hits += 1
                 return r
@@ -113,6 +129,9 @@ class CalibratedLatencyModel:
         cells = (self.profile.decode_cell(batch, kv_tokens, q_tokens,
                                           replica=self.replica)
                  if self.replica is not None else None,
+                 self.profile.decode_cell(batch, kv_tokens, q_tokens,
+                                          model=self.model)
+                 if self.model is not None else None,
                  self.profile.decode_cell(batch, kv_tokens, q_tokens))
         return base * self._correction("decode", cells)
 
@@ -121,6 +140,8 @@ class CalibratedLatencyModel:
         cells = (self.profile.prefill_cell(batch, in_len,
                                            replica=self.replica)
                  if self.replica is not None else None,
+                 self.profile.prefill_cell(batch, in_len, model=self.model)
+                 if self.model is not None else None,
                  self.profile.prefill_cell(batch, in_len))
         return base * self._correction("prefill", cells)
 
@@ -136,6 +157,8 @@ class CalibratedLatencyModel:
             out["quantile"] = self.quantile
         if self.replica is not None:
             out["replica"] = self.replica
+        if self.model is not None:
+            out["model"] = self.model
         return out
 
     # everything else (cfg, efficiency, peak_flops, _stage_flops_token,

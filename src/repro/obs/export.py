@@ -118,10 +118,12 @@ def event_names(obj: dict) -> set:
 
 # ------------------------------------------------------------- metrics JSON
 
-METRICS_SCHEMA_VERSION = 4
-# oldest schema validate_metrics still accepts: v3 payloads differ from v4
-# only inside the profile block (v4 adds per-replica drift attribution and
-# pricing coverage counters), so existing artifacts stay readable
+METRICS_SCHEMA_VERSION = 5
+# oldest schema validate_metrics still accepts: v3->v4 only changed the
+# profile block (per-replica drift attribution, pricing coverage counters)
+# and v4->v5 adds the heterogeneous-fleet blocks (per-model/per-tier SLO
+# attainment in the monitor, per-model coverage and drift in the profile),
+# so existing artifacts stay readable
 METRICS_SCHEMA_MIN = 3
 
 _METRIC_FIELDS = ("latency_s", "p99_latency_s", "throughput",
@@ -137,10 +139,12 @@ def metrics_payload(name: str, *, latency_s=None, p99_latency_s=None,
     producer is a benchmark harness (``common.persist``) or a serve run
     (``--metrics-json``).  ``monitor`` carries ``Monitor.metrics()``
     verbatim — including the per-axis histogram quantile blocks — and is
-    ``{}`` for harnesses that run without a monitor.  ``profile`` carries
-    ``CostProfiler.metrics()`` — coverage counters, residual quantiles,
-    drift counts (schema v4: attributed per replica, plus optional
-    ``pricing`` coverage counters from the run's calibrated models), and
+    ``{}`` for harnesses that run without a monitor (schema v5: the
+    monitor block may carry ``slo_by_key`` per-model/per-tier attainment).
+    ``profile`` carries ``CostProfiler.metrics()`` — coverage counters,
+    residual quantiles, drift counts (v4: attributed per replica, plus
+    optional ``pricing`` coverage counters from the run's calibrated
+    models; v5: also per-model blocks and ``drift_by_model``), and
     measured speculative acceptance — and is ``{}`` for runs that served
     without the cost profiler."""
     return {

@@ -13,10 +13,12 @@ roofline ``LatencyModel``.  ``CostProfiler`` closes the loop:
   (batch-bucket, token-bucket) — so a measurement made at one operating
   point generalizes to its neighborhood without drowning distinct regimes
   in one average;
-* cells are kept **per replica** (keyed by the span's ``track``) *and* as a
-  fleet-wide aggregate, so a heterogeneous fleet prices each replica from
-  its own measurements and falls back to the fleet view only for operating
-  points that replica has not yet visited;
+* cells are kept **per replica** (keyed by the span's ``track``), **per
+  model** (keyed by the span's ``model`` arg, when present) *and* as a
+  fleet-wide aggregate, so a heterogeneous multi-model fleet prices each
+  replica from its own measurements, falls back to its *model's* pool
+  aggregate for operating points the replica has not visited, and only
+  then to the fleet view;
 * with a ``reference`` pricing model attached it also maintains
   predicted-vs-observed **residual ratio** statistics (per-cell and
   per-phase weighted means plus log-bucketed ratio histograms — the
@@ -34,8 +36,9 @@ roofline ``LatencyModel``.  ``CostProfiler`` closes the loop:
   ``PagedEngine._spec_step`` — the live replacement for the static
   ``SPEC_ACCEPT_PRIOR`` planning constant;
 * profiles persist as a versioned JSON **registry** (``save``/``load``)
-  with per-replica sub-profiles (v2); legacy v1 registries still load, as
-  a fleet-only profile.
+  with per-replica and per-model sub-profiles (v3); v2 registries still
+  load as a single-model profile (no per-model scopes) and legacy v1
+  registries load as a fleet-only profile.
 
 Span producers carry the operating point in ``args``: ``batch``/``kv``/
 ``q_tokens`` on decode/verify spans, ``tokens`` on prefill spans, and
@@ -68,7 +71,7 @@ def _bidx(v: float) -> int:
         return 0
     return 1 + int(math.log(v / DEFAULT_V_MIN) * _ILG)
 
-PROFILE_VERSION = 2
+PROFILE_VERSION = 3
 
 # planning bootstrap for speculative acceptance before any measurement
 # exists (repetitive MLaaS traffic with the n-gram drafter lands 0.4-0.8;
@@ -201,6 +204,8 @@ class CostProfiler:
             else 1.0
         self.fleet = SubProfile()
         self.replica_profiles: dict[int, SubProfile] = {}
+        self.model_profiles: dict[str, SubProfile] = {}
+        self._replica_model: dict[int, str] = {}  # learned from span args
         self._drift_imported = 0          # v1 registries carry only a total
         self._last_key: dict[tuple, tuple] = {}  # (phase, track) -> dedupe
         # measured speculative acceptance (PagedEngine._spec_step feeds it)
@@ -249,6 +254,17 @@ class CostProfiler:
         return {rid: sub.drift_events
                 for rid, sub in sorted(self.replica_profiles.items())
                 if sub.drift_events}
+
+    def drift_by_model(self) -> dict[str, int]:
+        """Band crossings rolled up to the model each drifting replica was
+        serving (non-zero only).  Replicas whose spans never carried a
+        ``model`` arg are skipped — single-model runs report nothing here."""
+        out: dict[str, int] = {}
+        for rid, sub in sorted(self.replica_profiles.items()):
+            m = self._replica_model.get(rid)
+            if m and sub.drift_events:
+                out[m] = out.get(m, 0) + sub.drift_events
+        return out
 
     # ------------------------------------------------------------- histograms
     def _new_hist(self):
@@ -299,6 +315,7 @@ class CostProfiler:
         args = ev.args or {}
         t_end = ev.t0 + ev.dur
         ref = self.reference
+        model = str(args.get("model", "") or "")
         if phase == "decode":
             batch, kv = args.get("batch"), args.get("kv")
             if batch is None or kv is None or ev.dur <= 0:
@@ -319,7 +336,7 @@ class CostProfiler:
                     pred = pc[(batch, kv, q)] = \
                         ref.token_time(batch, kv, q_tokens=q)
             self._observe(key, "decode", ev.dur / iters, pred,
-                          max(1, int(iters)), t_end, int(ev.track))
+                          max(1, int(iters)), t_end, int(ev.track), model)
         else:
             tokens = args.get("tokens")
             if not tokens or ev.dur <= 0:
@@ -336,32 +353,34 @@ class CostProfiler:
                     pred = pc[(batch, tokens)] = \
                         ref.prefill_time(batch, tokens)
             self._observe(key, "prefill", ev.dur, pred, 1, t_end,
-                          int(ev.track))
+                          int(ev.track), model)
 
     # -------------------------------------------------------- direct observe
     def observe_decode(self, seconds: float, *, batch: int, kv: float,
                        q_tokens: int = 1, weight: int = 1,
-                       t: Optional[float] = None, replica: int = 0) -> None:
+                       t: Optional[float] = None, replica: int = 0,
+                       model: str = "") -> None:
         """One measured decode/verify iteration at (batch, kv, q_tokens)."""
         key = ("decode", batch_bucket(batch), kv_bucket(kv), int(q_tokens))
         pred = None
         if self.reference is not None:
             pred = self.reference.token_time(batch, kv, q_tokens=q_tokens)
-        self._observe(key, "decode", seconds, pred, weight, t, replica)
+        self._observe(key, "decode", seconds, pred, weight, t, replica, model)
 
     def observe_prefill(self, seconds: float, *, batch: int, tokens: int,
                         weight: int = 1, t: Optional[float] = None,
-                        replica: int = 0) -> None:
+                        replica: int = 0, model: str = "") -> None:
         """One measured prefill call of ``tokens`` tokens at ``batch``."""
         key = ("prefill", batch_bucket(batch), token_bucket(tokens))
         pred = None
         if self.reference is not None:
             pred = self.reference.prefill_time(batch, tokens)
-        self._observe(key, "prefill", seconds, pred, weight, t, replica)
+        self._observe(key, "prefill", seconds, pred, weight, t, replica,
+                      model)
 
     def _observe(self, key: tuple, phase: str, obs: float,
                  pred: Optional[float], weight: int,
-                 t: Optional[float], replica: int) -> None:
+                 t: Optional[float], replica: int, model: str = "") -> None:
         # bucket the sample once: the same (value, index) pair feeds the
         # fleet and replica copies of every histogram it lands in
         hv = obs if obs > 0.0 else 0.0
@@ -373,6 +392,13 @@ class CostProfiler:
             ratio, ridx = None, 0
         self._observe_into(self.fleet, key, phase, obs, hv, oidx,
                            ratio, ridx, weight)
+        if model:
+            self._replica_model[replica] = model
+            msub = self.model_profiles.get(model)
+            if msub is None:
+                msub = self.model_profiles[model] = SubProfile()
+            self._observe_into(msub, key, phase, obs, hv, oidx,
+                               ratio, ridx, weight)
         sub = self.replica_profiles.get(replica)
         if sub is None:
             sub = self.replica_profiles[replica] = SubProfile()
@@ -455,22 +481,27 @@ class CostProfiler:
         return self._spec_ema if self.spec_samples else self._spec_bootstrap
 
     # ---------------------------------------------------------------- lookup
-    def _sub(self, replica: Optional[int]) -> Optional[SubProfile]:
-        if replica is None:
-            return self.fleet
-        return self.replica_profiles.get(replica)
+    def _sub(self, replica: Optional[int],
+             model: Optional[str] = None) -> Optional[SubProfile]:
+        if replica is not None:
+            return self.replica_profiles.get(replica)
+        if model:
+            return self.model_profiles.get(model)
+        return self.fleet
 
     def decode_cell(self, batch: int, kv: float, q_tokens: int = 1,
-                    *, replica: Optional[int] = None) -> Optional[CostCell]:
-        sub = self._sub(replica)
+                    *, replica: Optional[int] = None,
+                    model: Optional[str] = None) -> Optional[CostCell]:
+        sub = self._sub(replica, model)
         if sub is None:
             return None
         return sub.cells.get(("decode", batch_bucket(batch),
                               kv_bucket(kv), int(q_tokens)))
 
     def prefill_cell(self, batch: int, tokens: float,
-                     *, replica: Optional[int] = None) -> Optional[CostCell]:
-        sub = self._sub(replica)
+                     *, replica: Optional[int] = None,
+                     model: Optional[str] = None) -> Optional[CostCell]:
+        sub = self._sub(replica, model)
         if sub is None:
             return None
         return sub.cells.get(("prefill", batch_bucket(batch),
@@ -478,14 +509,16 @@ class CostProfiler:
 
     def phase_correction(self, phase: str, *,
                          replica: Optional[int] = None,
+                         model: Optional[str] = None,
                          quantile: Optional[float] = None
                          ) -> tuple[float, int]:
         """(calibration ratio, sample count) for a phase — the scope-wide
         multiplicative correction for operating points no cell covers.
-        ``replica=None`` reads the fleet aggregate.  With ``quantile`` set
-        the ratio is that quantile of the phase residual histogram (tail
+        Scope precedence: ``replica`` if given, else ``model``'s pool
+        aggregate, else the fleet aggregate.  With ``quantile`` set the
+        ratio is that quantile of the phase residual histogram (tail
         pricing) instead of the weighted mean."""
-        sub = self._sub(replica)
+        sub = self._sub(replica, model)
         if sub is None:
             return (1.0, 0)
         pr = sub.phase_ratio.get(phase)
@@ -508,17 +541,25 @@ class CostProfiler:
             d["samples"] += cell.count
         return out
 
+    @staticmethod
+    def _sub_coverage(sub: SubProfile) -> dict:
+        d: dict = {}
+        for (phase, *_), cell in sub.cells.items():
+            p = d.setdefault(phase, {"cells": 0, "samples": 0})
+            p["cells"] += 1
+            p["samples"] += cell.count
+        return d
+
     def replica_coverage(self) -> dict:
         """Per-replica per-phase cell/sample counts."""
-        out: dict = {}
-        for rid, sub in sorted(self.replica_profiles.items()):
-            d: dict = {}
-            for (phase, *_), cell in sub.cells.items():
-                p = d.setdefault(phase, {"cells": 0, "samples": 0})
-                p["cells"] += 1
-                p["samples"] += cell.count
-            out[rid] = d
-        return out
+        return {rid: self._sub_coverage(sub)
+                for rid, sub in sorted(self.replica_profiles.items())}
+
+    def model_coverage(self) -> dict:
+        """Per-model per-phase cell/sample counts (empty for single-model
+        runs whose spans carry no ``model`` arg)."""
+        return {m: self._sub_coverage(sub)
+                for m, sub in sorted(self.model_profiles.items())}
 
     @staticmethod
     def _sub_ratios(sub: SubProfile) -> dict:
@@ -526,9 +567,9 @@ class CostProfiler:
                 for ph, pr in sub.phase_ratio.items() if pr[2] > 0}
 
     def metrics(self) -> dict:
-        """The metrics-JSON ``profile`` block (schema v4): coverage,
-        residual quantiles, calibration ratios, per-replica drift
-        attribution, measured acceptance."""
+        """The metrics-JSON ``profile`` block (schema v5): coverage,
+        residual quantiles, calibration ratios, per-replica and per-model
+        drift attribution, measured acceptance."""
         out = {
             "version": PROFILE_VERSION,
             "coverage": self.coverage(),
@@ -544,12 +585,21 @@ class CostProfiler:
         drift = self.drift_by_replica()
         if drift:
             out["drift_by_replica"] = {str(r): n for r, n in drift.items()}
+        mdrift = self.drift_by_model()
+        if mdrift:
+            out["drift_by_model"] = mdrift
         if self.replica_profiles:
             out["replicas"] = {
                 str(rid): {"cells": len(sub.cells),
                            "drift_events": sub.drift_events,
                            "calibration_ratio": self._sub_ratios(sub)}
                 for rid, sub in sorted(self.replica_profiles.items())}
+        if self.model_profiles:
+            out["models"] = {
+                m: {"cells": len(sub.cells),
+                    "samples": sum(c.count for c in sub.cells.values()),
+                    "calibration_ratio": self._sub_ratios(sub)}
+                for m, sub in sorted(self.model_profiles.items())}
         if self.spec_samples:
             out["spec_acceptance"] = round(self.spec_acceptance, 4)
             out["spec_samples"] = self.spec_samples
@@ -595,7 +645,7 @@ class CostProfiler:
     def to_json(self) -> dict:
         """Versioned profile registry payload (everything ``from_json``
         needs to reproduce this profiler's predictions exactly), with one
-        sub-profile per replica plus the fleet aggregate."""
+        sub-profile per replica and per model plus the fleet aggregate."""
         return {
             "profile_version": PROFILE_VERSION,
             "alpha": self.alpha,
@@ -608,6 +658,10 @@ class CostProfiler:
             "replicas": {str(rid): self._sub_to_json(sub)
                          for rid, sub in
                          sorted(self.replica_profiles.items())},
+            "models": {m: self._sub_to_json(sub)
+                       for m, sub in sorted(self.model_profiles.items())},
+            "replica_models": {str(rid): m for rid, m in
+                               sorted(self._replica_model.items())},
             "spec": {"drafted": self.spec_drafted,
                      "accepted": self.spec_accepted,
                      "samples": self.spec_samples,
@@ -621,10 +675,10 @@ class CostProfiler:
         v = obj.get("profile_version")
         if v == 1:
             return cls._from_json_v1(obj, reference=reference, tracer=tracer)
-        if v != PROFILE_VERSION:
+        if v not in (2, PROFILE_VERSION):
             raise ValueError(f"unsupported profile_version {v!r} "
                              f"(this build reads {PROFILE_VERSION} and "
-                             f"legacy 1)")
+                             f"legacy 1-2)")
         prof = cls(alpha=obj["alpha"], drift_tol=obj["drift_tol"],
                    drift_min_samples=obj["drift_min_samples"],
                    reference=reference, tracer=tracer,
@@ -634,6 +688,13 @@ class CostProfiler:
         prof.fleet = prof._sub_from_json(obj["fleet"])
         prof.replica_profiles = {int(rid): prof._sub_from_json(d)
                                  for rid, d in obj["replicas"].items()}
+        # v2 registries predate model scopes: they load as a single-model
+        # profile (no per-model sub-profiles, no replica->model map) and
+        # per-model lookups fall back to the fleet aggregate
+        prof.model_profiles = {m: prof._sub_from_json(d)
+                               for m, d in obj.get("models", {}).items()}
+        prof._replica_model = {int(rid): m for rid, m in
+                               obj.get("replica_models", {}).items()}
         sp = obj["spec"]
         prof.spec_drafted = sp["drafted"]
         prof.spec_accepted = sp["accepted"]

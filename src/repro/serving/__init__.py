@@ -9,6 +9,9 @@ from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,  # noqa: F401
 from repro.serving.speculative import (Drafter, ModelDrafter,  # noqa: F401
                                        NGramDrafter, get_drafter)
 from repro.serving.cluster import (Autoscaler, AutoscalerConfig,  # noqa: F401
+                                   Fleet, FleetAutoscaler,
+                                   FleetAutoscalerConfig, HardwareProfile,
+                                   ModelPoolSpec, NoCompatiblePoolError,
                                    Replica, Router, RouterConfig)
 from repro.serving.simulator import (ClusterSimResult,  # noqa: F401
                                      ContinuousSimResult, LatencyModel,

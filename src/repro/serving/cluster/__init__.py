@@ -1,9 +1,15 @@
 """Multi-replica cluster serving: SLO-aware routing + forecast-driven
-autoscaling over replicated engines.  The discrete-event driver lives in
-``repro.serving.simulator.simulate_cluster``."""
+autoscaling over replicated engines — heterogeneous multi-model fleets
+included (per-model pools, joint placement/scaling).  The discrete-event
+driver lives in ``repro.serving.simulator.simulate_cluster``."""
 from repro.serving.cluster.autoscaler import (ArrivalForecaster,  # noqa: F401
                                               Autoscaler, AutoscalerConfig,
                                               ScaleEvent)
-from repro.serving.cluster.replica import Replica, ReplicaStats  # noqa: F401
-from repro.serving.cluster.router import (POLICIES, Router,  # noqa: F401
+from repro.serving.cluster.fleet import (Fleet, FleetAutoscaler,  # noqa: F401
+                                         FleetAutoscalerConfig,
+                                         FleetScaleEvent, ModelPoolSpec)
+from repro.serving.cluster.replica import (HardwareProfile,  # noqa: F401
+                                           Replica, ReplicaStats)
+from repro.serving.cluster.router import (POLICIES,  # noqa: F401
+                                          NoCompatiblePoolError, Router,
                                           RouterConfig, RouterStats)

@@ -40,6 +40,23 @@ from repro.serving.prefix_cache import RadixBlockTree
 from repro.serving.simulator import LatencyModel
 
 
+@dataclass(frozen=True)
+class HardwareProfile:
+    """The hardware lane a replica's partition runs on (SageServe's
+    fast/slow lanes, PAPERS.md): ``scale`` multiplies every node's
+    effective FLOP/s before deployment, so one model config yields
+    distinct LatencyModels per lane — heterogeneity without a separate
+    topology per replica."""
+    name: str = "standard"
+    scale: float = 1.0
+
+    def apply(self, nodes: Sequence[DeviceNode]) -> list[DeviceNode]:
+        if self.scale == 1.0:
+            return list(nodes)
+        return [DeviceNode(n.node_id, n.memory, n.performance * self.scale,
+                           n.name) for n in nodes]
+
+
 @dataclass
 class ReplicaStats:
     served: int = 0
@@ -80,9 +97,15 @@ class Replica:
                  spec_tokens: int = 0, spec_acceptance: float = 0.0,
                  spawned_at: float = 0.0, engine=None,
                  tracer: Optional[Tracer] = None, price_model=None,
-                 tail_model=None):
+                 tail_model=None, model: Optional[str] = None,
+                 hw: Optional[HardwareProfile] = None):
         self.rid = rid
         self.model_cfg = model_cfg
+        # fleet identity: which model pool this replica serves, and which
+        # hardware lane its partition runs on (scales the LatencyModel)
+        self.model = model if model is not None else model_cfg.name
+        self.hw = hw if hw is not None else HardwareProfile()
+        nodes = self.hw.apply(nodes)
         model_mem = model_mem or model_cfg.param_count() * 2.0
         self.dmap = deploy(model_mem, model_cfg.n_layers, nodes, latency)
         if not self.dmap.path:
@@ -380,7 +403,8 @@ class Replica:
             from repro.core.scheduler import spec_speedup
             self.tracer.span("batch_prefill", now, now + t_pre,
                              track=self.rid,
-                             args={"batch": n, "tokens": pre_len})
+                             args={"batch": n, "tokens": pre_len,
+                                   "model": self.model})
             # kv/iters/q_tokens let the profiler sink normalize this
             # whole-drain span to per-iteration decode cost at the
             # batch's steps-weighted mean operating point
@@ -392,7 +416,8 @@ class Replica:
                                    "tokens": b.true_padded_output,
                                    "kv": kv_wsum / max(1, dec_steps),
                                    "iters": iters,
-                                   "q_tokens": self.spec_tokens + 1})
+                                   "q_tokens": self.spec_tokens + 1,
+                                   "model": self.model})
         st = self.stats
         st.batches += 1
         st.served += n

@@ -22,12 +22,22 @@ UELLM's signals — PAPERS.md):
   (``Replica.tail``) — because an admit decision backing a p99-gated SLO
   off a fleet-mean ratio systematically under-prices slow replicas.
 
+All four policies are **model-aware**: a request tagged ``r.model`` is
+ranked only within its compatible pool (replicas serving that model), and
+affinity/rendezvous keys are namespaced by model so two pools' identical
+templates never collide.  A tagged request whose pool has no live replica
+raises ``NoCompatiblePoolError`` — a typed cross-pool fault the caller
+must handle (shed + count), never a silent misroute.  ``model_aware=False``
+is the ablation baseline: policies rank the whole fleet, and a pick that
+lands outside the compatible pool is counted as a **misroute** and bounced
+into the pool — the caller charges the forward hop (``forward_delay``).
+
 ``Router.dispatch`` only *selects*; the caller enqueues, so live-engine and
 simulated paths share the policy code.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
@@ -38,6 +48,15 @@ from repro.serving.cluster.replica import Replica
 POLICIES = ("round_robin", "least_loaded", "prefix_affinity", "slo_aware")
 
 
+class NoCompatiblePoolError(RuntimeError):
+    """A model-tagged request found no live replica serving its model."""
+
+    def __init__(self, model: str):
+        super().__init__(f"no live replica serves model {model!r} "
+                         f"(compatible pool is empty)")
+        self.model = model
+
+
 @dataclass
 class RouterConfig:
     policy: str = "round_robin"
@@ -46,6 +65,10 @@ class RouterConfig:
     min_affinity_hit: int = 1      # tokens a match must cover to count
     shed_slack: float = 0.0        # extra seconds granted before shedding
     seed: int = 0
+    # model-blind ablation: rank the whole fleet, bounce misroutes into the
+    # compatible pool at a forward-hop cost the caller charges
+    model_aware: bool = True
+    forward_delay: float = 0.25    # seconds a bounced misroute pays
 
     def __post_init__(self):
         if self.policy not in POLICIES:
@@ -59,11 +82,21 @@ class RouterStats:
     shed: int = 0
     affinity_hits: int = 0         # routed by a radix-tree match
     hash_fallbacks: int = 0        # routed by rendezvous hash (cold prompt)
+    misroutes: int = 0             # model-blind picks bounced into the pool
+    pool_faults: int = 0           # NoCompatiblePoolError raised
+    shed_by_tier: dict = field(default_factory=dict)
 
     def summary(self) -> dict:
-        return {"dispatched": self.dispatched, "shed": self.shed,
-                "affinity_hits": self.affinity_hits,
-                "hash_fallbacks": self.hash_fallbacks}
+        out = {"dispatched": self.dispatched, "shed": self.shed,
+               "affinity_hits": self.affinity_hits,
+               "hash_fallbacks": self.hash_fallbacks}
+        if self.misroutes:
+            out["misroutes"] = self.misroutes
+        if self.pool_faults:
+            out["pool_faults"] = self.pool_faults
+        if self.shed_by_tier:
+            out["shed_by_tier"] = dict(self.shed_by_tier)
+        return out
 
 
 def _hrw(key: tuple, rid: int) -> int:
@@ -76,15 +109,23 @@ class Router:
     def __init__(self, cfg: RouterConfig = RouterConfig()):
         self.cfg = cfg
         self.stats = RouterStats()
-        self._rr = 0
+        self._rr = 0                   # legacy shared round-robin cursor
+        self._rr_by_pool: dict = {}    # model -> per-pool cursor
         self._rng = np.random.default_rng(cfg.seed)
 
     # -------------------------------------------------------------- policies
     def _round_robin(self, r: Request, alive: list[Replica],
                      now: float) -> Replica:
-        rep = alive[self._rr % len(alive)]
-        self._rr += 1
-        return rep
+        model = getattr(r, "model", "")
+        if model and self.cfg.model_aware:
+            # per-pool cursor: interleaved multi-model arrivals must still
+            # cycle evenly *within* each pool
+            idx = self._rr_by_pool.get(model, 0)
+            self._rr_by_pool[model] = idx + 1
+        else:
+            idx = self._rr
+            self._rr += 1
+        return alive[idx % len(alive)]
 
     def _least_loaded(self, r: Request, alive: list[Replica],
                       now: float) -> Replica:
@@ -100,7 +141,13 @@ class Router:
         if best_hit >= self.cfg.min_affinity_hit:
             self.stats.affinity_hits += 1
             return best
+        # namespace the rendezvous key by model so identical templates in
+        # two pools stay sticky independently; untagged requests keep the
+        # legacy key (stable HRW assignment across this change)
         key = tuple(r.tokens[:self.cfg.affinity_block])
+        model = getattr(r, "model", "")
+        if model:
+            key = (model,) + key
         self.stats.hash_fallbacks += 1
         return max(alive, key=lambda rep: _hrw(key, rep.rid))
 
@@ -118,21 +165,49 @@ class Router:
         return rep
 
     # -------------------------------------------------------------- dispatch
+    def _select(self, r: Request, cands: list[Replica],
+                now: float) -> Optional[Replica]:
+        # pool backpressure: a replica whose projected block demand has
+        # exhausted its pool only receives work when every pool is full
+        roomy = [rep for rep in cands if rep.free_blocks > 0]
+        cands = roomy or cands
+        return getattr(self, f"_{self.cfg.policy}")(r, cands, now)
+
+    def _shed(self, r: Request) -> None:
+        self.stats.shed += 1
+        tier = getattr(r, "tier", "") or "default"
+        self.stats.shed_by_tier[tier] = \
+            self.stats.shed_by_tier.get(tier, 0) + 1
+
     def dispatch(self, r: Request, replicas: list[Replica],
                  now: float) -> Optional[Replica]:
         """Select a replica for ``r`` (None = shed).  Draining / retired
-        replicas never receive new work."""
+        replicas never receive new work.  Raises ``NoCompatiblePoolError``
+        when ``r`` is model-tagged and its pool has no live replica."""
         alive = [rep for rep in replicas if rep.accepting]
+        model = getattr(r, "model", "")
+        if model:
+            pool = [rep for rep in alive if rep.model == model]
+            if not pool:
+                self.stats.pool_faults += 1
+                raise NoCompatiblePoolError(model)
+        else:
+            pool = alive
         if not alive:
-            self.stats.shed += 1
+            self._shed(r)
             return None
-        # pool backpressure: a replica whose projected block demand has
-        # exhausted its pool only receives work when every pool is full
-        roomy = [rep for rep in alive if rep.free_blocks > 0]
-        alive = roomy or alive
-        rep = getattr(self, f"_{self.cfg.policy}")(r, alive, now)
+        if self.cfg.model_aware or pool is alive:
+            rep = self._select(r, pool, now)
+        else:
+            # model-blind baseline: rank the whole fleet; a wrong-pool pick
+            # is a misroute, bounced into the compatible pool (the caller
+            # charges cfg.forward_delay for the extra hop)
+            rep = self._select(r, alive, now)
+            if rep is not None and rep.model != model:
+                self.stats.misroutes += 1
+                rep = self._select(r, pool, now)
         if rep is None:
-            self.stats.shed += 1
+            self._shed(r)
             return None
         self.stats.dispatched += 1
         return rep

@@ -19,8 +19,9 @@ from __future__ import annotations
 
 import heapq
 import inspect
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -693,15 +694,44 @@ def simulate_continuous(
 
 # ------------------------------------------------- multi-replica simulation
 
-def replicated_cluster(n: int, *, scale: float = 1.0
+def replicated_cluster(n: Optional[int] = None, *, scale: Optional[float] = None,
+                       profiles: Optional[Sequence] = None
                        ) -> list[tuple[list[DeviceNode], list[list[float]]]]:
-    """n node partitions, each a paper_cluster island (one per replica);
-    ``scale`` multiplies per-device performance (capacity studies)."""
+    """Node partitions, each a paper_cluster island (one per replica).
+
+    ``profiles`` is the heterogeneity spec: one entry per partition, each a
+    float performance scale, a ``{"scale": s}`` dict, or anything with a
+    ``.scale`` attribute (``HardwareProfile``) — fast/slow lanes from one
+    topology.  The legacy ``(n, scale=...)`` form (one global float) still
+    works but explicitly passing ``scale`` is deprecated; omit it (every
+    partition at 1.0) or pass ``profiles``.
+    """
+    if profiles is not None:
+        if n is not None and n != len(profiles):
+            raise ValueError(f"n={n} disagrees with len(profiles)="
+                             f"{len(profiles)}")
+        scales = []
+        for p in profiles:
+            if isinstance(p, dict):
+                scales.append(float(p.get("scale", 1.0)))
+            elif hasattr(p, "scale"):
+                scales.append(float(p.scale))
+            else:
+                scales.append(float(p))
+    else:
+        if n is None:
+            raise TypeError("replicated_cluster: pass n or profiles")
+        if scale is not None:
+            warnings.warn(
+                "replicated_cluster(scale=...) is deprecated; pass "
+                "profiles=[scale]*n (per-replica heterogeneity spec)",
+                DeprecationWarning, stacklevel=2)
+        scales = [scale if scale is not None else 1.0] * n
     parts = []
-    for _ in range(n):
+    for s in scales:
         nodes, lat = paper_cluster()
-        if scale != 1.0:
-            nodes = [DeviceNode(d.node_id, d.memory, d.performance * scale,
+        if s != 1.0:
+            nodes = [DeviceNode(d.node_id, d.memory, d.performance * s,
                                 d.name) for d in nodes]
         parts.append((nodes, lat))
     return parts
@@ -773,7 +803,29 @@ class ClusterSimResult:
         us = [s["utilization"] for s in self.replica_stats]
         return float(np.mean(us)) if us else 0.0
 
+    def attainment_by(self, attr: str) -> dict:
+        """Per-group SLO attainment over ALL offered requests, grouped by a
+        request tag (``"model"`` or ``"tier"``); shed requests count as
+        violations in their group, exactly like the scalar."""
+        offered: dict = {}
+        met: dict = {}
+        for r in self.requests:
+            key = getattr(r, attr, "") or "default"
+            offered[key] = offered.get(key, 0) + 1
+            if r.finish_time is not None and r.slo_met:
+                met[key] = met.get(key, 0) + 1
+        return {k: round(met.get(k, 0) / n, 4)
+                for k, n in sorted(offered.items())}
+
     def summary(self) -> dict:
+        out = self._summary_base()
+        if any(getattr(r, "model", "") for r in self.requests):
+            out["by_model"] = self.attainment_by("model")
+        if any(getattr(r, "tier", "") for r in self.requests):
+            out["by_tier"] = self.attainment_by("tier")
+        return out
+
+    def _summary_base(self) -> dict:
         return {
             "offered": len(self.requests),
             "finished": len(self.finished),
@@ -794,19 +846,23 @@ class ClusterSimResult:
         }
 
 
-def _call_price_factory(factory: Callable, lm, rid: int):
+def _call_price_factory(factory: Callable, lm, rid: int, model: str = ""):
     """Invoke a pricing-model factory with the arity it declares: legacy
     one-parameter factories get the replica's analytic model; two-parameter
-    factories also get the replica id (per-replica calibrated pricing)."""
+    factories also get the replica id (per-replica calibrated pricing);
+    three-parameter factories additionally get the replica's model tag
+    (per-model fleet-fallback pricing)."""
     try:
         params = [p for p in inspect.signature(factory).parameters.values()
                   if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD,
                                 p.VAR_POSITIONAL)]
-        two = any(p.kind == p.VAR_POSITIONAL for p in params) \
-            or len(params) >= 2
+        var = any(p.kind == p.VAR_POSITIONAL for p in params)
+        n = 3 if var or len(params) >= 3 else (2 if len(params) >= 2 else 1)
     except (TypeError, ValueError):     # builtins/partials w/o signature
-        two = False
-    return factory(lm, rid) if two else factory(lm)
+        n = 1
+    if n == 3:
+        return factory(lm, rid, model)
+    return factory(lm, rid) if n == 2 else factory(lm)
 
 
 def simulate_cluster(
@@ -819,6 +875,7 @@ def simulate_cluster(
     router="round_robin",
     autoscale=None,
     partitions=None,
+    pools=None,
     profiler: Optional[ResourceProfiler] = None,
     monitor: Optional[Monitor] = None,
     deploy: Callable = helr,
@@ -870,9 +927,22 @@ def simulate_cluster(
     ``capacity_rps`` (autoscaler) price through it, so SLO-gated
     decisions can run on a quantile-calibrated model while throughput
     projections stay on the mean ``price``.
+
+    ``pools`` turns the run into a heterogeneous multi-model fleet: a
+    sequence of ``ModelPoolSpec`` (model tag, config, initial replicas,
+    hardware lane, value weight) sharing one partition budget.  Requests
+    tagged ``r.model`` route only within their pool; an empty pool is a
+    typed fault (shed + counted, never a silent misroute).  ``autoscale``
+    then accepts a ``FleetAutoscalerConfig`` (*joint* allocation of the
+    shared budget by marginal SLO value, with model-swap as a scale
+    action priced at ``swap_delay``), or a ``{model: AutoscalerConfig}``
+    dict / single ``AutoscalerConfig`` (*independent* per-pool
+    controllers — the uncoordinated baseline).
     """
-    from repro.serving.cluster import (Autoscaler, Replica, Router,
-                                       RouterConfig)
+    from repro.serving.cluster import (Autoscaler, Fleet, FleetAutoscaler,
+                                       FleetAutoscalerConfig, ModelPoolSpec,
+                                       NoCompatiblePoolError, Replica,
+                                       Router, RouterConfig)
 
     tracer = tracer if tracer is not None else NULL_TRACER
     if isinstance(router, str):
@@ -883,50 +953,99 @@ def simulate_cluster(
         # the replicas' backlog projections must price queue drain at the
         # width the scheduler actually packs, or slo_aware over-sheds
         max_batch = sched_cfg.max_batch
-    max_replicas = autoscale.max_replicas if autoscale else n_replicas
-    if partitions is None:
-        partitions = replicated_cluster(max_replicas)
-    replicas: list = []
-    free_parts = list(range(len(partitions)))   # node partitions not in use
 
-    def spawn(now: float):
-        idx = len(replicas)
-        # take a *free* partition — a retired replica returns its nodes, so
-        # a respawn never double-books hardware a live replica still holds
-        pi = free_parts.pop(0) if free_parts else idx % len(partitions)
-        nodes, lat = partitions[pi]
-        rep = Replica(idx, model_cfg, nodes, lat, deploy=deploy,
+    multi = pools is not None
+    if multi:
+        specs = list(pools)
+        for s in specs:
+            s.resolve()
+    else:
+        specs = [ModelPoolSpec(model=model_cfg.name, cfg=model_cfg,
+                               replicas=max(1, n_replicas))]
+
+    scale_mode = "none"
+    if autoscale is not None:
+        if isinstance(autoscale, FleetAutoscalerConfig):
+            scale_mode = "joint"
+        elif isinstance(autoscale, dict):
+            scale_mode = "independent"
+        elif not multi:
+            scale_mode = "single"
+        else:
+            autoscale = {s.model: autoscale for s in specs}
+            scale_mode = "independent"
+
+    if partitions is None:
+        if scale_mode == "single":
+            partitions = replicated_cluster(autoscale.max_replicas)
+        elif scale_mode == "joint":
+            partitions = replicated_cluster(
+                max(autoscale.budget,
+                    sum(max(1, s.replicas) for s in specs)))
+        elif scale_mode == "independent":
+            partitions = replicated_cluster(
+                sum(c.max_replicas for c in autoscale.values()))
+        else:
+            partitions = replicated_cluster(
+                sum(max(1, s.replicas) for s in specs))
+
+    def factory(idx: int, spec, nodes, lat, now: float):
+        rep = Replica(idx, spec.cfg, nodes, lat, deploy=deploy,
                       model_mem=model_mem, max_batch=max_batch,
                       block_size=block_size, n_blocks=n_blocks,
                       prefix_cache=prefix_cache, chunk_tokens=chunk_tokens,
                       preempt=preempt, spec_tokens=spec_tokens,
                       spec_acceptance=spec_acceptance, spawned_at=now,
-                      tracer=tracer)
+                      tracer=tracer, model=spec.model, hw=spec.hw)
         if price is not None:
-            rep.price = _call_price_factory(price, rep.lm, idx)
+            rep.price = _call_price_factory(price, rep.lm, idx, spec.model)
         if tail_price is not None:
-            rep.tail = _call_price_factory(tail_price, rep.lm, idx)
-        rep.partition = pi
-        replicas.append(rep)
+            rep.tail = _call_price_factory(tail_price, rep.lm, idx,
+                                           spec.model)
         return rep
 
-    def retire(rep, now: float) -> None:
-        rep.retire(now)
-        free_parts.append(rep.partition)
+    fleet = Fleet(partitions, specs, factory)
+    replicas = fleet.replicas             # alias: Fleet mutates in place
 
-    for _ in range(max(1, n_replicas)):
-        spawn(0.0)
+    for spec in specs:
+        for _ in range(max(1, spec.replicas)):
+            fleet.spawn(spec.model, 0.0)
 
-    autoscaler = None
-    if autoscale is not None:
-        reqs_in = [r.input_len for r in requests] or [64]
-        reqs_out = [r.predicted_output_len or r.true_output_len
-                    for r in requests] or [64]
+    def _pool_means(model: Optional[str] = None):
+        rs = [r for r in requests
+              if model is None or getattr(r, "model", "") == model] \
+            or list(requests)
+        ins = [r.input_len for r in rs] or [64]
+        outs = [r.predicted_output_len or r.true_output_len
+                for r in rs] or [64]
+        return float(np.mean(ins)), float(np.mean(outs))
+
+    autoscaler = None                     # legacy single-pool controller
+    autoscalers: dict = {}                # independent: model -> Autoscaler
+    fleet_asc = None                      # joint fleet controller
+    tick_interval = None
+    if scale_mode == "single":
+        mean_in, mean_out = _pool_means()
         # capacity prices through replica 0's tail model: the mean belief
         # by default, the quantile-calibrated one when tail_price is set
-        autoscaler = Autoscaler(
-            autoscale, replicas[0].capacity_rps(float(np.mean(reqs_in)),
-                                                float(np.mean(reqs_out))))
+        autoscaler = Autoscaler(autoscale,
+                                replicas[0].capacity_rps(mean_in, mean_out))
+        tick_interval = autoscale.interval
+    elif scale_mode == "independent":
+        for spec in specs:
+            mean_in, mean_out = _pool_means(spec.model)
+            cap = fleet.pool(spec.model)[0].capacity_rps(mean_in, mean_out)
+            autoscalers[spec.model] = Autoscaler(autoscale[spec.model], cap)
+        tick_interval = min(c.interval for c in autoscale.values())
+    elif scale_mode == "joint":
+        caps = {}
+        for spec in specs:
+            mean_in, mean_out = _pool_means(spec.model)
+            caps[spec.model] = fleet.pool(spec.model)[0].capacity_rps(
+                mean_in, mean_out)
+        fleet_asc = FleetAutoscaler(autoscale, caps,
+                                    {s.model: s.weight for s in specs})
+        tick_interval = autoscale.interval
 
     heap: list = []
     seq = 0
@@ -939,13 +1058,15 @@ def simulate_cluster(
     reqs = sorted(requests, key=lambda r: r.arrival)
     for r in reqs:
         push(r.arrival, "arrive", r)
-    if autoscaler is not None:
-        push(autoscale.interval, "tick")
+    if tick_interval is not None:
+        push(tick_interval, "tick")
 
     shed: list[Request] = []
     arrivals_since_tick = 0
+    arrivals_by_model: dict = {}
     n_arrived = 0
     pending_spawns = 0
+    pending_by_model: dict = {}
     peak = sum(rep.accepting for rep in replicas)
     t_end = 0.0
 
@@ -958,44 +1079,83 @@ def simulate_cluster(
         return n_arrived < len(reqs) or pending_spawns > 0 or any(
             rep.queue or rep.inflight_blocks for rep in replicas)
 
+    def drop(r: Request, now: float) -> None:
+        shed.append(r)
+        if tracer.enabled:
+            tracer.instant("shed", now, track=0, row=ROW_QUEUE,
+                           args={"rid": r.rid})
+        if monitor is not None:
+            monitor.observe_shed(r)
+
     while heap:
         t, _, kind, obj = heapq.heappop(heap)
-        if kind in ("arrive", "done"):
+        if kind in ("arrive", "done", "forward"):
             # ticks/spawns trailing the last completion must not stretch
             # the makespan (it feeds replica-seconds and throughput)
             t_end = max(t_end, t)
         if kind == "arrive":
             n_arrived += 1
             arrivals_since_tick += 1
-            rep = router.dispatch(obj, replicas, t)
+            m = getattr(obj, "model", "")
+            if m:
+                arrivals_by_model[m] = arrivals_by_model.get(m, 0) + 1
+            mis0 = router.stats.misroutes
+            try:
+                rep = router.dispatch(obj, replicas, t)
+            except NoCompatiblePoolError:
+                rep = None                # typed cross-pool fault: shed
             if rep is None:
-                shed.append(obj)
-                if tracer.enabled:
-                    tracer.instant("shed", t, track=0, row=ROW_QUEUE,
-                                   args={"rid": obj.rid})
-                if monitor is not None:
-                    monitor.observe_shed(obj)
+                drop(obj, t)
             else:
                 if tracer.enabled:
                     tracer.instant("route", t, track=rep.rid,
                                    args={"rid": obj.rid,
                                          "policy": router.cfg.policy})
-                rep.enqueue(obj, t)
+                if router.stats.misroutes > mis0:
+                    # model-blind pick hit the wrong pool: the bounce into
+                    # the compatible pool pays a forward hop
+                    push(t + router.cfg.forward_delay, "forward",
+                         (rep, obj))
+                else:
+                    rep.enqueue(obj, t)
+                    maybe_start(rep, t)
+        elif kind == "forward":
+            rep, r = obj
+            if not rep.accepting:         # target drained mid-flight
+                try:
+                    rep = router.dispatch(r, replicas, t)
+                except NoCompatiblePoolError:
+                    rep = None
+            if rep is None:
+                drop(r, t)
+            else:
+                rep.enqueue(r, t)
                 maybe_start(rep, t)
         elif kind == "done":
             obj.finish_batch()
             if obj.queue:
                 maybe_start(obj, t)
             elif obj.draining:
-                retire(obj, t)
+                fleet.retire(obj, t)
         elif kind == "spawn":
             pending_spawns -= 1
+            m = obj if obj is not None else specs[0].model
+            if multi:
+                pending_by_model[m] = pending_by_model.get(m, 0) - 1
             if work_remains() or n_arrived < len(reqs):
-                spawn(t)
-        elif kind == "tick":
+                if multi and not fleet.free_parts:
+                    # swap partner has not retired yet (still draining its
+                    # batch): retry shortly, never double-book a partition
+                    pending_spawns += 1
+                    pending_by_model[m] = pending_by_model.get(m, 0) + 1
+                    push(t + 0.25, "spawn", m)
+                else:
+                    fleet.spawn(m, t)
+        elif kind == "tick" and scale_mode == "single":
             want = autoscaler.tick(t, arrivals_since_tick, replicas,
                                    pending_spawns)
             arrivals_since_tick = 0
+            arrivals_by_model = {}
             accepting = [rep for rep in replicas if rep.accepting]
             effective = len(accepting) + pending_spawns
             if want > effective:
@@ -1022,7 +1182,7 @@ def simulate_cluster(
                 for rep in victims[:len(accepting) - want]:
                     rep.draining = True
                     if rep.idle and rep.busy_until <= t:
-                        retire(rep, t)
+                        fleet.retire(rep, t)
                 if tracer.enabled:
                     tracer.instant("scale_down", t, track=0,
                                    args={"want": want,
@@ -1036,7 +1196,74 @@ def simulate_cluster(
                     [rep.utilization(t) for rep in alive])
             peak = max(peak, sum(rep.accepting for rep in replicas))
             if work_remains():
-                push(t + autoscale.interval, "tick")
+                push(t + tick_interval, "tick")
+        elif kind == "tick":
+            # fleet control step: per-pool targets from the joint or the
+            # independent controllers, then drain/spawn per pool — spawns
+            # paired with same-tick drains are model swaps (swap_delay)
+            if scale_mode == "independent":
+                targets = {m: asc.tick(t, arrivals_by_model.get(m, 0),
+                                       fleet.pool(m),
+                                       pending_by_model.get(m, 0))
+                           for m, asc in autoscalers.items()}
+            else:
+                targets = fleet_asc.tick(t, arrivals_by_model, replicas,
+                                         pending_by_model)
+            arrivals_since_tick = 0
+            arrivals_by_model = {}
+            drains_now = 0
+            spawn_orders: list[str] = []
+            for m, want in targets.items():
+                accepting_m = [rep for rep in fleet.pool(m)
+                               if rep.accepting]
+                effective = len(accepting_m) + pending_by_model.get(m, 0)
+                if want > effective:
+                    order = want - effective
+                    for rep in fleet.pool(m):
+                        if order <= 0:
+                            break
+                        if rep.draining and rep.retired_at is None:
+                            rep.draining = False
+                            order -= 1
+                    spawn_orders.extend([m] * order)
+                    if tracer.enabled:
+                        tracer.instant("scale_up", t, track=0,
+                                       args={"model": m, "want": want,
+                                             "have": effective})
+                    if monitor is not None:
+                        monitor.observe_scale(+1, want - effective)
+                elif want < len(accepting_m):
+                    victims = sorted(
+                        accepting_m,
+                        key=lambda rep: rep.projected_backlog(t))
+                    for rep in victims[:len(accepting_m) - want]:
+                        rep.draining = True
+                        drains_now += 1
+                        if rep.idle and rep.busy_until <= t:
+                            fleet.retire(rep, t)
+                    if tracer.enabled:
+                        tracer.instant("scale_down", t, track=0,
+                                       args={"model": m, "want": want,
+                                             "have": len(accepting_m)})
+                    if monitor is not None:
+                        monitor.observe_scale(-1, len(accepting_m) - want)
+            for i, m in enumerate(spawn_orders):
+                if scale_mode == "joint":
+                    delay = autoscale.swap_delay if i < drains_now \
+                        else autoscale.spawn_delay
+                else:
+                    delay = autoscale[m].spawn_delay
+                pending_spawns += 1
+                pending_by_model[m] = pending_by_model.get(m, 0) + 1
+                push(t + delay, "spawn", m)
+            if monitor is not None:
+                alive = fleet.accepting()
+                monitor.observe_replicas(
+                    [rep.queue_depth for rep in alive],
+                    [rep.utilization(t) for rep in alive])
+            peak = max(peak, sum(rep.accepting for rep in replicas))
+            if work_remains():
+                push(t + tick_interval, "tick")
         peak = max(peak, sum(rep.accepting for rep in replicas))
 
     makespan = max([t_end] + [r.finish_time for r in reqs
@@ -1058,8 +1285,18 @@ def simulate_cluster(
         s["utilization"] = round(rep.utilization(makespan), 4)
         s["alive_seconds"] = round(rep.alive_seconds(makespan), 2)
         s["dmap_path"] = rep.dmap.path
+        s["model"] = rep.model
+        s["hw_scale"] = rep.hw.scale
         rep_stats.append(s)
-    events = autoscaler.events if autoscaler is not None else []
+    if autoscaler is not None:
+        events = autoscaler.events
+    elif autoscalers:
+        events = sorted((e for asc in autoscalers.values()
+                         for e in asc.events), key=lambda e: e.time)
+    elif fleet_asc is not None:
+        events = fleet_asc.events
+    else:
+        events = []
     return ClusterSimResult(
         requests=reqs, shed=shed, makespan=makespan,
         replica_seconds=replica_seconds, peak_replicas=peak,

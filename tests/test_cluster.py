@@ -11,12 +11,16 @@ from repro.core import LengthPredictor, Monitor, ResourceProfiler, get_scheduler
 from repro.core.profiler import PredictorConfig
 from repro.core.scheduler import SchedulerConfig
 from repro.core.types import Request
-from repro.data.workload import (SharedPrefixConfig, WorkloadConfig,
+from repro.data.workload import (MixedWorkloadConfig, SharedPrefixConfig,
+                                 WorkloadConfig, gen_mixed_requests,
                                  gen_requests, gen_shared_prefix_requests)
 from repro.serving import simulate, simulate_cluster
-from repro.serving.cluster import (Autoscaler, AutoscalerConfig, Replica,
+from repro.serving.cluster import (Autoscaler, AutoscalerConfig,
+                                   FleetAutoscaler, FleetAutoscalerConfig,
+                                   HardwareProfile, ModelPoolSpec,
+                                   NoCompatiblePoolError, Replica,
                                    Router, RouterConfig)
-from repro.serving.simulator import paper_cluster
+from repro.serving.simulator import paper_cluster, replicated_cluster
 
 
 CFG = get_config("chatglm2-6b")
@@ -339,3 +343,192 @@ class TestUnifiedSLO:
         assert mon.stats.slo_observed == 1
         assert mon.stats.slo_violations == 1
         assert mon.stats.slo_attainment == 0.0
+
+
+# ------------------------------------------------------- model-aware routing
+
+class TestModelAwareRouter:
+    def test_empty_compatible_pool_typed_error(self):
+        reps = [_replica(0, model="a")]
+        router = Router(RouterConfig(policy="round_robin"))
+        r = _req(0)
+        r.model = "b"
+        with pytest.raises(NoCompatiblePoolError) as ei:
+            router.dispatch(r, reps, 0.0)
+        assert "b" in str(ei.value)
+        assert router.stats.pool_faults == 1
+
+    def test_round_robin_cursor_isolated_per_pool(self):
+        reps = [_replica(0, model="a"), _replica(1, model="a"),
+                _replica(2, model="b")]
+        router = Router(RouterConfig(policy="round_robin"))
+        picks = []
+        for i in range(4):
+            ra = _req(2 * i)
+            ra.model = "a"
+            rb = _req(2 * i + 1)
+            rb.model = "b"
+            picks.append(router.dispatch(ra, reps, 0.0).rid)
+            assert router.dispatch(rb, reps, 0.0).rid == 2
+        # interleaved pool-b arrivals must not perturb pool a's cycle
+        assert picks == [0, 1, 0, 1]
+
+    def test_single_replica_pool_sticky_across_scale_changes(self):
+        # a model-tagged conversation stays on its pool's only replica
+        # while the *other* pool churns: the rendezvous key is namespaced
+        # by model, so pool-b scale-up/down cannot re-home pool a
+        reps = [_replica(0, model="a")]
+        router = Router(RouterConfig(policy="prefix_affinity"))
+        toks = list(range(500, 596))
+
+        def req(i):
+            r = _req(i, tokens=list(toks))
+            r.model = "a"
+            return r
+
+        assert router.dispatch(req(0), reps, 0.0).rid == 0
+        reps = reps + [_replica(i, model="b") for i in (1, 2, 3)]
+        assert router.dispatch(req(1), reps, 0.0).rid == 0
+        reps = [reps[0], reps[1]]          # pool b scales back down
+        assert router.dispatch(req(2), reps, 0.0).rid == 0
+
+    def test_slo_aware_sheds_per_tier(self):
+        rep = _replica(0, model="a")
+        for i in range(40):
+            rep.enqueue(_req(i, out_len=64), 0.0)
+        router = Router(RouterConfig(policy="slo_aware", shed_slack=0.0))
+        tight = _req(100, slo=0.01)
+        tight.model, tight.tier = "a", "interactive"
+        loose = _req(101, slo=500.0)
+        loose.model, loose.tier = "a", "batch"
+        assert router.dispatch(tight, [rep], 0.0) is None
+        assert router.dispatch(loose, [rep], 0.0) is rep
+        assert router.stats.shed_by_tier == {"interactive": 1}
+        assert router.stats.shed == 1 and router.stats.dispatched == 1
+
+    def test_blind_round_robin_bounces_misroutes_into_pool(self):
+        reps = [_replica(0, model="a"), _replica(1, model="b")]
+        router = Router(RouterConfig(policy="round_robin",
+                                     model_aware=False))
+        for i in range(4):
+            r = _req(i)
+            r.model = "a"
+            assert router.dispatch(r, reps, 0.0).rid == 0
+        assert router.stats.misroutes > 0
+
+
+# ---------------------------------------------------------- joint allocator
+
+class TestFleetAutoscaler:
+    def test_capacity_must_be_positive(self):
+        with pytest.raises(ValueError):
+            FleetAutoscaler(FleetAutoscalerConfig(), {"a": 0.0})
+
+    def test_marginal_allocation_concentrates_on_demand(self):
+        fa = FleetAutoscaler(
+            FleetAutoscalerConfig(budget=4, min_per_pool=1,
+                                  target_util=0.75),
+            {"a": 1.0, "b": 1.0})
+        assert fa.desired_allocation({"a": 3.0, "b": 0.5}) \
+            == {"a": 3, "b": 1}
+
+    def test_weight_tilts_equal_demand(self):
+        fa = FleetAutoscaler(
+            FleetAutoscalerConfig(budget=3, min_per_pool=1,
+                                  target_util=0.75),
+            {"a": 1.0, "b": 1.0}, weights={"b": 5.0})
+        assert fa.desired_allocation({"a": 2.0, "b": 2.0}) \
+            == {"a": 1, "b": 2}
+
+    def test_dormant_pool_keeps_floor_then_loses_it(self):
+        cfg = FleetAutoscalerConfig(interval=1.0, budget=2, min_per_pool=1,
+                                    idle_patience=2, down_patience=1,
+                                    horizon=1.0)
+        fa = FleetAutoscaler(cfg, {"a": 1.0, "b": 1.0})
+        reps = [_replica(0, model="a"), _replica(1, model="b")]
+        t1 = fa.tick(0.0, {"a": 5, "b": 0}, reps)
+        assert t1["b"] >= 1            # idle streak 1 < patience: floor held
+        t2 = fa.tick(1.0, {"a": 5, "b": 0}, reps)
+        assert t2["b"] == 0            # dormant: floor reclaimed...
+        assert t2["a"] == 2            # ...and handed to the live bidder
+
+    def test_budget_conflict_forces_swap_drain(self):
+        cfg = FleetAutoscalerConfig(interval=1.0, budget=2, min_per_pool=1,
+                                    idle_patience=0, down_patience=10,
+                                    horizon=1.0)
+        fa = FleetAutoscaler(cfg, {"a": 1.0, "b": 1.0})
+        reps = [_replica(0, model="a"), _replica(1, model="b")]
+        targets = fa.tick(0.0, {"a": 6, "b": 0}, reps)
+        # b is held down by down_patience, but a's grow order exhausts the
+        # budget -> forced drain now, flagged as the model-swap action
+        assert targets == {"a": 2, "b": 0}
+        swaps = [e for e in fa.events if e.swap]
+        assert swaps and swaps[0].model == "b"
+
+
+# -------------------------------------------------------- mixed-fleet sim
+
+class TestFleetSim:
+    def _mixed(self, n=40, seed=2):
+        return gen_mixed_requests(MixedWorkloadConfig(
+            models=(("chatglm2-6b", 0.5), ("qwen2-1.5b", 0.5)),
+            tiers=(("interactive", 4.0, 12.0), ("batch", 20.0, 60.0)),
+            n_requests=n, arrival_rate=10.0, seed=seed))
+
+    def _pools(self):
+        return [ModelPoolSpec("chatglm2-6b", replicas=1),
+                ModelPoolSpec("qwen2-1.5b", replicas=1)]
+
+    def test_pools_smoke_accounts_by_model_and_tier(self):
+        res = simulate_cluster(self._mixed(), CFG, get_scheduler("slo-odbs"),
+                               SchedulerConfig(), pools=self._pools(),
+                               router="slo_aware")
+        s = res.summary()
+        assert len(res.finished) + len(res.shed) == 40
+        assert set(s["by_model"]) == {"chatglm2-6b", "qwen2-1.5b"}
+        assert s["by_tier"] and set(s["by_tier"]) <= {"interactive", "batch"}
+        for v in list(s["by_model"].values()) + list(s["by_tier"].values()):
+            assert 0.0 <= v <= 1.0
+
+    def test_blind_router_misroutes_are_forwarded_not_lost(self):
+        res = simulate_cluster(self._mixed(), CFG, get_scheduler("slo-odbs"),
+                               SchedulerConfig(), pools=self._pools(),
+                               router=RouterConfig(policy="round_robin",
+                                                   model_aware=False))
+        assert len(res.finished) + len(res.shed) == 40
+        assert res.summary()["router"].get("misroutes", 0) > 0
+        for r in res.finished:          # bounced, but served compatibly
+            assert r.model in ("chatglm2-6b", "qwen2-1.5b")
+
+    def test_joint_autoscaler_respects_budget(self):
+        res = simulate_cluster(
+            self._mixed(n=60), CFG, get_scheduler("slo-odbs"),
+            SchedulerConfig(), pools=self._pools(), router="least_loaded",
+            autoscale=FleetAutoscalerConfig(interval=1.0, budget=3,
+                                            min_per_pool=1,
+                                            spawn_delay=0.5))
+        assert len(res.finished) + len(res.shed) == 60
+        assert res.peak_replicas <= 3
+        assert res.scale_events
+
+    def test_replicated_cluster_profiles_heterogeneity(self):
+        parts = replicated_cluster(profiles=[1.0, {"scale": 0.5},
+                                             HardwareProfile(scale=0.25)])
+        base = parts[0][0][0].performance
+        assert parts[1][0][0].performance == pytest.approx(base * 0.5)
+        assert parts[2][0][0].performance == pytest.approx(base * 0.25)
+        with pytest.raises(ValueError):
+            replicated_cluster(2, profiles=[1.0])
+        with pytest.warns(DeprecationWarning):
+            legacy = replicated_cluster(2, scale=0.5)
+        assert legacy[0][0][0].performance == pytest.approx(base * 0.5)
+
+    def test_monitor_slo_by_key_segments(self):
+        pred = LengthPredictor(PredictorConfig(), seed=0)
+        mon = Monitor(ResourceProfiler(pred, CFG))
+        shed = _req(0)
+        shed.model, shed.tier = "m1", "interactive"
+        mon.observe_shed(shed)
+        by_key = mon.metrics()["slo_by_key"]
+        assert by_key["model:m1"]["violations"] == 1
+        assert by_key["tier:interactive"]["observed"] == 1

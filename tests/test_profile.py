@@ -351,17 +351,19 @@ def test_simulator_spans_feed_profiler_coverage():
 
 # ------------------------------------------------------------ metrics schema
 
-def test_metrics_schema_v4_profile_block():
+def test_metrics_schema_v5_profile_block():
     prof = CostProfiler()
     prof.observe_decode(0.01, batch=4, kv=128)
     p = metrics_payload("x", latency_s=1.0, profile=prof.metrics())
-    assert p["schema"] == 4
+    assert p["schema"] == 5
     assert validate_metrics(p) == []
     assert p["profile"]["coverage"]["decode"]["samples"] == 1
-    # a v3 payload (pre per-replica attribution) still validates
-    v3 = metrics_payload("x")
-    v3["schema"] = 3
-    assert validate_metrics(v3) == []
+    # v3 (pre per-replica attribution) and v4 (pre fleet blocks) payloads
+    # still validate
+    for old in (3, 4):
+        v = metrics_payload("x")
+        v["schema"] = old
+        assert validate_metrics(v) == []
     # a v2 payload (no profile block) no longer validates
     v2 = {k: v for k, v in metrics_payload("x").items() if k != "profile"}
     v2["schema"] = 2
@@ -543,6 +545,69 @@ def test_registry_v2_round_trip_per_replica_and_decay(tmp_path):
     c1 = CalibratedLatencyModel(lm, prof, replica=1, quantile=0.95)
     c2 = CalibratedLatencyModel(lm, back, replica=1, quantile=0.95)
     assert c1.prefill_time(2, 128) == c2.prefill_time(2, 128)
+
+
+def test_registry_v2_loads_as_single_model():
+    """A v2 registry (pre model scopes) loads with empty per-model
+    sub-profiles: model-scoped pricing falls back to the fleet aggregate,
+    and re-saving writes a v3 payload with the fleet/replica scopes
+    intact."""
+    lm = _lm()
+    src = CostProfiler(reference=lm)
+    p = lm.prefill_time(2, 128)
+    for _ in range(6):
+        src.observe_prefill(p * 1.5, batch=2, tokens=128, replica=1,
+                            model="chatglm2-6b")
+    v2 = {k: v for k, v in src.to_json().items()
+          if k not in ("models", "replica_models")}
+    v2["profile_version"] = 2
+    back = CostProfiler.from_json(json.loads(json.dumps(v2)), reference=lm)
+    assert back.model_profiles == {}
+    assert back.drift_by_model() == {}
+    # model-scoped lookups fall back through fleet evidence
+    cal = CalibratedLatencyModel(lm, back, model="chatglm2-6b")
+    assert cal.prefill_time(2, 128) == pytest.approx(1.5 * p)
+    # replica scopes survived the upgrade
+    assert back.prefill_cell(2, 128, replica=1).count == 6
+    regen = back.to_json()
+    assert regen["profile_version"] == 3
+    assert regen["models"] == {} and regen["replica_models"] == {}
+    assert regen["fleet"] == v2["fleet"]
+
+
+def test_per_model_scopes_and_calibration_chain():
+    """Spans carrying a ``model`` arg populate per-model sub-profiles; the
+    calibrated chain prefers model-pool evidence over the fleet aggregate
+    for a fresh (unprofiled) replica of that model, and the registry
+    round-trips the model scopes."""
+    lm = _lm()
+    prof = CostProfiler(reference=lm)
+    p = lm.prefill_time(2, 128)
+    # model A runs 2x slow on replica 0, model B runs true on replica 1:
+    # the fleet aggregate blends both, the pools stay separate
+    for _ in range(8):
+        prof.observe_prefill(p * 2.0, batch=2, tokens=128, replica=0,
+                             model="a")
+        prof.observe_prefill(p, batch=2, tokens=128, replica=1, model="b")
+    assert prof.prefill_cell(2, 128, model="a").ratio_ema \
+        == pytest.approx(2.0)
+    assert prof.prefill_cell(2, 128, model="b").ratio_ema \
+        == pytest.approx(1.0)
+    assert prof.prefill_cell(2, 128).ratio_ema == pytest.approx(1.5)
+    # a fresh replica (no sub-profile) of model "a" prices from a's pool
+    cal = CalibratedLatencyModel(lm, prof, replica=7, model="a")
+    assert cal.prefill_time(2, 128) == pytest.approx(2.0 * p)
+    assert CalibratedLatencyModel(lm, prof).prefill_time(2, 128) \
+        == pytest.approx(1.5 * p)
+    cov = prof.model_coverage()
+    assert cov["a"]["prefill"]["samples"] == 8
+    m = prof.metrics()
+    assert set(m["models"]) == {"a", "b"}
+    back = CostProfiler.from_json(
+        json.loads(json.dumps(prof.to_json())), reference=lm)
+    assert back.prefill_cell(2, 128, model="a").ratio_ema \
+        == pytest.approx(2.0)
+    assert json.dumps(back.to_json()) == json.dumps(prof.to_json())
 
 
 def test_v1_registry_loads_as_fleet_only():

@@ -110,3 +110,58 @@ class TestArrivalProcesses:
         gaps = np.diff([r.arrival for r in reqs])
         # bursty gaps mix two regimes: long quiet gaps + dense burst gaps
         assert np.max(gaps) > 20 * np.median(gaps)
+
+
+class TestMixedWorkload:
+    def test_seeded_determinism(self):
+        from repro.data.workload import MixedWorkloadConfig, gen_mixed_requests
+        cfg = MixedWorkloadConfig(n_requests=64, seed=7)
+        a = gen_mixed_requests(cfg)
+        b = gen_mixed_requests(cfg)
+        assert _fingerprint(a) == _fingerprint(b)
+        assert [r.model for r in a] == [r.model for r in b]
+        assert [r.tier for r in a] == [r.tier for r in b]
+        c = gen_mixed_requests(MixedWorkloadConfig(n_requests=64, seed=8))
+        assert _fingerprint(a) != _fingerprint(c)
+
+    def test_tags_and_tier_slos(self):
+        from repro.data.workload import MixedWorkloadConfig, gen_mixed_requests
+        cfg = MixedWorkloadConfig(
+            models=(("chatglm2-6b", 0.7), ("qwen2-1.5b", 0.3)),
+            tiers=(("interactive", 2.0, 10.0), ("batch", 30.0, 120.0)),
+            n_requests=300, seed=3)
+        reqs = gen_mixed_requests(cfg)
+        by_model = {m: 0 for m, _ in cfg.models}
+        bounds = {name: (lo, hi) for name, lo, hi in cfg.tiers}
+        for r in reqs:
+            by_model[r.model] += 1
+            lo, hi = bounds[r.tier]
+            assert lo <= r.slo <= hi
+        # the traffic mix is honored (0.7/0.3 within sampling noise)
+        assert by_model["chatglm2-6b"] > by_model["qwen2-1.5b"] * 1.5
+
+    def test_tier_weights_skew_per_model(self):
+        from repro.data.workload import MixedWorkloadConfig, gen_mixed_requests
+        reqs = gen_mixed_requests(MixedWorkloadConfig(
+            models=(("chatglm2-6b", 0.5), ("qwen2-1.5b", 0.5)),
+            tiers=(("interactive", 2.0, 10.0), ("batch", 30.0, 120.0)),
+            tier_weights={"chatglm2-6b": (1.0, 0.0),
+                          "qwen2-1.5b": (0.0, 1.0)},
+            n_requests=200, seed=4))
+        for r in reqs:
+            want = "interactive" if r.model == "chatglm2-6b" else "batch"
+            assert r.tier == want
+
+    def test_merge_streams_sorted_and_renumbered(self):
+        from repro.data.workload import (MixedWorkloadConfig,
+                                         gen_mixed_requests,
+                                         merge_request_streams)
+        a = gen_mixed_requests(MixedWorkloadConfig(n_requests=30, seed=1))
+        b = gen_mixed_requests(MixedWorkloadConfig(n_requests=30, seed=2,
+                                                   t0=5.0))
+        merged = merge_request_streams(a, b)
+        assert len(merged) == 60
+        arr = [r.arrival for r in merged]
+        assert arr == sorted(arr)
+        assert [r.rid for r in merged] == list(range(60))
+        assert min(r.arrival for r in b) >= 5.0
