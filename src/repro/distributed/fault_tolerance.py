@@ -3,18 +3,27 @@
 Pieces (all host-side control plane — the data plane stays pjit/shard_map):
 
 * ``HeartbeatTracker`` — per-node liveness from periodic heartbeats; a node
-  missing ``timeout`` seconds is declared failed.  In a real deployment the
-  heartbeats arrive over the cluster fabric; here they are injected by tests
-  and the simulator.
+  missing ``timeout`` seconds is declared failed.  **Wired into the serving
+  cluster**: ``simulate_cluster``'s fault mode beats it for live replicas
+  at every health scan and declares down whoever ages past ``timeout``
+  (= ``HealthConfig.detect_lag``); crashed and partitioned replicas stop
+  beating, so detection lag is a measured quantity, not an assumption.
 * ``ElasticTopology`` — the restart contract: on failure, compute the
   largest healthy mesh (whole multiples of the pod granularity), and map the
   job to it.  Together with CheckpointManager's elastic restore this gives
   checkpoint/restart with node loss: the re-sharding happens at restore
   (leaves are host-loaded and re-placed under the new mesh).
+  **Deprecated for serving**: the cluster layer recovers through
+  detection + retry/re-dispatch + autoscaler respawn
+  (``serving.cluster.faults``), not mesh re-planning; ElasticTopology
+  remains for the training/checkpoint restart path only.
 * ``StragglerMitigator`` — serving-side: tracks per-replica step latencies
   (EWMA); replicas slower than ``factor`` × the fleet median get drained
   (no new batches) and decode work is re-issued to backups — the paper's
-  latency-SLO goal under node degradation.  Training-side policy: drop the
+  latency-SLO goal under node degradation.  **Wired into the serving
+  cluster**: with ``HealthConfig.straggler_factor > 0`` the simulator
+  records each replica's measured/predicted batch-time ratio and drains
+  whoever ``mitigate()`` flags.  Training-side policy: drop the
   straggler from the DP group at the next step boundary (elastic rescale)
   rather than run the fleet at straggler speed.
 """

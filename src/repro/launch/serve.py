@@ -67,11 +67,12 @@ from repro.obs.calibrate import CalibratedLatencyModel
 from repro.obs.export import export_trace, metrics_payload, write_metrics
 from repro.obs.profile import CostProfiler
 from repro.obs.trace import NULL_TRACER, Tracer
-from repro.serving import (AutoscalerConfig, EngineConfig,
-                           FleetAutoscalerConfig, InferenceEngine,
-                           ModelPoolSpec, PagedEngine, PagedEngineConfig,
-                           Replica, Router, RouterConfig, get_drafter,
-                           paper_cluster, simulate_cluster)
+from repro.serving import (AutoscalerConfig, EngineConfig, FaultEvent,
+                           FaultPlan, FleetAutoscalerConfig, HealthConfig,
+                           InferenceEngine, ModelPoolSpec, PagedEngine,
+                           PagedEngineConfig, Replica, RetryConfig, Router,
+                           RouterConfig, get_drafter, paper_cluster,
+                           simulate_cluster)
 
 
 def _parse_model_mix(spec: str) -> list:
@@ -325,6 +326,23 @@ def _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models) -> None:
                                            quantile=args.pricing_quantile)
                 cal_models.append(m)
                 return m
+    faults = retry = health = None
+    if args.fault_crash or args.fault_mtbf > 0:
+        events = []
+        for spec in (args.fault_crash or "").split(","):
+            if not spec:
+                continue
+            ts, _, rid = spec.partition(":")
+            events.append(FaultEvent(t=float(ts), kind="crash",
+                                     rid=int(rid or 0)))
+        faults = FaultPlan(events=events, mtbf=args.fault_mtbf,
+                           mttr=args.fault_mttr, seed=args.fault_seed)
+        retry = RetryConfig(budget=args.retry_budget,
+                            backoff_base=args.retry_backoff)
+        tiers = tuple(t for t in (args.brownout_tiers or "").split(",") if t)
+        health = HealthConfig(check_interval=args.health_interval,
+                              detect_lag=args.detect_lag,
+                              brownout_tiers=tiers)
     res = simulate_cluster(
         reqs, full_cfg, get_scheduler(args.scheduler), sched_cfg,
         n_replicas=args.replicas, pools=pools, router=args.router,
@@ -333,7 +351,7 @@ def _serve_cluster_sim(args, prof, mon, tracer, cprof, cal_models) -> None:
         preempt=args.preempt, spec_tokens=args.spec_tokens,
         spec_acceptance=acc,
         profiler=prof, monitor=mon, tracer=tracer, price=price,
-        tail_price=tail_price)
+        tail_price=tail_price, faults=faults, retry=retry, health=health)
     print("cluster:", res.summary())
     for s in res.replica_stats:
         tag = f" model={s['model']}" if pools is not None else ""
@@ -408,6 +426,31 @@ def main():
     ap.add_argument("--autoscale", action="store_true",
                     help="forecast-driven elastic replica set (simulated "
                          "cluster; --replicas becomes the minimum)")
+    ap.add_argument("--fault-crash", default=None, metavar="T:RID[,T:RID]",
+                    help="inject scripted replica crashes into the cluster "
+                         "sim, e.g. '2.5:1' crashes replica 1 at t=2.5s "
+                         "(enables fault mode: health checks, retries)")
+    ap.add_argument("--fault-mtbf", type=float, default=0.0,
+                    help="seeded random faults: mean seconds between "
+                         "failures per replica lane (0 = scripted only)")
+    ap.add_argument("--fault-mttr", type=float, default=0.0,
+                    help="mean recovery time of recoverable random faults")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the random fault model")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="re-dispatches granted to a request lost with a "
+                         "failed replica before it counts as shed")
+    ap.add_argument("--retry-backoff", type=float, default=0.25,
+                    help="base seconds of the exponential retry backoff")
+    ap.add_argument("--detect-lag", type=float, default=1.0,
+                    help="seconds a silent replica stays routable before "
+                         "the health layer declares it down")
+    ap.add_argument("--health-interval", type=float, default=0.5,
+                    help="heartbeat/health-scan cadence in fault mode")
+    ap.add_argument("--brownout-tiers", default=None, metavar="T1[,T2]",
+                    help="SLO tiers shed in this order under detected "
+                         "capacity loss (graceful brownout), e.g. "
+                         "'batch,interactive'")
     ap.add_argument("--kv-budget", type=float, default=2e6,
                     help="paged KV pool budget in bytes (shared with SLO-ODBS)")
     ap.add_argument("--max-new", type=int, default=16)

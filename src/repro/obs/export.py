@@ -118,12 +118,14 @@ def event_names(obj: dict) -> set:
 
 # ------------------------------------------------------------- metrics JSON
 
-METRICS_SCHEMA_VERSION = 5
+METRICS_SCHEMA_VERSION = 6
 # oldest schema validate_metrics still accepts: v3->v4 only changed the
-# profile block (per-replica drift attribution, pricing coverage counters)
-# and v4->v5 adds the heterogeneous-fleet blocks (per-model/per-tier SLO
+# profile block (per-replica drift attribution, pricing coverage counters),
+# v4->v5 adds the heterogeneous-fleet blocks (per-model/per-tier SLO
 # attainment in the monitor, per-model coverage and drift in the profile),
-# so existing artifacts stay readable
+# and v5->v6 adds the monitor's ``faults`` block (replica failures by kind,
+# retry/dedup/brownout counters) — all additive, so existing artifacts
+# stay readable
 METRICS_SCHEMA_MIN = 3
 
 _METRIC_FIELDS = ("latency_s", "p99_latency_s", "throughput",
@@ -140,7 +142,8 @@ def metrics_payload(name: str, *, latency_s=None, p99_latency_s=None,
     (``--metrics-json``).  ``monitor`` carries ``Monitor.metrics()``
     verbatim — including the per-axis histogram quantile blocks — and is
     ``{}`` for harnesses that run without a monitor (schema v5: the
-    monitor block may carry ``slo_by_key`` per-model/per-tier attainment).
+    monitor block may carry ``slo_by_key`` per-model/per-tier attainment;
+    v6: also a ``faults`` block with failure/retry/brownout counters).
     ``profile`` carries ``CostProfiler.metrics()`` — coverage counters,
     residual quantiles, drift counts (v4: attributed per replica, plus
     optional ``pricing`` coverage counters from the run's calibrated

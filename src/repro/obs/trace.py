@@ -25,6 +25,9 @@ vocabulary* so a simulated run and a live run produce diffable timelines:
     route            | engine row          | router dispatch decision
     scale_up         | engine row          | autoscaler ordered replicas
     scale_down       | engine row          | autoscaler drained replicas
+    replica_failed   | engine row          | health layer detected a failure
+    retry            | queue row           | lost request re-dispatched
+    brownout         | engine row          | tier-shedding level changed
 
 Tracks map to replicas (Chrome-trace ``pid``) and rows to slots within a
 replica (``tid``): row 0 is the engine/iteration row, row 1 the queue row,
@@ -70,6 +73,7 @@ SPAN_NAMES = frozenset({
 INSTANT_NAMES = frozenset({
     "admitted", "admission_reject", "preempt", "cow_fork", "finish",
     "shed", "route", "scale_up", "scale_down", "profile_drift",
+    "replica_failed", "retry", "brownout",
 })
 EVENT_NAMES = SPAN_NAMES | INSTANT_NAMES
 

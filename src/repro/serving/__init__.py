@@ -9,10 +9,11 @@ from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,  # noqa: F401
 from repro.serving.speculative import (Drafter, ModelDrafter,  # noqa: F401
                                        NGramDrafter, get_drafter)
 from repro.serving.cluster import (Autoscaler, AutoscalerConfig,  # noqa: F401
-                                   Fleet, FleetAutoscaler,
-                                   FleetAutoscalerConfig, HardwareProfile,
+                                   FaultEvent, FaultPlan, Fleet,
+                                   FleetAutoscaler, FleetAutoscalerConfig,
+                                   HardwareProfile, HealthConfig,
                                    ModelPoolSpec, NoCompatiblePoolError,
-                                   Replica, Router, RouterConfig)
+                                   Replica, RetryConfig, Router, RouterConfig)
 from repro.serving.simulator import (ClusterSimResult,  # noqa: F401
                                      ContinuousSimResult, LatencyModel,
                                      SimResult, morphling_deploy_overhead,

@@ -1,10 +1,15 @@
 """Multi-replica cluster serving: SLO-aware routing + forecast-driven
 autoscaling over replicated engines — heterogeneous multi-model fleets
-included (per-model pools, joint placement/scaling).  The discrete-event
-driver lives in ``repro.serving.simulator.simulate_cluster``."""
+included (per-model pools, joint placement/scaling), plus fault tolerance
+(failure injection, health-checked routing, retry/re-dispatch, graceful
+brownout — ``faults``).  The discrete-event driver lives in
+``repro.serving.simulator.simulate_cluster``."""
 from repro.serving.cluster.autoscaler import (ArrivalForecaster,  # noqa: F401
                                               Autoscaler, AutoscalerConfig,
                                               ScaleEvent)
+from repro.serving.cluster.faults import (FAULT_KINDS,  # noqa: F401
+                                          FaultEvent, FaultPlan,
+                                          HealthConfig, RetryConfig)
 from repro.serving.cluster.fleet import (Fleet, FleetAutoscaler,  # noqa: F401
                                          FleetAutoscalerConfig,
                                          FleetScaleEvent, ModelPoolSpec)

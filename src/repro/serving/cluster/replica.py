@@ -27,6 +27,7 @@ will serve by prefill time (the cache can only have gained entries since).
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from dataclasses import dataclass
 from typing import Callable, Optional, Sequence
@@ -153,6 +154,18 @@ class Replica:
         # (one Perfetto process per replica); disabled tracer = no-op
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self._qstart: dict[int, float] = {}      # rid -> enqueue time
+        # --- fault tolerance (simulate_cluster fault mode) ---
+        # finalize requests at the 'done' event instead of batch start, so
+        # a crash can revert in-flight work without unwinding the monitor
+        self.defer_finalize = False
+        self.failed_at: Optional[float] = None   # ground truth: crash time
+        self.down = False                 # health-layer verdict (detected)
+        self.partitioned = False          # unreachable by the router
+        self.inflight_reqs: list[Request] = []   # retained when deferring
+        self._batch_t0 = 0.0              # running batch start / end, and
+        self._batch_t1 = 0.0              # its belief-priced service time
+        self._batch_pred_s = 0.0          # (straggler-ratio denominator)
+        self._base_lm = None              # healthy physics during degrade
 
     @property
     def tail(self):
@@ -167,7 +180,17 @@ class Replica:
     # ------------------------------------------------------------- liveness
     @property
     def accepting(self) -> bool:
-        return not self.draining and self.retired_at is None
+        """Routable: a *detected*-down or partitioned replica is excluded,
+        but a crashed-yet-undetected one still looks routable — silent
+        death is the point of the detection lag."""
+        return not self.draining and self.retired_at is None \
+            and not self.down and not self.partitioned
+
+    @property
+    def healthy(self) -> bool:
+        """Ground truth liveness: neither crashed nor declared down (the
+        health layer detects ``not healthy`` after its lag)."""
+        return self.failed_at is None and not self.down
 
     @property
     def idle(self) -> bool:
@@ -185,6 +208,19 @@ class Replica:
     @property
     def queue_depth(self) -> int:
         return len(self.queue)
+
+    @staticmethod
+    def _resume_prefix(r: Request) -> int:
+        """Tokens a retried request carries as recompute prefix (the PR-4
+        preempt-and-recompute mechanism lifted to the cluster level):
+        replayed through prefill, never re-emitted, so a retried request
+        stays token-identical to an unfailed run."""
+        return min(r.generated, max(0, r.true_output_len - 1))
+
+    @staticmethod
+    def _eff_out(r: Request) -> int:
+        """Output tokens still to decode (total minus recompute prefix)."""
+        return r.true_output_len - Replica._resume_prefix(r)
 
     def prefix_peek(self, tokens: list) -> int:
         """Longest cached-prompt match in tokens — no LRU touch, no insert."""
@@ -328,7 +364,8 @@ class Replica:
             self.tree.insert(r.tokens)
             if self.tree.n_nodes > self.max_tree_nodes:
                 self._prune_tree()
-        self._net_prefill[r.rid] = r.input_len - hit
+        # a retry's recompute prefix is prefill work on top of the prompt
+        self._net_prefill[r.rid] = r.input_len + self._resume_prefix(r) - hit
         self.stats.prefill_tokens_saved += hit
         self.stats.prefix_hit_requests += hit > 0
         self._qstart[r.rid] = now
@@ -356,18 +393,23 @@ class Replica:
         chosen = {id(r) for r in b.requests}
         self.queue = [r for b_ in batches for r in b_.requests
                       if id(r) not in chosen]
+        if self.defer_finalize:
+            # belief-priced service time of this batch, recorded before
+            # ``_net_prefill`` is consumed: the straggler mitigator's
+            # measured/predicted ratio denominator
+            self._batch_pred_s = self._chunk_time(b.requests)
         in_len = b.padded_input
         n = len(b)
         pre_len = max(max(1, self._net_prefill.get(r.rid, r.input_len))
                       for r in b.requests)
         t_pre = self.lm.prefill_time(n, pre_len)
         t_cursor = now + t_pre
-        remaining = sorted(b.requests, key=lambda r: r.true_output_len)
+        remaining = sorted(b.requests, key=self._eff_out)
         step_start = 0
         dec_steps = 0
         kv_wsum = 0.0
         for r in remaining:
-            steps = r.true_output_len - step_start
+            steps = self._eff_out(r) - step_start
             if steps > 0:
                 # speculation-aware like the projections, but *execution*
                 # runs on the physics model self.lm — a miscalibrated
@@ -377,7 +419,7 @@ class Replica:
                                                  lm=self.lm)
                 dec_steps += steps
                 kv_wsum += steps * kv_seg
-                step_start = r.true_output_len
+                step_start = self._eff_out(r)
             r.start_time = now
             r.first_token_time = now + t_pre
             r.finish_time = t_cursor
@@ -387,6 +429,9 @@ class Replica:
                 ttft_s=max(0.0, r.first_token_time - r.arrival),
                 decode_s=max(0.0, t_cursor - r.first_token_time),
                 e2e_s=r.latency or 0.0)
+            rp = self._resume_prefix(r)
+            if rp:
+                bd.recompute_s = t_pre * rp / (r.input_len + rp)
             r.breakdown = bd
             if self.tracer.enabled:
                 self.tracer.span("queued", min(q0, now), now,
@@ -394,10 +439,11 @@ class Replica:
                                  args={"rid": r.rid})
                 self.tracer.instant("admitted", now, track=self.rid,
                                     args={"rid": r.rid})
-                self.tracer.instant("finish", t_cursor, track=self.rid,
-                                    args={"rid": r.rid,
-                                          "slo_met": r.slo_met})
-            if monitor is not None:
+                if not self.defer_finalize:
+                    self.tracer.instant("finish", t_cursor, track=self.rid,
+                                        args={"rid": r.rid,
+                                              "slo_met": r.slo_met})
+            if monitor is not None and not self.defer_finalize:
                 monitor.observe(r)
         if self.tracer.enabled:
             from repro.core.scheduler import spec_speedup
@@ -420,26 +466,122 @@ class Replica:
                                    "model": self.model})
         st = self.stats
         st.batches += 1
-        st.served += n
-        st.busy_time += t_cursor - now
-        st.true_tokens += sum(r.true_output_len for r in b.requests)
         st.prefill_tokens += sum(
             max(1, self._net_prefill.pop(r.rid, r.input_len))
             for r in b.requests)
-        for r in b.requests:
-            if r.slo_met:
-                st.slo_met += 1
-            else:
-                st.slo_missed += 1
+        if self.defer_finalize:
+            # served/busy/SLO accounting waits for the 'done' event (or a
+            # crash), so lost work can be reverted without monitor unwind
+            self.inflight_reqs = list(b.requests)
+            self._batch_t0, self._batch_t1 = now, t_cursor
+        else:
+            st.served += n
+            st.busy_time += t_cursor - now
+            st.true_tokens += sum(self._eff_out(r) for r in b.requests)
+            for r in b.requests:
+                if r.slo_met:
+                    st.slo_met += 1
+                else:
+                    st.slo_missed += 1
         self.busy_until = t_cursor
         self.inflight_blocks = sum(self._blocks_for(r) for r in b.requests)
         self.inflight_slos = [r.slo for r in b.requests]
         return t_cursor
 
-    def finish_batch(self) -> None:
-        """The 'done' event: the in-flight batch's blocks return."""
+    def finish_batch(self) -> list[Request]:
+        """The 'done' event: the in-flight batch's blocks return.  In
+        defer-finalize (fault) mode the retained batch is handed back so
+        the event loop finalizes each request exactly once — the dedup
+        point against a partitioned replica's late finish."""
         self.inflight_blocks = 0
         self.inflight_slos = []
+        reqs = self.inflight_reqs
+        self.inflight_reqs = []
+        if reqs and self.defer_finalize:
+            self.stats.busy_time += max(0.0, self._batch_t1 - self._batch_t0)
+        return reqs
+
+    def finalize_request(self, r: Request, monitor=None) -> None:
+        """Deferred per-request completion accounting (fault mode): the
+        stats, finish instant, and monitor observation ``start_batch``
+        skipped when ``defer_finalize`` was set."""
+        st = self.stats
+        st.served += 1
+        st.true_tokens += self._eff_out(r)
+        if r.slo_met:
+            st.slo_met += 1
+        else:
+            st.slo_missed += 1
+        if self.tracer.enabled:
+            self.tracer.instant("finish", r.finish_time, track=self.rid,
+                                args={"rid": r.rid, "slo_met": r.slo_met})
+        if monitor is not None:
+            monitor.observe(r)
+
+    # ------------------------------------------------------------ fault path
+    def fail(self, now: float) -> tuple[list[Request], list[Request]]:
+        """Crash at ``now`` — silently: ``accepting`` stays True until the
+        health layer notices.  Returns ``(done, lost)``: requests whose
+        padded-batch completion already passed finished before the crash
+        and should be finalized normally; the rest carry their estimated
+        generated-so-far count in ``Request.generated`` (the retry's
+        recompute prefix, interpolated over the decode interval) with
+        stamps reset so the re-run replica stamps afresh.  Queued
+        (unstarted) work stays in ``self.queue`` for detection-time
+        reclaim — an undetected crash hides its backlog too."""
+        self.failed_at = now
+        done, lost = [], []
+        for r in self.inflight_reqs:
+            if r.finish_time is not None and r.finish_time <= now:
+                done.append(r)
+                continue
+            rp = self._resume_prefix(r)
+            eff = self._eff_out(r)
+            ftt, fin = r.first_token_time, r.finish_time
+            gen = 0
+            if ftt is not None and fin is not None and fin > ftt \
+                    and now > ftt:
+                gen = int(eff * (now - ftt) / (fin - ftt))
+            r.generated = rp + max(0, min(gen, eff - 1))
+            r.start_time = r.first_token_time = r.finish_time = None
+            r.breakdown = None
+            lost.append(r)
+        if self.inflight_reqs:
+            self.stats.busy_time += max(
+                0.0, min(now, self._batch_t1) - self._batch_t0)
+        self.inflight_reqs = []
+        self.inflight_blocks = 0
+        self.inflight_slos = []
+        self.busy_until = now
+        return done, lost
+
+    def take_queued(self) -> list[Request]:
+        """Reclaim unstarted queued work (crash/partition detection)."""
+        out = self.queue
+        self.queue = []
+        for r in out:
+            self._qstart.pop(r.rid, None)
+            self._net_prefill.pop(r.rid, None)
+        return out
+
+    def degrade(self, factor: float) -> None:
+        """Straggler injection: physics slow down by ``factor`` while the
+        pricing belief keeps the healthy model — exactly the gap the
+        per-replica calibration drift and the straggler mitigator must
+        attribute to this replica.  ``lm`` is *replaced*, never mutated
+        in place: ``price`` usually is the same object, and a belief that
+        slowed down with the physics would make the drift invisible."""
+        if self._base_lm is None:
+            self._base_lm = self.lm
+        base = self._base_lm
+        self.lm = dataclasses.replace(
+            base, efficiency=base.efficiency / factor,
+            hbm_bw=base.hbm_bw / factor)
+
+    def heal_degrade(self) -> None:
+        if self._base_lm is not None:
+            self.lm = self._base_lm
+            self._base_lm = None
 
     def retire(self, now: float) -> None:
         self.retired_at = now

@@ -26,8 +26,11 @@ All four policies are **model-aware**: a request tagged ``r.model`` is
 ranked only within its compatible pool (replicas serving that model), and
 affinity/rendezvous keys are namespaced by model so two pools' identical
 templates never collide.  A tagged request whose pool has no live replica
-raises ``NoCompatiblePoolError`` — a typed cross-pool fault the caller
-must handle (shed + count), never a silent misroute.  ``model_aware=False``
+is counted as a ``pool_fault`` and shed deterministically (``dispatch``
+returns None) — never a silent misroute, and never an exception out of
+the hot dispatch path: with failure injection an entire pool can be down
+between detection and respawn, and routing must degrade, not crash.
+``model_aware=False``
 is the ablation baseline: policies rank the whole fleet, and a pick that
 lands outside the compatible pool is counted as a **misroute** and bounced
 into the pool — the caller charges the forward hop (``forward_delay``).
@@ -181,16 +184,22 @@ class Router:
 
     def dispatch(self, r: Request, replicas: list[Replica],
                  now: float) -> Optional[Replica]:
-        """Select a replica for ``r`` (None = shed).  Draining / retired
-        replicas never receive new work.  Raises ``NoCompatiblePoolError``
-        when ``r`` is model-tagged and its pool has no live replica."""
+        """Select a replica for ``r`` (None = shed).  Draining / retired /
+        unhealthy replicas never receive new work.  A model-tagged request
+        whose pool has no live replica is a counted ``pool_fault`` and is
+        shed (None) — every policy degrades to the same deterministic
+        shed instead of raising, so a fleet mid-failure (all replicas of
+        one model down, not yet respawned) cannot crash the dispatch
+        path.  ``NoCompatiblePoolError`` remains exported for callers
+        that want to probe pool liveness themselves."""
         alive = [rep for rep in replicas if rep.accepting]
         model = getattr(r, "model", "")
         if model:
             pool = [rep for rep in alive if rep.model == model]
             if not pool:
                 self.stats.pool_faults += 1
-                raise NoCompatiblePoolError(model)
+                self._shed(r)
+                return None
         else:
             pool = alive
         if not alive:

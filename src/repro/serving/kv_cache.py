@@ -182,6 +182,47 @@ class BlockAllocator:
         return {"total": self.n_blocks, "free": len(self.free),
                 "used": self.used_blocks, "cached": len(self.cached)}
 
+    def check(self, expect_used: Optional[int] = None) -> list[str]:
+        """Leak audit: every physical block must be in exactly one of
+        {free, referenced, cached}, per-table reference counts must agree
+        with ``refcnt`` exactly, and no refcount may be non-positive.  With
+        ``expect_used`` the audit also pins the number of live blocks (an
+        engine that freed every slot should be down to its null block).
+        Returns human-readable violations (empty = clean) so abort/crash
+        paths can be gated on *proven* zero leakage, not absence of a
+        MemoryError."""
+        errs = []
+        free_set = set(self.free)
+        if len(free_set) != len(self.free):
+            errs.append("free list contains duplicate blocks")
+        referenced = set(self.refcnt)
+        for name, a, b in (("free/referenced", free_set, referenced),
+                           ("free/cached", free_set, self.cached),
+                           ("referenced/cached", referenced, self.cached)):
+            both = a & b
+            if both:
+                errs.append(f"blocks in both {name}: {sorted(both)}")
+        union = free_set | referenced | self.cached
+        missing = set(range(self.n_blocks)) - union
+        if missing:
+            errs.append(f"leaked blocks (in no set): {sorted(missing)}")
+        extra = union - set(range(self.n_blocks))
+        if extra:
+            errs.append(f"unknown block ids: {sorted(extra)}")
+        counts: dict[int, int] = {}
+        for seq, table in self.tables.items():
+            for b in table:
+                counts[b] = counts.get(b, 0) + 1
+        if counts != self.refcnt:
+            errs.append(f"refcnt {self.refcnt} != table-derived {counts}")
+        bad_rc = {b: rc for b, rc in self.refcnt.items() if rc <= 0}
+        if bad_rc:
+            errs.append(f"non-positive refcounts: {bad_rc}")
+        if expect_used is not None and len(self.refcnt) != expect_used:
+            errs.append(f"expected {expect_used} live blocks, "
+                        f"found {len(self.refcnt)}: {sorted(self.refcnt)}")
+        return errs
+
 
 class PagedKVCache:
     """One layer's paged K/V pool + the allocator bookkeeping."""

@@ -147,6 +147,12 @@ class PagedBatchResult(BatchResult):
     drafted_tokens: int = 0        # draft positions scored by verify passes
     accepted_tokens: int = 0       # drafts matching the target's greedy pick
     spec_rolled_blocks: int = 0    # rejected-tail blocks rolled back
+    # --- abort safety (fault tolerance) ---
+    aborted: int = 0               # requests aborted mid-flight
+    errors: dict = field(default_factory=dict)
+    #   rid -> error status ("aborted" / "engine-error"); aborted requests
+    #   keep their generated-so-far tokens in ``outputs`` — the recompute
+    #   prefix a retry elsewhere resumes from (``run_continuous(resume=)``)
 
     @property
     def p99_inter_token_s(self) -> float:
@@ -791,13 +797,57 @@ class PagedEngine:
                           "kv": float(np.mean(kv[decoding])),
                           "q_tokens": t_w})
 
+    # ------------------------------------------------------------- abort path
+    def _abort(self, st: PagedDecodeState, slot: int, r: Request,
+               outs: dict, res: PagedBatchResult) -> None:
+        """Mid-flight abort (injected crash / client cancel): free the
+        slot's blocks and prefix references, keep the generated-so-far
+        tokens in ``outputs`` (they are the recompute prefix a retry on
+        another engine resumes from), and mark the request errored — it
+        never reaches ``_finish``, so no finish time is stamped and the
+        monitor never counts it served."""
+        if self.drafter is not None:
+            self.drafter.release(slot)
+        st.free_slot(slot)
+        outs.setdefault(r.rid, [])
+        res.errors[r.rid] = "aborted"
+        res.aborted += 1
+        self._bd.pop(r.rid, None)
+        self._qstart.pop(r.rid, None)
+
+    def _sweep_aborts(self, st: PagedDecodeState, queue: list, outs: dict,
+                      res: PagedBatchResult, abort_at: dict) -> None:
+        """Trigger pending aborts: an active request aborts once it has
+        emitted ``abort_at[rid]`` tokens (0 = at admission, mid-prefill
+        included); a queued one with threshold <= 0 aborts unadmitted."""
+        for slot, r in enumerate(st.active):
+            if r is not None and r.rid in abort_at and \
+                    len(outs.get(r.rid, ())) >= abort_at[r.rid]:
+                self._abort(st, slot, r, outs, res)
+        for r in [q for q in queue if abort_at.get(q.rid, 1) <= 0]:
+            queue.remove(r)
+            outs.setdefault(r.rid, [])
+            res.errors[r.rid] = "aborted"
+            res.aborted += 1
+
     # ------------------------------------------------------------------ serve
     def run_continuous(self, requests: list, *,
-                       max_new: Optional[int] = None) -> PagedBatchResult:
+                       max_new: Optional[int] = None,
+                       abort_at: Optional[dict] = None,
+                       resume: Optional[dict] = None) -> PagedBatchResult:
         """Serve all requests with continuous batching: finished slots free
         their blocks and are refilled (subject to block backpressure) while
         the rest keep decoding.  Greedy; request i stops after
-        min(true_output_len, budget) generated tokens."""
+        min(true_output_len, budget) generated tokens.
+
+        ``abort_at`` maps rid -> generated-token count at which the request
+        is aborted mid-flight (fault injection / client cancel): its blocks
+        and prefix refs are freed, its partial output stays in ``outputs``,
+        and ``errors[rid] == "aborted"`` marks it failed.  ``resume`` maps
+        rid -> previously generated tokens (e.g. an aborted run's partial
+        output): admission replays them as a recompute prefix through the
+        preempt-and-recompute path, so a request crashed on one engine and
+        resumed on another stays token-identical to an unfailed run."""
         res = PagedBatchResult()
         budget = max_new or self.pcfg.max_new_tokens
         for r in requests:
@@ -817,6 +867,12 @@ class PagedEngine:
         st = PagedDecodeState.create(self.cfg, self.pcfg, self.dtype)
         queue = list(requests)
         outs: dict[int, list[int]] = {}
+        if resume:
+            # seed partial outputs so _begin_prefill replays them as a
+            # recompute prefix (prompt + gen[:-1], resume on gen[-1])
+            rids = {r.rid for r in requests}
+            outs.update({rid: list(toks) for rid, toks in resume.items()
+                         if rid in rids and toks})
         util_sum = waste_sum = 0.0
         util_n = 0
         peak_live = -1
@@ -834,6 +890,12 @@ class PagedEngine:
             self._admit(st, queue, outs, res, budget)
         steps = 0
         while True:
+            if abort_at:
+                # injected aborts fire before finishes: an abort threshold
+                # already reached must not race the stop count into _finish
+                self._sweep_aborts(st, queue, outs, res, abort_at)
+                if queue and any(a is None for a in st.active):
+                    self._admit(st, queue, outs, res, budget)
             # a) finish/admit fixpoint: retiring slots frees blocks which can
             #    admit new prompts, whose stop count may already be met by
             #    their prefill token (stop==1) — loop until stable so the
@@ -992,6 +1054,13 @@ class PagedEngine:
                               "kv": float(np.mean(kv[decoding])),
                               "q_tokens": 1})
         jax.block_until_ready(st.pools)
+        # leak audit: every slot was finished or aborted, so the allocator
+        # must be down to exactly the reserved null block — proven zero
+        # leakage even across abort/preempt/speculative-rollback paths
+        leaks = st.alloc.check(expect_used=1)
+        if leaks:
+            raise RuntimeError(
+                "KV block leak after serve: " + "; ".join(leaks))
         res.decode_s = time.perf_counter() - t_total - res.prefill_s
         res.steps = steps
         res.outputs = outs

@@ -17,6 +17,7 @@ makespan) — the simulator's analogue of nvidia-smi utilization.
 """
 from __future__ import annotations
 
+import copy
 import heapq
 import inspect
 import warnings
@@ -891,6 +892,9 @@ def simulate_cluster(
     tracer: Optional[Tracer] = None,
     price: Optional[Callable] = None,
     tail_price: Optional[Callable] = None,
+    faults=None,
+    retry=None,
+    health=None,
 ) -> ClusterSimResult:
     """Discrete-event simulation of a replicated cluster: arrivals are
     routed on landing (``router``: a policy name, RouterConfig, or Router),
@@ -938,13 +942,36 @@ def simulate_cluster(
     action priced at ``swap_delay``), or a ``{model: AutoscalerConfig}``
     dict / single ``AutoscalerConfig`` (*independent* per-pool
     controllers — the uncoordinated baseline).
+
+    ``faults`` arms failure injection (a ``cluster.faults.FaultPlan`` or a
+    plain list of ``FaultEvent``): replicas can crash (in-flight + queued
+    work lost, silently until detected), degrade (physics slow down while
+    the pricing belief stays healthy — per-replica calibration drift and
+    the straggler mitigator must notice), stall, or partition from the
+    router.  In fault mode a health layer (``health``: ``HealthConfig``)
+    heartbeats the fleet through ``distributed.fault_tolerance
+    .HeartbeatTracker`` and detects failures after ``detect_lag``; lost
+    requests are re-dispatched per ``retry`` (``RetryConfig``) carrying
+    their generated-so-far count as a recompute prefix, so a retried
+    request is token-identical to an unfailed run; late finishes of
+    partitioned-but-alive replicas dedup against the retry.  Detected
+    capacity loss sheds ``health.brownout_tiers`` in order (graceful
+    brownout) until respawns restore the fleet.
     """
     from repro.serving.cluster import (Autoscaler, Fleet, FleetAutoscaler,
                                        FleetAutoscalerConfig, ModelPoolSpec,
                                        NoCompatiblePoolError, Replica,
                                        Router, RouterConfig)
+    from repro.serving.cluster.faults import (FaultPlan, HealthConfig,
+                                              RetryConfig)
 
     tracer = tracer if tracer is not None else NULL_TRACER
+    fault_mode = faults is not None
+    if fault_mode:
+        if not isinstance(faults, FaultPlan):
+            faults = FaultPlan(events=list(faults))
+        retry = retry if retry is not None else RetryConfig()
+        health = health if health is not None else HealthConfig()
     if isinstance(router, str):
         router = Router(RouterConfig(policy=router))
     elif isinstance(router, RouterConfig):
@@ -997,6 +1024,7 @@ def simulate_cluster(
                       preempt=preempt, spec_tokens=spec_tokens,
                       spec_acceptance=spec_acceptance, spawned_at=now,
                       tracer=tracer, model=spec.model, hw=spec.hw)
+        rep.defer_finalize = fault_mode
         if price is not None:
             rep.price = _call_price_factory(price, rep.lm, idx, spec.model)
         if tail_price is not None:
@@ -1070,14 +1098,41 @@ def simulate_cluster(
     peak = sum(rep.accepting for rep in replicas)
     t_end = 0.0
 
+    # --- fault-mode state ---
+    hb = None
+    mitigator = None
+    lost_work: dict[int, list] = {}    # replica rid -> undetected lost work
+    retry_count: dict[int, int] = {}   # request rid -> retries spent
+    pending_retries = 0
+    finalized: set = set()             # request rids finalized exactly once
+    capacity_lost = 0                  # detected, not-yet-respawned losses
+    brownout_level = 0
+    if fault_mode:
+        from repro.distributed.fault_tolerance import (HeartbeatTracker,
+                                                       StragglerMitigator)
+        hb = HeartbeatTracker(timeout=health.detect_lag)
+        if health.straggler_factor > 0:
+            mitigator = StragglerMitigator(factor=health.straggler_factor)
+        horizon = (reqs[-1].arrival * 1.25 + 30.0) if reqs else 60.0
+        for fe in faults.materialize(len(replicas), horizon):
+            push(fe.t, "fault", fe)
+        push(health.check_interval, "health")
+
     def maybe_start(rep, now: float) -> None:
+        if rep.failed_at is not None:
+            return                     # a crashed replica starts nothing
         done = rep.start_batch(now, scheduler, sched_cfg, profiler, monitor)
         if done is not None:
             push(done, "done", rep)
 
     def work_remains() -> bool:
-        return n_arrived < len(reqs) or pending_spawns > 0 or any(
+        remains = n_arrived < len(reqs) or pending_spawns > 0 or any(
             rep.queue or rep.inflight_blocks for rep in replicas)
+        if fault_mode:
+            # undetected lost work keeps the health chain alive until the
+            # detector reclaims it; pending retries are still work too
+            remains = remains or pending_retries > 0 or bool(lost_work)
+        return remains
 
     def drop(r: Request, now: float) -> None:
         shed.append(r)
@@ -1087,9 +1142,73 @@ def simulate_cluster(
         if monitor is not None:
             monitor.observe_shed(r)
 
+    def route_request(r: Request, now: float) -> None:
+        """Dispatch (arrivals and retries share it): route, pay the
+        misroute forward hop if the blind pick bounced, enqueue + start."""
+        mis0 = router.stats.misroutes
+        try:
+            rep = router.dispatch(r, replicas, now)
+        except NoCompatiblePoolError:
+            rep = None                # typed cross-pool fault: shed
+        if rep is None:
+            drop(r, now)
+        else:
+            if tracer.enabled:
+                tracer.instant("route", now, track=rep.rid,
+                               args={"rid": r.rid,
+                                     "policy": router.cfg.policy})
+            if router.stats.misroutes > mis0:
+                # model-blind pick hit the wrong pool: the bounce into
+                # the compatible pool pays a forward hop
+                push(now + router.cfg.forward_delay, "forward", (rep, r))
+            else:
+                rep.enqueue(r, now)
+                maybe_start(rep, now)
+
+    def update_brownout(now: float) -> None:
+        nonlocal brownout_level
+        m = min(len(health.brownout_tiers), capacity_lost) \
+            if fault_mode else 0
+        if m != brownout_level:
+            if tracer.enabled:
+                tracer.instant(
+                    "brownout", now, track=0,
+                    args={"level": m,
+                          "tiers": list(health.brownout_tiers[:m])})
+            brownout_level = m
+
+    def requeue_lost(lost: list, now: float) -> None:
+        """Retry policy for requests lost to a crash/partition: dedup
+        against already-finalized finishes, spend the retry budget with
+        exponential backoff, shed past it."""
+        nonlocal pending_retries
+        for r in lost:
+            if r.rid in finalized:
+                if monitor is not None:
+                    monitor.observe_retry(deduped=True)
+                continue
+            attempt = retry_count.get(r.rid, 0)
+            if attempt >= retry.budget:
+                if monitor is not None:
+                    monitor.observe_retry(exhausted=True)
+                router._shed(r)
+                drop(r, now)
+                continue
+            retry_count[r.rid] = attempt + 1
+            delay = retry.backoff(attempt)
+            pending_retries += 1
+            if tracer.enabled:
+                tracer.instant("retry", now, track=0, row=ROW_QUEUE,
+                               args={"rid": r.rid, "attempt": attempt + 1,
+                                     "delay": round(delay, 4),
+                                     "resume_tokens": r.generated})
+            if monitor is not None:
+                monitor.observe_retry()
+            push(now + delay, "retry", r)
+
     while heap:
         t, _, kind, obj = heapq.heappop(heap)
-        if kind in ("arrive", "done", "forward"):
+        if kind in ("arrive", "done", "forward", "retry"):
             # ticks/spawns trailing the last completion must not stretch
             # the makespan (it feeds replica-seconds and throughput)
             t_end = max(t_end, t)
@@ -1099,26 +1218,17 @@ def simulate_cluster(
             m = getattr(obj, "model", "")
             if m:
                 arrivals_by_model[m] = arrivals_by_model.get(m, 0) + 1
-            mis0 = router.stats.misroutes
-            try:
-                rep = router.dispatch(obj, replicas, t)
-            except NoCompatiblePoolError:
-                rep = None                # typed cross-pool fault: shed
-            if rep is None:
+            if fault_mode and brownout_level > 0 and \
+                    getattr(obj, "tier", "") in \
+                    health.brownout_tiers[:brownout_level]:
+                # graceful brownout: detected capacity loss sheds the
+                # lowest-value tiers at admission, in configured order
+                router._shed(obj)
                 drop(obj, t)
+                if monitor is not None:
+                    monitor.observe_brownout()
             else:
-                if tracer.enabled:
-                    tracer.instant("route", t, track=rep.rid,
-                                   args={"rid": obj.rid,
-                                         "policy": router.cfg.policy})
-                if router.stats.misroutes > mis0:
-                    # model-blind pick hit the wrong pool: the bounce into
-                    # the compatible pool pays a forward hop
-                    push(t + router.cfg.forward_delay, "forward",
-                         (rep, obj))
-                else:
-                    rep.enqueue(obj, t)
-                    maybe_start(rep, t)
+                route_request(obj, t)
         elif kind == "forward":
             rep, r = obj
             if not rep.accepting:         # target drained mid-flight
@@ -1132,13 +1242,32 @@ def simulate_cluster(
                 rep.enqueue(r, t)
                 maybe_start(rep, t)
         elif kind == "done":
-            obj.finish_batch()
-            if obj.queue:
-                maybe_start(obj, t)
-            elif obj.draining:
-                fleet.retire(obj, t)
+            if fault_mode and obj.failed_at is not None:
+                pass          # stale completion event of a dead replica
+            else:
+                reqs_done = obj.finish_batch()
+                for r in reqs_done:
+                    if r.rid in finalized:
+                        # a partitioned replica finished work the cluster
+                        # already retried elsewhere: first finish wins
+                        if monitor is not None:
+                            monitor.observe_retry(deduped=True)
+                        continue
+                    finalized.add(r.rid)
+                    obj.finalize_request(r, monitor)
+                if mitigator is not None and reqs_done:
+                    mitigator.record(
+                        obj.rid, (obj._batch_t1 - obj._batch_t0)
+                        / max(obj._batch_pred_s, 1e-9))
+                if obj.queue:
+                    maybe_start(obj, t)
+                elif obj.draining:
+                    fleet.retire(obj, t)
         elif kind == "spawn":
             pending_spawns -= 1
+            if fault_mode and capacity_lost > 0:
+                capacity_lost -= 1     # respawn replaces detected loss
+                update_brownout(t)
             m = obj if obj is not None else specs[0].model
             if multi:
                 pending_by_model[m] = pending_by_model.get(m, 0) - 1
@@ -1151,6 +1280,126 @@ def simulate_cluster(
                     push(t + 0.25, "spawn", m)
                 else:
                     fleet.spawn(m, t)
+        elif kind == "fault":
+            ev = obj
+            rep = next((x for x in replicas if x.rid == ev.rid), None)
+            if rep is None or rep.retired_at is not None \
+                    or rep.failed_at is not None:
+                pass                   # fault on a lane already gone
+            elif ev.kind == "crash":
+                # silent death: inflight work past its finish stamp still
+                # counts (it left the replica before the crash), the rest
+                # is lost with the KV until the health layer notices
+                done_pre, lost = rep.fail(t)
+                for r in done_pre:
+                    if r.rid not in finalized:
+                        finalized.add(r.rid)
+                        rep.finalize_request(r, monitor)
+                lost_work.setdefault(rep.rid, []).extend(lost)
+            elif ev.kind == "degrade":
+                rep.degrade(ev.factor)
+                if ev.duration > 0:
+                    push(t + ev.duration, "heal", ("degrade", rep))
+            elif ev.kind == "stall":
+                rep.busy_until = max(rep.busy_until, t + ev.duration)
+                push(t + ev.duration, "heal", ("stall", rep))
+            elif ev.kind == "partition":
+                # unreachable, not dead: the router stops picking it but
+                # work already on board keeps running and may finish late
+                rep.partitioned = True
+                push(t + ev.duration, "heal", ("partition", rep))
+        elif kind == "heal":
+            what, rep = obj
+            if rep.retired_at is not None or rep.failed_at is not None:
+                pass
+            elif what == "degrade":
+                rep.heal_degrade()
+            elif what == "stall":
+                maybe_start(rep, t)
+            elif what == "partition":
+                if rep.down:
+                    # the detector declared it lost; rejoining restores
+                    # that capacity without waiting for a respawn
+                    capacity_lost = max(0, capacity_lost - 1)
+                rep.partitioned = False
+                rep.down = False
+                if hb is not None:
+                    hb.beat(rep.rid, now=t)
+                update_brownout(t)
+                if rep.queue:
+                    maybe_start(rep, t)
+        elif kind == "health":
+            # heartbeat scan: live replicas beat, silent ones age out
+            # after detect_lag and are declared down
+            for rep in replicas:
+                if rep.retired_at is None:
+                    hb.last_seen.setdefault(rep.rid, rep.spawned_at)
+                    if rep.failed_at is None and not rep.partitioned \
+                            and not rep.down:
+                        hb.beat(rep.rid, now=t)
+            down_now = set(hb.failed(now=t))
+            for rep in replicas:
+                if rep.rid not in down_now or rep.down:
+                    continue
+                if rep.retired_at is not None and rep.failed_at is None:
+                    continue   # clean scale-down: silence is expected
+                # a scale-down may have already retired a silently-failed
+                # replica (it looked idle); its lost work still needs the
+                # detector to reclaim it, but the capacity was given up
+                # deliberately so no respawn debt is recorded
+                rep.down = True
+                kind_f = "partition" if rep.partitioned else "crash"
+                if tracer.enabled:
+                    lag = (t - rep.failed_at
+                           if rep.failed_at is not None else None)
+                    tracer.instant(
+                        "replica_failed", t, track=rep.rid,
+                        args={"rid": rep.rid, "kind": kind_f,
+                              "detect_lag": lag})
+                if monitor is not None:
+                    monitor.observe_failure(rep.rid, kind_f)
+                if rep.retired_at is None:
+                    capacity_lost += 1
+                lost = lost_work.pop(rep.rid, []) + rep.take_queued()
+                if kind_f == "partition":
+                    # clone inflight work for re-dispatch: the original
+                    # may still land late, the finalized set dedups
+                    for r in rep.inflight_reqs:
+                        c = copy.copy(r)
+                        c.generated = 0
+                        c.first_token_time = None
+                        c.finish_time = None
+                        c.start_time = None
+                        c.breakdown = None
+                        lost.append(c)
+                elif rep.retired_at is None:
+                    fleet.retire(rep, t)
+                requeue_lost(lost, t)
+            update_brownout(t)
+            if mitigator is not None:
+                for srid in mitigator.mitigate():
+                    srep = next((x for x in replicas if x.rid == srid),
+                                None)
+                    if srep is not None and srep.accepting:
+                        srep.draining = True
+                        if tracer.enabled:
+                            tracer.instant(
+                                "replica_failed", t, track=srep.rid,
+                                args={"rid": srep.rid,
+                                      "kind": "straggler"})
+                        if monitor is not None:
+                            monitor.observe_failure(srep.rid, "straggler")
+            if work_remains():
+                push(t + health.check_interval, "health")
+        elif kind == "retry":
+            pending_retries -= 1
+            if obj.rid in finalized:
+                # the partitioned original landed while this retry waited
+                # out its backoff
+                if monitor is not None:
+                    monitor.observe_retry(deduped=True)
+            else:
+                route_request(obj, t)
         elif kind == "tick" and scale_mode == "single":
             want = autoscaler.tick(t, arrivals_since_tick, replicas,
                                    pending_spawns)

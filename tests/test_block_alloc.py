@@ -182,6 +182,31 @@ def test_truncate_noop_and_bounds():
     assert len(a.free) == 8
 
 
+def test_check_reports_leaks_and_refcount_skew():
+    """The allocator's own leak audit (BlockAllocator.check) must agree
+    with check_conservation on clean state and name each corruption class
+    — it is the end-of-run gate of the engine's abort/crash paths."""
+    a = BlockAllocator(8)
+    a.start_seq(0)
+    a.alloc(0, 3)
+    assert a.check() == []
+    assert a.check(expect_used=3) == []
+    assert any("expected 1 live blocks" in e for e in a.check(expect_used=1))
+    # leak: a block vanishes from the free list without an owner
+    leaked = a.free.pop()
+    assert any("leaked" in e for e in a.check())
+    a.free.append(leaked)
+    assert a.check() == []
+    # skew: refcount with no backing table reference
+    b0 = a.tables[0][0]
+    a.refcnt[b0] += 1
+    assert any("refcnt" in e for e in a.check())
+    a.refcnt[b0] -= 1
+    # double-ownership: same block free and referenced
+    a.free.append(b0)
+    assert any("free/referenced" in e for e in a.check())
+
+
 # Optional hypothesis-powered layer (mirrors test_scheduler's guard: the
 # deterministic walks above always run; this widens the seed space).
 try:

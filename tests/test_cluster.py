@@ -348,15 +348,21 @@ class TestUnifiedSLO:
 # ------------------------------------------------------- model-aware routing
 
 class TestModelAwareRouter:
-    def test_empty_compatible_pool_typed_error(self):
-        reps = [_replica(0, model="a")]
-        router = Router(RouterConfig(policy="round_robin"))
-        r = _req(0)
-        r.model = "b"
-        with pytest.raises(NoCompatiblePoolError) as ei:
-            router.dispatch(r, reps, 0.0)
-        assert "b" in str(ei.value)
-        assert router.stats.pool_faults == 1
+    def test_empty_compatible_pool_sheds_deterministically(self):
+        """A tagged request with no live pool must shed (None) and count a
+        pool_fault under every policy — never raise out of dispatch (a
+        whole pool can be down between failure detection and respawn)."""
+        from repro.serving.cluster.router import POLICIES
+        for policy in POLICIES:
+            reps = [_replica(0, model="a")]
+            router = Router(RouterConfig(policy=policy))
+            r = _req(0)
+            r.model = "b"
+            assert router.dispatch(r, reps, 0.0) is None
+            assert router.stats.pool_faults == 1
+            assert router.stats.shed == 1
+        # the typed error stays exported for callers probing pool liveness
+        assert issubclass(NoCompatiblePoolError, RuntimeError)
 
     def test_round_robin_cursor_isolated_per_pool(self):
         reps = [_replica(0, model="a"), _replica(1, model="a"),

@@ -1,0 +1,300 @@
+"""Fault-tolerant serving: failure injection, health-checked routing,
+retry/re-dispatch with recompute-prefix token identity, dedup of
+partitioned late finishes, graceful brownout, and the paged engine's
+abort/resume path.  Retry semantics are the core contract: a request
+crashed mid-decode and resumed elsewhere must emit exactly the token
+stream of an unfailed run."""
+import copy
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import LengthPredictor, Monitor, ResourceProfiler, get_scheduler
+from repro.core.profiler import PredictorConfig
+from repro.core.scheduler import SchedulerConfig
+from repro.data.workload import WorkloadConfig, gen_requests
+from repro.models import api
+from repro.serving import (FaultEvent, FaultPlan, HealthConfig, PagedEngine,
+                           PagedEngineConfig, RetryConfig, simulate_cluster)
+
+CFG = get_config("chatglm2-6b")
+
+
+def _workload(n=60, **kw):
+    base = dict(n_requests=n, arrival_rate=16.0, slo_lo=5.0, slo_hi=50.0,
+                seed=2)
+    base.update(kw)
+    return gen_requests(WorkloadConfig(**base))
+
+
+def _monitor():
+    return Monitor(ResourceProfiler(LengthPredictor(PredictorConfig(),
+                                                    seed=0), CFG),
+                   update_on_miss=False)
+
+
+def _run(reqs, *, monitor=None, n_replicas=3, **kw):
+    return simulate_cluster(reqs, CFG, get_scheduler("slo-odbs"),
+                            SchedulerConfig(), n_replicas=n_replicas,
+                            router="least_loaded", monitor=monitor, **kw)
+
+
+# ------------------------------------------------------------ fault plans
+
+class TestFaultPlan:
+    def test_scripted_events_validate(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t=1.0, kind="melt", rid=0)
+        with pytest.raises(ValueError):
+            FaultEvent(t=1.0, kind="stall", rid=0)          # no duration
+        with pytest.raises(ValueError):
+            FaultEvent(t=1.0, kind="degrade", rid=0, factor=0.5)
+
+    def test_materialize_deterministic_under_seed(self):
+        plan = FaultPlan(mtbf=3.0, mttr=1.0, seed=7,
+                         kinds=("stall", "crash"))
+        a = plan.materialize(4, horizon=30.0)
+        b = plan.materialize(4, horizon=30.0)
+        assert [(e.t, e.kind, e.rid) for e in a] == \
+            [(e.t, e.kind, e.rid) for e in b]
+        assert a, "mtbf=3 over 30s must draw events"
+        other = FaultPlan(mtbf=3.0, mttr=1.0, seed=8).materialize(4, 30.0)
+        assert [(e.t, e.rid) for e in a] != [(e.t, e.rid) for e in other]
+
+    def test_crash_ends_a_lane(self):
+        plan = FaultPlan(mtbf=1.0, seed=0, kinds=("crash",))
+        evs = plan.materialize(2, horizon=100.0)
+        assert len(evs) == 2           # one crash per lane, then silence
+
+    def test_backoff_deterministic_and_exponential(self):
+        r = RetryConfig(budget=3, backoff_base=0.25, backoff_mult=2.0)
+        assert [r.backoff(i) for i in range(3)] == [0.25, 0.5, 1.0]
+
+
+# ----------------------------------------------------- cluster fault mode
+
+class TestClusterFaults:
+    def test_crash_detected_retried_and_conserved(self):
+        mon = _monitor()
+        res = _run(_workload(), monitor=mon,
+                   faults=[FaultEvent(t=0.6, kind="crash", rid=1)],
+                   retry=RetryConfig(budget=2),
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.5))
+        # every request has exactly one fate; lost work was re-dispatched
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+        assert mon.stats.slo_observed == len(res.requests)
+        assert mon.stats.replica_failures == 1
+        assert mon.stats.failures_by_kind == {"crash": 1}
+        assert mon.stats.request_retries > 0
+        assert "faults" in mon.metrics()
+
+    def test_retry_budget_exhaustion_counts_as_shed(self):
+        mon = _monitor()
+        res = _run(_workload(), monitor=mon,
+                   faults=[FaultEvent(t=0.6, kind="crash", rid=1)],
+                   retry=RetryConfig(budget=0),
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.5))
+        assert len(res.shed) > 0
+        assert mon.stats.retries_exhausted == len(res.shed)
+        assert mon.stats.shed_requests == len(res.shed)
+        # conservation still holds: finished + shed covers the workload
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+
+    def test_retry_beats_no_retry(self):
+        reqs = _workload()
+        fault = [FaultEvent(t=0.6, kind="crash", rid=1)]
+        health = HealthConfig(check_interval=0.2, detect_lag=0.5)
+        no = _run([copy.deepcopy(r) for r in reqs], monitor=_monitor(),
+                  faults=copy.deepcopy(fault), retry=RetryConfig(budget=0),
+                  health=health)
+        yes = _run([copy.deepcopy(r) for r in reqs], monitor=_monitor(),
+                   faults=copy.deepcopy(fault), retry=RetryConfig(budget=2),
+                   health=health)
+        assert len(yes.finished) > len(no.finished)
+
+    def test_partition_late_finish_deduped(self):
+        mon = _monitor()
+        res = _run(_workload(), monitor=mon,
+                   faults=[FaultEvent(t=0.6, kind="partition", rid=1,
+                                      duration=4.0)],
+                   retry=RetryConfig(budget=2),
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.5))
+        assert mon.stats.failures_by_kind.get("partition") == 1
+        # the partitioned replica's inflight work was cloned for retry and
+        # whichever copy landed second was dropped — never double-counted
+        assert mon.stats.slo_observed == len(res.requests)
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+        if mon.stats.request_retries:
+            assert mon.stats.retries_deduped > 0
+
+    def test_stall_recovers_without_detection(self):
+        mon = _monitor()
+        res = _run(_workload(), monitor=mon,
+                   faults=[FaultEvent(t=0.6, kind="stall", rid=1,
+                                      duration=2.0)],
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.5))
+        # a stalled replica keeps heartbeating: no failure, no lost work
+        assert mon.stats.replica_failures == 0
+        assert len(res.finished) == len(res.requests)
+
+    def test_deterministic_under_seeded_faults(self):
+        reqs = _workload()
+        plan = FaultPlan(mtbf=4.0, mttr=1.0, seed=3,
+                         kinds=("stall", "crash"))
+        kw = dict(retry=RetryConfig(budget=2),
+                  health=HealthConfig(check_interval=0.2, detect_lag=0.5))
+        a = _run([copy.deepcopy(r) for r in reqs],
+                 faults=copy.deepcopy(plan), **kw)
+        b = _run([copy.deepcopy(r) for r in reqs],
+                 faults=copy.deepcopy(plan), **kw)
+        assert [(r.rid, r.finish_time) for r in a.requests] == \
+            [(r.rid, r.finish_time) for r in b.requests]
+        assert [r.rid for r in a.shed] == [r.rid for r in b.shed]
+
+    def test_brownout_sheds_tier_in_order(self):
+        mon = _monitor()
+        reqs = _workload(n=80)
+        for i, r in enumerate(reqs):
+            r.tier = "batch" if i % 2 else "interactive"
+        res = _run(reqs, monitor=mon,
+                   faults=[FaultEvent(t=0.3, kind="crash", rid=1)],
+                   retry=RetryConfig(budget=2),
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.4,
+                                       brownout_tiers=("batch",)))
+        assert mon.stats.brownout_sheds > 0
+        shed_tiers = {r.tier for r in res.shed}
+        assert "interactive" not in shed_tiers   # only the listed tier
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+
+    def test_straggler_drained_only_offender(self):
+        mon = _monitor()
+        res = _run(_workload(n=100, arrival_rate=12.0), monitor=mon,
+                   faults=[FaultEvent(t=0.3, kind="degrade", rid=2,
+                                      factor=8.0)],
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.5,
+                                       straggler_factor=2.0))
+        assert mon.stats.failures_by_kind.get("straggler") == 1
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+
+    def test_autoscaler_respawns_lost_capacity(self):
+        from repro.serving import AutoscalerConfig
+        res = _run(_workload(n=120, arrival_rate=12.0), monitor=_monitor(),
+                   n_replicas=2,
+                   faults=[FaultEvent(t=1.0, kind="crash", rid=0)],
+                   retry=RetryConfig(budget=2),
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.5),
+                   autoscale=AutoscalerConfig(interval=0.5, min_replicas=2,
+                                              max_replicas=4,
+                                              spawn_delay=0.5))
+        # a replacement was spawned after the crash was detected
+        assert any(e.direction == "up" for e in res.scale_events) or \
+            res.peak_replicas >= 2
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+
+    def test_scale_down_of_silently_crashed_replica_reclaims_lost_work(self):
+        """Regression: a silently-crashed replica looks idle (``fail``
+        clears its batch), so a same-tick scale-down can retire it BEFORE
+        heartbeat detection fires.  Detection must still reclaim its lost
+        work — the old skip-retired guard orphaned it and the run
+        livelocked (``work_remains`` never went false, the tick/health
+        chains reposted forever)."""
+        from repro.serving import AutoscalerConfig
+        reqs = gen_requests(WorkloadConfig(n_requests=120, arrival_rate=14.0,
+                                           slo_lo=6.0, slo_hi=50.0, seed=11))
+        mon = _monitor()
+        res = simulate_cluster(
+            reqs, CFG, get_scheduler("slo-odbs"), SchedulerConfig(),
+            n_replicas=3, router="slo_aware", monitor=mon,
+            autoscale=AutoscalerConfig(interval=0.5, min_replicas=3,
+                                       max_replicas=5, spawn_delay=0.5),
+            faults=[FaultEvent(t=2.0, kind="crash", rid=1)],
+            retry=RetryConfig(budget=2),
+            health=HealthConfig(check_interval=0.25, detect_lag=0.5))
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+        assert mon.stats.failures_by_kind == {"crash": 1}
+        assert mon.stats.request_retries > 0    # the orphaned work came back
+
+    def test_zero_healthy_fleet_sheds_not_raises(self):
+        """Crashing every replica with retry disabled must degrade to
+        sheds — never an exception out of the event loop."""
+        mon = _monitor()
+        res = _run(_workload(n=30), monitor=mon, n_replicas=2,
+                   faults=[FaultEvent(t=0.2, kind="crash", rid=0),
+                           FaultEvent(t=0.2, kind="crash", rid=1)],
+                   retry=RetryConfig(budget=1),
+                   health=HealthConfig(check_interval=0.2, detect_lag=0.4))
+        assert len(res.finished) + len(res.shed) == len(res.requests)
+        assert mon.stats.replica_failures == 2
+
+
+# ------------------------------------- engine abort/resume token identity
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    cfg = get_config("smollm-135m").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    base = dict(max_batch=4, block_size=8, n_blocks=64, max_seq_len=64,
+                max_new_tokens=12)
+    base.update(kw)
+    return PagedEngine(cfg, params, PagedEngineConfig(**base))
+
+
+def _engine_reqs(cfg, n=4, seed=5):
+    reqs = gen_requests(WorkloadConfig(n_requests=n, seed=seed,
+                                       vocab=cfg.vocab_size))
+    for r in reqs:
+        r.tokens = [t % cfg.vocab_size for t in r.tokens[:10]]
+        r.input_len = len(r.tokens)
+        r.true_output_len = min(r.true_output_len % 8 + 1, 8)
+    return reqs
+
+
+class TestEngineAbortResume:
+    @pytest.mark.parametrize("prefix_cache", [False, True])
+    def test_crash_resume_token_identical(self, engine_parts, prefix_cache):
+        """A request aborted mid-decode and resumed on a fresh engine (its
+        partial output carried as recompute prefix) emits exactly the
+        token stream of an unfailed run — with and without the prefix
+        cache in the resuming engine."""
+        cfg, params = engine_parts
+        ref = _engine(cfg, params).run_continuous(_engine_reqs(cfg))
+        victim = max(_engine_reqs(cfg), key=lambda r: r.true_output_len)
+        reqs = _engine_reqs(cfg)
+        res = _engine(cfg, params).run_continuous(
+            reqs, abort_at={victim.rid: 2})
+        assert res.errors == {victim.rid: "aborted"}
+        assert res.aborted == 1
+        partial = res.outputs[victim.rid]
+        assert partial == ref.outputs[victim.rid][:len(partial)]
+        for r in reqs:                     # bystanders unaffected
+            if r.rid != victim.rid:
+                assert res.outputs[r.rid] == ref.outputs[r.rid]
+        resumed = _engine(cfg, params,
+                          prefix_cache=prefix_cache).run_continuous(
+            [r for r in _engine_reqs(cfg) if r.rid == victim.rid],
+            resume={victim.rid: partial})
+        assert resumed.outputs[victim.rid] == ref.outputs[victim.rid]
+        assert not resumed.errors
+
+    def test_abort_frees_blocks_no_leak(self, engine_parts):
+        """run_continuous audits the allocator at end-of-run
+        (BlockAllocator.check, expect_used=1: only the null block) — an
+        abort that leaked blocks or prefix refs would raise here."""
+        cfg, params = engine_parts
+        reqs = _engine_reqs(cfg)
+        res = _engine(cfg, params, prefix_cache=True).run_continuous(
+            reqs, abort_at={reqs[0].rid: 1, reqs[-1].rid: 0})
+        assert res.aborted == 2
+
+    def test_abort_never_counts_as_finished(self, engine_parts):
+        cfg, params = engine_parts
+        reqs = _engine_reqs(cfg)
+        _engine(cfg, params).run_continuous(reqs,
+                                            abort_at={reqs[0].rid: 1})
+        assert reqs[0].finish_time is None

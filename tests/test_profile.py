@@ -351,16 +351,16 @@ def test_simulator_spans_feed_profiler_coverage():
 
 # ------------------------------------------------------------ metrics schema
 
-def test_metrics_schema_v5_profile_block():
+def test_metrics_schema_v6_profile_block():
     prof = CostProfiler()
     prof.observe_decode(0.01, batch=4, kv=128)
     p = metrics_payload("x", latency_s=1.0, profile=prof.metrics())
-    assert p["schema"] == 5
+    assert p["schema"] == 6
     assert validate_metrics(p) == []
     assert p["profile"]["coverage"]["decode"]["samples"] == 1
-    # v3 (pre per-replica attribution) and v4 (pre fleet blocks) payloads
-    # still validate
-    for old in (3, 4):
+    # v3 (pre per-replica attribution), v4 (pre fleet blocks), and v5
+    # (pre fault counters) payloads still validate
+    for old in (3, 4, 5):
         v = metrics_payload("x")
         v["schema"] = old
         assert validate_metrics(v) == []
